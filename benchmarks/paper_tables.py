@@ -1,0 +1,202 @@
+"""Benchmarks reproducing each paper table/figure on synthetic model-true data.
+
+Each function returns a list of CSV rows (name, us_per_call, derived...).
+Real ImageNet/COCO feature tensors are unavailable offline; features are
+drawn from the analytic models fitted to the paper's published sample
+statistics, so model-based numbers are exact reproductions and
+"measured" numbers are the synthetic-data analogue (see EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import CodecConfig, calibrate
+from repro.core.aciq import aciq_cmax, laplace_b_from_samples
+from repro.core.clipping import (e_total, empirical_e_total,
+                                 empirical_optimal_cmax, optimal_cmax,
+                                 optimal_range)
+from repro.core.distributions import (FeatureModel, resnet50_layer21_model,
+                                      yolov3_layer12_model)
+from repro.core.ecsq import design_ecsq
+from repro.core.rate_model import estimated_bits_np
+
+
+def _timed(fn, *args, reps=1, **kw):
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) / reps * 1e6
+
+
+def bench_table1() -> list[str]:
+    """Table I: model-based optimal clipping ranges per N + ACIQ."""
+    rows = []
+    models = {"resnet50": resnet50_layer21_model(),
+              "yolov3": yolov3_layer12_model()}
+    for name, m in models.items():
+        s = m.sample(100_000, np.random.default_rng(0))
+        b = laplace_b_from_samples(s)
+        for n in range(2, 9):
+            (cmax, us) = _timed(optimal_cmax, m, n)
+            lo, hi = optimal_range(m, n)
+            rows.append(f"table1_{name}_N{n},{us:.1f},"
+                        f"cmax_model={cmax:.3f},range=({lo:.3f},{hi:.3f}),"
+                        f"cmax_aciq={aciq_cmax(b, n):.3f},"
+                        f"cmax_empirical={empirical_optimal_cmax(s, n):.3f}")
+    return rows
+
+
+def bench_fig2_fig5_curves() -> list[str]:
+    """Figs. 2/5/6: analytic e_tot vs measured MSRE over the clip range."""
+    rows = []
+    m = resnet50_layer21_model()
+    s = m.sample(150_000, np.random.default_rng(1))
+    for n in (2, 4, 8):
+        worst = 0.0
+        for c in np.linspace(2.0, 16.0, 8):
+            analytic = e_total(m, 0.0, c, n)
+            measured = empirical_e_total(s, 0.0, c, n)
+            worst = max(worst, abs(analytic - measured) / measured)
+        (_, us) = _timed(e_total, m, 0.0, 9.0, n)
+        rows.append(f"fig5_etot_match_N{n},{us:.1f},max_rel_err={worst:.4f}")
+    return rows
+
+
+def bench_fig7_accuracy_proxy() -> list[str]:
+    """Fig. 7: inference fidelity vs N for the three clipping policies.
+
+    Fidelity proxy = SNR of reconstructed features + top-1 logits agreement
+    of a small random-projection head (ImageNet accuracy is unavailable
+    offline; see EXPERIMENTS.md for the mapping).
+    """
+    rows = []
+    m = resnet50_layer21_model()
+    rng = np.random.default_rng(2)
+    feats = m.sample(64 * 512, rng).astype(np.float32).reshape(64, 512)
+    head = rng.standard_normal((512, 100)).astype(np.float32) / 512 ** 0.5
+    ref_top1 = (feats @ head).argmax(-1)
+    for mode in ("model", "empirical", "aciq"):
+        for n in (2, 3, 4, 8):
+            codec = calibrate(CodecConfig(n_levels=n, clip_mode=mode),
+                              samples=feats)
+            t0 = time.perf_counter()
+            deq = np.asarray(codec.apply(feats))
+            us = (time.perf_counter() - t0) * 1e6
+            agree = float(((deq @ head).argmax(-1) == ref_top1).mean())
+            snr = 10 * np.log10(np.var(feats) / (np.var(feats - deq) + 1e-12))
+            rows.append(f"fig7_{mode}_N{n},{us:.1f},"
+                        f"top1_agree={agree:.4f},snr_db={snr:.2f},"
+                        f"cmax={codec.cmax:.3f}")
+    return rows
+
+
+def bench_fig8_rd_uniform() -> list[str]:
+    """Fig. 8: rate-distortion with uniform quantization + real CABAC."""
+    rows = []
+    m = resnet50_layer21_model()
+    feats = m.sample(60_000, np.random.default_rng(3)).astype(np.float32)
+    for n in (2, 3, 4, 6, 8):
+        codec = calibrate(CodecConfig(n_levels=n, clip_mode="model"),
+                          samples=feats)
+        t0 = time.perf_counter()
+        blob = codec.encode(feats)
+        us = (time.perf_counter() - t0) * 1e6
+        bpe = 8 * len(blob) / feats.size
+        deq = codec.decode(blob)
+        mse = float(np.mean((np.clip(feats, codec.cmin, codec.cmax) - deq) ** 2))
+        rows.append(f"fig8_rd_N{n},{us:.0f},bits_per_elem={bpe:.3f},"
+                    f"msre={mse:.4f}")
+    return rows
+
+
+def bench_fig9_10_ecsq() -> list[str]:
+    """Figs. 9-10: modified (pinned) vs conventional entropy-constrained
+    quantizer across the Lagrangian sweep."""
+    rows = []
+    m = resnet50_layer21_model()
+    feats = m.sample(50_000, np.random.default_rng(4)).astype(np.float32)
+    cmax = optimal_cmax(m, 4)
+    for lam in (0.01, 0.1, 0.5):
+        for pinned in (True, False):
+            (q, us) = _timed(design_ecsq, feats, 4, lam, 0.0, cmax,
+                             pin_boundaries=pinned)
+            idx = q.quantize_np(feats)
+            bpe = estimated_bits_np(idx, 4) / idx.size
+            deq = q.dequantize_np(idx)
+            mse = float(np.mean((np.clip(feats, 0, cmax) - deq) ** 2))
+            span = q.levels[-1] - q.levels[0]
+            rows.append(
+                f"fig9_ecsq_lam{lam}_{'pinned' if pinned else 'conv'},"
+                f"{us:.0f},bits_per_elem={bpe:.3f},msre={mse:.4f},"
+                f"span={span:.3f}")
+    return rows
+
+
+def bench_complexity() -> list[str]:
+    """Sec. III-E complexity comparison.
+
+    The paper's claim concerns the codec *front-end* (HEVC runs transforms
+    + RDO + intra search; the lightweight codec only clips and quantizes),
+    with the entropy stage shared.  We therefore time the two front-ends
+    separately from CABAC (whose Python implementation would otherwise
+    dominate both paths identically), and report the per-element op counts
+    the paper argues from: clip(2 cmp) + quant(1 add, 2 mul, 1 round) vs an
+    8x8 DCT's ~2x8x64/64 = 16 mul-adds/element before quantization.
+    """
+    rows = []
+    m = resnet50_layer21_model()
+    feats = m.sample(1 << 22, np.random.default_rng(5)).astype(np.float32)
+    codec = calibrate(CodecConfig(n_levels=4, clip_mode="model"),
+                      samples=feats[:100_000])
+
+    from repro.core.uniform import quantize_np
+    t0 = time.perf_counter()
+    idx = quantize_np(feats, codec.cmin, codec.cmax, 4)
+    t_light = time.perf_counter() - t0
+
+    from scipy.fft import dctn
+    img = feats.reshape(2048, 2048)
+    t0 = time.perf_counter()
+    blocks = img.reshape(256, 8, 256, 8).transpose(0, 2, 1, 3)
+    coefs = dctn(blocks, axes=(2, 3), norm="ortho")
+    _ = np.clip(np.round(coefs / 2.0), -128, 127).astype(np.int32)
+    t_dct = time.perf_counter() - t0
+
+    from repro.core.cabac import encode_indices
+    sub = idx.ravel()[:200_000]
+    t0 = time.perf_counter()
+    blob = encode_indices(sub, 4)
+    t_cabac = time.perf_counter() - t0
+
+    rows.append(f"complexity_frontend_lightweight,{t_light*1e6:.0f},"
+                f"throughput_Melem_s={feats.size/t_light/1e6:.1f},"
+                f"ops_per_elem=6")
+    rows.append(f"complexity_frontend_dct,{t_dct*1e6:.0f},"
+                f"throughput_Melem_s={feats.size/t_dct/1e6:.1f},"
+                f"ops_per_elem~34,frontend_speedup={t_dct/t_light:.2f}x")
+    rows.append(f"complexity_cabac_shared,{t_cabac*1e6:.0f},"
+                f"Melem_s={sub.size/t_cabac/1e6:.3f},"
+                f"bits_per_elem={8*len(blob)/sub.size:.3f}")
+    return rows
+
+
+def bench_stats_convergence() -> list[str]:
+    """Sec. III-E: mean/var estimates converge within a few hundred images."""
+    from repro.core.stats import RunningStats
+    m = resnet50_layer21_model()
+    rng = np.random.default_rng(6)
+    rs = RunningStats()
+    rows = []
+    target = optimal_cmax(m, 4)
+    for n_img in (10, 100, 1000):
+        while rs.count < n_img * 2048:
+            rs.update(m.sample(2048, rng))
+        fit = FeatureModel.fit(rs.mean, rs.var)
+        c = optimal_cmax(fit, 4)
+        rows.append(f"stats_convergence_{n_img}img,0,"
+                    f"cmax={c:.3f},target={target:.3f},"
+                    f"rel_err={abs(c-target)/target:.4f}")
+    return rows

@@ -1,0 +1,42 @@
+"""Roofline table benchmark: reads the dry-run artifacts and emits the
+per-(arch x shape x mesh) roofline rows (the EXPERIMENTS.md §Roofline
+source of truth)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def rows(mesh: str = "pod16x16", tag: str = "") -> list[str]:
+    out = []
+    suffix = f"_{mesh}{tag and '_' + tag}.json"
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*{suffix}"))):
+        r = json.load(open(f))
+        if r.get("tag", "baseline") != (tag or "baseline"):
+            continue
+        name = f"roofline_{r['arch']}_{r['shape']}_{mesh}"
+        if r["status"] == "skipped":
+            out.append(f"{name},0,skipped={r['reason'][:60]}")
+            continue
+        if r["status"] != "ok":
+            out.append(f"{name},0,error={r.get('error', '?')[:60]}")
+            continue
+        rl = r["roofline"]
+        mem = r.get("memory", {}).get("peak_bytes_est", 0) / 1e9
+        out.append(
+            f"{name},{r.get('compile_s', 0) * 1e6:.0f},"
+            f"compute_s={rl['compute_s']:.4f},memory_s={rl['memory_s']:.4f},"
+            f"collective_s={rl['collective_s']:.4f},bound={rl['bound']},"
+            f"mfu_bound={rl['mfu_bound']:.4f},"
+            f"model_flops_ratio={rl['model_flops_ratio']:.3f},"
+            f"peak_gb={mem:.1f}")
+    return out
+
+
+def bench_roofline() -> list[str]:
+    return rows("pod16x16") + rows("pod2x16x16")

@@ -1,0 +1,34 @@
+"""Benchmark harness: one section per paper table/figure + the roofline
+table from the dry-run artifacts.  Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [section ...]
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from . import paper_tables as P
+    from .roofline_table import bench_roofline
+
+    sections = {
+        "table1": P.bench_table1,
+        "fig5": P.bench_fig2_fig5_curves,
+        "fig7": P.bench_fig7_accuracy_proxy,
+        "fig8": P.bench_fig8_rd_uniform,
+        "fig9_10": P.bench_fig9_10_ecsq,
+        "complexity": P.bench_complexity,
+        "stats_convergence": P.bench_stats_convergence,
+        "roofline": bench_roofline,
+    }
+    picked = sys.argv[1:] or list(sections)
+    print("name,us_per_call,derived")
+    for name in picked:
+        for row in sections[name]():
+            print(row, flush=True)
+
+
+if __name__ == "__main__":
+    main()

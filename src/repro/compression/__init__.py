@@ -1,0 +1,5 @@
+from .grad_compression import (GradCompressionConfig, compress_grads,
+                               init_error_feedback, wire_bytes_ratio)
+
+__all__ = ["GradCompressionConfig", "compress_grads", "init_error_feedback",
+           "wire_bytes_ratio"]

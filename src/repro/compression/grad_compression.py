@@ -1,0 +1,66 @@
+"""Gradient compression with error feedback (beyond-paper application of the
+paper's quantizer to distributed training).
+
+Each gradient tensor is clipped to a model-derived range and quantized to
+N levels (paper eq. 1) before the data-parallel reduction; the residual
+(g - deq(q(g))) is carried in an error-feedback buffer and added back the
+next step, which keeps SGD/Adam convergence intact (Karimireddy et al.
+style EF).  Clipping ranges come from per-tensor moment estimates --
+gradients are roughly symmetric, so we use a symmetric range +/- c where
+c = clip_sigmas * std (the asymmetric-Laplace machinery applies when the
+distribution is skewed, e.g. for activation gradients).
+
+On real hardware the wire format is the packed uint8 index stream (4x
+smaller than f32); in this repo's simulation the quantize->dequantize
+happens before the psum so accuracy effects are exactly reproduced while
+the byte saving is documented analytically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..core import uniform
+
+
+@dataclasses.dataclass(frozen=True)
+class GradCompressionConfig:
+    n_levels: int = 16          # 4-bit gradients
+    clip_sigmas: float = 4.0
+    enabled: bool = True
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads(cfg: GradCompressionConfig, grads, ef_state):
+    """Returns (compressed grads, new ef_state, metrics)."""
+    if not cfg.enabled:
+        return grads, ef_state, {"grad_compress_mse": jnp.float32(0)}
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        std = jnp.std(gf) + 1e-12
+        c = cfg.clip_sigmas * std
+        deq = uniform.quantize_dequantize(gf, -c, c, cfg.n_levels)
+        new_e = gf - deq
+        return deq.astype(g.dtype), new_e
+
+    flat_g, tree = jax.tree.flatten(grads)
+    flat_e = tree.flatten_up_to(ef_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    cg = tree.unflatten([o[0] for o in out])
+    ne = tree.unflatten([o[1] for o in out])
+    mse = sum(jnp.mean(o[1] ** 2) for o in out) / max(len(out), 1)
+    return cg, ne, {"grad_compress_mse": mse}
+
+
+def wire_bytes_ratio(cfg: GradCompressionConfig) -> float:
+    """Analytic wire saving vs f32 all-reduce (packed index stream)."""
+    import math
+    bits = max(1, math.ceil(math.log2(cfg.n_levels)))
+    return bits / 32.0

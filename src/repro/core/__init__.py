@@ -1,0 +1,22 @@
+"""Core library: the paper's lightweight feature-compression technique.
+
+Modules:
+  distributions -- asymmetric-Laplace + leaky-ReLU analytic feature model
+  clipping      -- closed-form e_quant/e_clip and optimal clipping ranges
+  aciq          -- ACIQ comparison baseline (eq. 13)
+  uniform       -- pinned-boundary uniform quantizer (eq. 1)
+  ecsq          -- modified entropy-constrained quantizer design (Alg. 1)
+  binarization  -- truncated-unary bit planes
+  cabac         -- adaptive binary arithmetic codec (host, exact round trip)
+  rate_model    -- in-graph entropy rate estimation
+  stats         -- streaming calibration statistics
+  codec         -- FeatureCodec facade tying it all together
+"""
+
+from .codec import CodecConfig, FeatureCodec, calibrate
+from .distributions import FeatureModel, resnet50_layer21_model, yolov3_layer12_model
+
+__all__ = [
+    "CodecConfig", "FeatureCodec", "calibrate", "FeatureModel",
+    "resnet50_layer21_model", "yolov3_layer12_model",
+]

@@ -1,0 +1,155 @@
+"""Simplified CABAC: adaptive binary arithmetic coding with one context per
+TU bit position (paper Sec. III-D).
+
+Implementation is a carry-less binary range coder (Subbotin style) with an
+exponentially-adapting probability state per context -- functionally the
+same structure as the HEVC m-coder but without the LPS lookup tables.  The
+encoder/decoder pair round-trips bit-exactly; rates come out within a few
+percent of the adaptive-entropy bound.
+
+The coder runs on the host (it is inherently bit-serial; on a real edge
+deployment it runs on the device CPU next to the NN accelerator -- see
+DESIGN.md hardware-adaptation notes).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+_TOP = 1 << 24
+_BOT = 1 << 16
+_MASK = 0xFFFFFFFF
+_PROB_BITS = 16
+_PROB_ONE = 1 << _PROB_BITS
+_ADAPT_SHIFT = 5
+_P_MIN, _P_MAX = 64, _PROB_ONE - 64
+
+
+class _Context:
+    __slots__ = ("p1",)
+
+    def __init__(self) -> None:
+        self.p1 = _PROB_ONE // 2
+
+    def update(self, bit: int) -> None:
+        if bit:
+            self.p1 += (_PROB_ONE - self.p1) >> _ADAPT_SHIFT
+        else:
+            self.p1 -= self.p1 >> _ADAPT_SHIFT
+        self.p1 = min(max(self.p1, _P_MIN), _P_MAX)
+
+
+class BinaryArithmeticEncoder:
+    def __init__(self, n_contexts: int) -> None:
+        self.ctx = [_Context() for _ in range(n_contexts)]
+        self.low = 0
+        self.rng = _MASK
+        self.out = bytearray()
+
+    def _normalize(self) -> None:
+        while True:
+            if (self.low ^ (self.low + self.rng)) & _MASK < _TOP:
+                pass
+            elif self.rng < _BOT:
+                self.rng = (-self.low) & (_BOT - 1)
+            else:
+                break
+            self.out.append((self.low >> 24) & 0xFF)
+            self.low = (self.low << 8) & _MASK
+            self.rng = (self.rng << 8) & _MASK
+
+    def encode(self, bit: int, ctx_id: int) -> None:
+        c = self.ctx[ctx_id]
+        r1 = (self.rng >> _PROB_BITS) * c.p1
+        r1 = min(max(r1, 1), self.rng - 1)
+        if bit:
+            self.rng = r1
+        else:
+            self.low = (self.low + r1) & _MASK
+            self.rng -= r1
+        c.update(bit)
+        self._normalize()
+
+    def encode_plane(self, bits: np.ndarray, ctx_id: int) -> None:
+        for b in np.asarray(bits, dtype=np.uint8):
+            self.encode(int(b), ctx_id)
+
+    def finish(self) -> bytes:
+        for _ in range(4):
+            self.out.append((self.low >> 24) & 0xFF)
+            self.low = (self.low << 8) & _MASK
+        return bytes(self.out)
+
+
+class BinaryArithmeticDecoder:
+    def __init__(self, data: bytes, n_contexts: int) -> None:
+        self.ctx = [_Context() for _ in range(n_contexts)]
+        self.data = data
+        self.pos = 0
+        self.low = 0
+        self.rng = _MASK
+        self.code = 0
+        for _ in range(4):
+            self.code = ((self.code << 8) | self._byte()) & _MASK
+
+    def _byte(self) -> int:
+        b = self.data[self.pos] if self.pos < len(self.data) else 0
+        self.pos += 1
+        return b
+
+    def _normalize(self) -> None:
+        while True:
+            if (self.low ^ (self.low + self.rng)) & _MASK < _TOP:
+                pass
+            elif self.rng < _BOT:
+                self.rng = (-self.low) & (_BOT - 1)
+            else:
+                break
+            self.code = ((self.code << 8) | self._byte()) & _MASK
+            self.low = (self.low << 8) & _MASK
+            self.rng = (self.rng << 8) & _MASK
+
+    def decode(self, ctx_id: int) -> int:
+        c = self.ctx[ctx_id]
+        r1 = (self.rng >> _PROB_BITS) * c.p1
+        r1 = min(max(r1, 1), self.rng - 1)
+        if ((self.code - self.low) & _MASK) < r1:
+            bit = 1
+            self.rng = r1
+        else:
+            bit = 0
+            self.low = (self.low + r1) & _MASK
+            self.rng -= r1
+        c.update(bit)
+        self._normalize()
+        return bit
+
+    def decode_plane(self, n_bits: int, ctx_id: int) -> np.ndarray:
+        return np.fromiter((self.decode(ctx_id) for _ in range(n_bits)),
+                           dtype=np.uint8, count=n_bits)
+
+
+def encode_indices(idx: np.ndarray, n_levels: int) -> bytes:
+    """TU-binarize + CABAC-encode a flat index array (plane-major order)."""
+    from .binarization import index_to_context_bits
+    enc = BinaryArithmeticEncoder(n_contexts=max(n_levels - 1, 1))
+    for j, plane in enumerate(index_to_context_bits(idx, n_levels)):
+        enc.encode_plane(plane, j)
+    return enc.finish()
+
+
+def decode_indices(data: bytes, n_elems: int, n_levels: int) -> np.ndarray:
+    """Inverse of :func:`encode_indices`."""
+    dec = BinaryArithmeticDecoder(data, n_contexts=max(n_levels - 1, 1))
+    idx = np.zeros(n_elems, dtype=np.int32)
+    alive = np.ones(n_elems, dtype=bool)
+    for j in range(n_levels - 1):
+        n_alive = int(alive.sum())
+        if n_alive == 0:
+            break
+        bits = dec.decode_plane(n_alive, j)
+        cont = np.zeros(n_elems, dtype=bool)
+        cont[alive] = bits.astype(bool)
+        idx[cont] += 1
+        alive = cont
+    return idx

@@ -1,0 +1,67 @@
+"""In-graph (jnp) rate estimation for the lightweight codec.
+
+The adaptive arithmetic coder's rate converges to the per-context empirical
+entropy of the TU bit planes.  Given the histogram of quantizer indices we
+can compute that bound entirely inside a jitted program -- this is what the
+distributed runtime uses to account for inter-pod bandwidth without ever
+materializing a bitstream on-device.
+
+For context j (0 <= j < N-1):
+    total_j = #{n >= j}   bits coded in that context
+    ones_j  = #{n >  j}   of which are 1
+    bits_j  = total_j * H2(ones_j / total_j)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def index_histogram(idx, n_levels: int):
+    """Histogram of quantizer indices, differentiable-safe (int path)."""
+    one_hot = (idx[..., None] == jnp.arange(n_levels)).astype(jnp.int32)
+    return one_hot.reshape(-1, n_levels).sum(axis=0)
+
+
+def _binary_entropy(p):
+    # eps must be representable in float32 near 1.0 (1e-12 rounds to 1.0
+    # and yields 0 * log(0) = NaN); degenerate bins carry ~0 bits anyway
+    eps = 1e-6
+    p = jnp.clip(p, eps, 1.0 - eps)
+    return -(p * jnp.log2(p) + (1 - p) * jnp.log2(1 - p))
+
+
+def estimated_bits_from_hist(hist, n_levels: int):
+    """Entropy-coded size estimate (bits) from an index histogram."""
+    hist = hist.astype(jnp.float32)
+    # suffix sums: ge[j] = #{n >= j}, gt[j] = #{n > j}
+    rev_cum = jnp.cumsum(hist[::-1])[::-1]          # ge[j]
+    ge = rev_cum[: n_levels - 1]
+    gt = jnp.concatenate([rev_cum[1:], jnp.zeros((1,), hist.dtype)])[: n_levels - 1]
+    p1 = gt / jnp.maximum(ge, 1)
+    bits = ge * _binary_entropy(p1)
+    return jnp.sum(jnp.where(ge > 0, bits, 0.0))
+
+
+def estimated_bits_per_element(idx, n_levels: int):
+    hist = index_histogram(idx, n_levels)
+    n = jnp.maximum(idx.size, 1)
+    return estimated_bits_from_hist(hist, n_levels) / n
+
+
+def estimated_bits_np(idx: np.ndarray, n_levels: int) -> float:
+    """Host-side reference of the same estimate."""
+    idx = np.asarray(idx).ravel()
+    hist = np.bincount(idx, minlength=n_levels).astype(np.float64)
+    ge = np.cumsum(hist[::-1])[::-1]
+    total = 0.0
+    for j in range(n_levels - 1):
+        tot = ge[j]
+        if tot <= 0:
+            continue
+        ones = ge[j + 1] if j + 1 < n_levels else 0.0
+        p = ones / tot
+        if 0 < p < 1:
+            total += tot * (-(p * np.log2(p) + (1 - p) * np.log2(1 - p)))
+    return total

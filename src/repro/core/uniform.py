@@ -1,0 +1,59 @@
+"""Uniform N-level quantizer with pinned outer bins (paper eq. 1).
+
+    Q(x_clp) = round((x_clp - c_min) / (c_max - c_min) * (N - 1))
+
+with round-half-away-from-zero.  Values clipped to c_min / c_max incur no
+further quantization error (the outer reconstruction levels sit exactly on
+the clipping boundaries).  N need not be a power of two.
+
+These are the pure-jnp reference implementations; the Pallas fused kernel
+in ``repro.kernels`` must match them bit-exactly.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def quantize(x, cmin: float, cmax: float, n_levels: int):
+    """Clip + quantize to integer indices in [0, n_levels - 1] (int32)."""
+    xc = jnp.clip(x, cmin, cmax)
+    scale = (n_levels - 1) / (cmax - cmin)
+    # scaled value is >= 0, so round-half-away == floor(q + 0.5)
+    q = jnp.floor((xc - cmin) * scale + 0.5)
+    return q.astype(jnp.int32)
+
+
+def dequantize(idx, cmin: float, cmax: float, n_levels: int, dtype=jnp.float32):
+    delta = (cmax - cmin) / (n_levels - 1)
+    return (cmin + idx.astype(jnp.float32) * delta).astype(dtype)
+
+
+def quantize_dequantize(x, cmin: float, cmax: float, n_levels: int):
+    """Fake-quant: quantize then dequantize, preserving input dtype."""
+    return dequantize(quantize(x, cmin, cmax, n_levels), cmin, cmax, n_levels,
+                      dtype=x.dtype)
+
+
+def straight_through_quant(x, cmin: float, cmax: float, n_levels: int):
+    """y = qdq(x) in the forward pass; dy/dx = 1 on [cmin, cmax] else 0.
+
+    Used for optional compression-aware fine-tuning (the paper itself is
+    strictly post-training; this is an opt-in extension).
+    """
+    import jax
+    xc = jnp.clip(x, cmin, cmax)
+    y = quantize_dequantize(x, cmin, cmax, n_levels)
+    return xc + jax.lax.stop_gradient(y - xc)
+
+
+def quantize_np(x: np.ndarray, cmin: float, cmax: float, n_levels: int) -> np.ndarray:
+    xc = np.clip(np.asarray(x, dtype=np.float64), cmin, cmax)
+    q = np.floor((xc - cmin) / (cmax - cmin) * (n_levels - 1) + 0.5)
+    return q.astype(np.int32)
+
+
+def dequantize_np(idx: np.ndarray, cmin: float, cmax: float, n_levels: int) -> np.ndarray:
+    delta = (cmax - cmin) / (n_levels - 1)
+    return cmin + idx.astype(np.float64) * delta

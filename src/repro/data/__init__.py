@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, PrefetchingLoader, stream
+
+__all__ = ["DataConfig", "PrefetchingLoader", "stream"]

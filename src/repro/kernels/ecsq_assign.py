@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: non-uniform (ECSQ) quantization by decision thresholds.
+
+Deploy-time counterpart of Algorithm 1: given the designed decision
+thresholds t_1..t_{N-1} and reconstruction levels x_0..x_{N-1}, map each
+activation to its bin (index = #{t_i < x}) and its reconstruction value.
+N is small (<= 16), so the comparison/select loops are fully unrolled in
+VMEM -- no gather is needed (TPU-friendly: selects instead of dynamic
+indexing).
+
+Thresholds/levels arrive as a (1, 16)-padded VMEM block shared by every
+grid step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = (256, 512)
+MAX_LEVELS = 16
+
+
+def _kernel(x_ref, thr_ref, lvl_ref, idx_ref, deq_ref, *, n_levels: int,
+            cmin: float, cmax: float):
+    x = jnp.clip(x_ref[...].astype(jnp.float32), cmin, cmax)
+    idx = jnp.zeros(x.shape, jnp.int32)
+    for i in range(n_levels - 1):        # unrolled: N <= 16
+        # >= matches searchsorted(side='right'): ties go to the upper bin
+        idx += (x >= thr_ref[0, i]).astype(jnp.int32)
+    deq = jnp.full(x.shape, lvl_ref[0, 0], jnp.float32)
+    for i in range(1, n_levels):
+        deq = jnp.where(idx == i, lvl_ref[0, i], deq)
+    idx_ref[...] = idx
+    deq_ref[...] = deq.astype(deq_ref.dtype)
+
+
+def ecsq_assign_2d(x, thresholds, levels, cmin: float, cmax: float,
+                   block=DEFAULT_BLOCK, interpret: bool = False):
+    """x: (R, C) blocked-aligned; thresholds (N-1,), levels (N,)."""
+    n_levels = levels.shape[0]
+    if n_levels > MAX_LEVELS:
+        raise ValueError(f"n_levels {n_levels} > {MAX_LEVELS}")
+    r, c = x.shape
+    br, bc = min(block[0], r), min(block[1], c)
+    grid = (r // br, c // bc)
+    thr = jnp.full((1, MAX_LEVELS), jnp.inf, jnp.float32) \
+        .at[0, :n_levels - 1].set(thresholds.astype(jnp.float32))
+    lvl = jnp.zeros((1, MAX_LEVELS), jnp.float32) \
+        .at[0, :n_levels].set(levels.astype(jnp.float32))
+    return pl.pallas_call(
+        functools.partial(_kernel, n_levels=n_levels, cmin=cmin, cmax=cmax),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+                  pl.BlockSpec((1, MAX_LEVELS), lambda i, j: (0, 0)),
+                  pl.BlockSpec((1, MAX_LEVELS), lambda i, j: (0, 0))],
+        out_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+                   pl.BlockSpec((br, bc), lambda i, j: (i, j))],
+        out_shape=[jax.ShapeDtypeStruct((r, c), jnp.int32),
+                   jax.ShapeDtypeStruct((r, c), x.dtype)],
+        interpret=interpret,
+    )(x, thr, lvl)

@@ -1,0 +1,97 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+Handle arbitrary input shapes (pad + reshape to block-aligned 2-D views),
+and select interpret mode automatically on CPU (the kernels' TARGET is
+TPU; interpret=True executes the kernel body in Python for validation, as
+this container is CPU-only).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .ecsq_assign import ecsq_assign_2d
+from .fused_clip_quant import clip_quant_2d
+from .rate_hist import index_histogram_2d
+
+_LANE = 128
+_ROW = 8
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _to_2d(x, fill: float):
+    """Flatten + pad to a block-divisible (R, C) view. Returns (x2d, n_valid).
+
+    C is a power-of-two multiple of 128 (<= 1024) and R is rounded up to a
+    multiple of min(R, 256), so the (min(256,R), min(512,C)) block grids in
+    the wrappers always tile exactly (hypothesis found the n=513 case where
+    a 640-wide view left 128 columns outside the grid).
+    """
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    k = max(1, (n + _LANE - 1) // _LANE)
+    cols = _LANE * min(8, 1 << max(0, (k - 1).bit_length()))
+    rows = (n + cols - 1) // cols
+    align = _ROW if rows <= 256 else 256
+    rows = ((rows + align - 1) // align) * align
+    padded = jnp.full((rows * cols,), fill, x.dtype).at[:n].set(flat)
+    return padded.reshape(rows, cols), n
+
+
+@functools.partial(jax.jit, static_argnames=("cmin", "cmax", "n_levels",
+                                             "interpret"))
+def clip_quantize(x, *, cmin: float, cmax: float, n_levels: int,
+                  interpret: bool | None = None):
+    """Fused clip+quantize+dequantize. Returns (idx int32, dequantized)."""
+    interpret = _on_cpu() if interpret is None else interpret
+    x2d, n = _to_2d(x, cmin)
+    br = min(256, x2d.shape[0])
+    idx, deq = clip_quant_2d(x2d, cmin, cmax, n_levels,
+                             block=(br, min(512, x2d.shape[1])),
+                             interpret=interpret)
+    shape = x.shape
+    return (idx.reshape(-1)[:n].reshape(shape),
+            deq.reshape(-1)[:n].reshape(shape))
+
+
+@functools.partial(jax.jit, static_argnames=("cmin", "cmax", "interpret"))
+def ecsq_quantize(x, thresholds, levels, *, cmin: float, cmax: float,
+                  interpret: bool | None = None):
+    """Threshold-based non-uniform quantize + dequantize."""
+    interpret = _on_cpu() if interpret is None else interpret
+    x2d, n = _to_2d(x, cmin)
+    br = min(256, x2d.shape[0])
+    idx, deq = ecsq_assign_2d(x2d, thresholds, levels, cmin, cmax,
+                              block=(br, min(512, x2d.shape[1])),
+                              interpret=interpret)
+    shape = x.shape
+    return (idx.reshape(-1)[:n].reshape(shape),
+            deq.reshape(-1)[:n].reshape(shape))
+
+
+@functools.partial(jax.jit, static_argnames=("n_levels", "interpret"))
+def index_histogram(idx, *, n_levels: int, interpret: bool | None = None):
+    """Histogram of quantizer indices (padding assigned to bin 0, corrected)."""
+    interpret = _on_cpu() if interpret is None else interpret
+    idx2d, n = _to_2d(idx, 0)
+    br = min(256, idx2d.shape[0])
+    hist = index_histogram_2d(idx2d, n_levels,
+                              block=(br, min(512, idx2d.shape[1])),
+                              interpret=interpret)
+    pad = idx2d.size - n
+    return hist.at[0].add(-pad)
+
+
+def estimate_rate_bits(idx, n_levels: int) -> jax.Array:
+    """Bits/element the CABAC stage needs, from the kernel histogram."""
+    from ..core.rate_model import estimated_bits_from_hist
+    hist = index_histogram(idx, n_levels=n_levels)
+    return estimated_bits_from_hist(hist, n_levels) / idx.size

@@ -1,0 +1,50 @@
+"""Pallas TPU kernel: quantizer-index histogram for in-graph rate estimation.
+
+The entropy model (repro.core.rate_model) needs only the N-bin histogram
+of quantizer indices.  The kernel accumulates per-bin counts across the
+sequential TPU grid into a single (1, N) output block (same block mapped
+at every grid step; zero-initialized on the first step) -- the standard
+Pallas reduction-output pattern.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = (256, 512)
+MAX_LEVELS = 16
+
+
+def _kernel(idx_ref, hist_ref, *, n_levels: int):
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    idx = idx_ref[...]
+    for n in range(n_levels):            # unrolled: N <= 16
+        hist_ref[0, n] += jnp.sum((idx == n).astype(jnp.int32))
+
+
+def index_histogram_2d(idx, n_levels: int, block=DEFAULT_BLOCK,
+                       interpret: bool = False):
+    """idx: (R, C) int32, block-aligned. Returns (n_levels,) int32 counts."""
+    if n_levels > MAX_LEVELS:
+        raise ValueError(f"n_levels {n_levels} > {MAX_LEVELS}")
+    r, c = idx.shape
+    br, bc = min(block[0], r), min(block[1], c)
+    grid = (r // br, c // bc)
+    hist = pl.pallas_call(
+        functools.partial(_kernel, n_levels=n_levels),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, MAX_LEVELS), lambda i, j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, MAX_LEVELS), jnp.int32),
+        interpret=interpret,
+    )(idx)
+    return hist[0, :n_levels]

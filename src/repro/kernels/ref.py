@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness reference)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def clip_quant_ref(x, cmin: float, cmax: float, n_levels: int):
+    scale = (n_levels - 1) / (cmax - cmin)
+    inv_scale = (cmax - cmin) / (n_levels - 1)
+    xc = jnp.clip(x.astype(jnp.float32), cmin, cmax)
+    q = jnp.floor((xc - cmin) * scale + 0.5)
+    return q.astype(jnp.int32), (cmin + q * inv_scale).astype(x.dtype)
+
+
+def ecsq_assign_ref(x, thresholds, levels, cmin: float, cmax: float):
+    xc = jnp.clip(x.astype(jnp.float32), cmin, cmax)
+    idx = jnp.searchsorted(thresholds.astype(jnp.float32), xc,
+                           side="right").astype(jnp.int32)
+    return idx, levels.astype(jnp.float32)[idx].astype(x.dtype)
+
+
+def index_histogram_ref(idx, n_levels: int):
+    one_hot = (idx.reshape(-1)[:, None] ==
+               jnp.arange(n_levels)[None, :]).astype(jnp.int32)
+    return one_hot.sum(axis=0)

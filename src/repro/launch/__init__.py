@@ -1,0 +1,5 @@
+# NOTE: dryrun is intentionally NOT imported here -- it sets XLA_FLAGS for
+# 512 placeholder devices and must only run as __main__.
+from .mesh import dp_axes_of, make_production_mesh, make_smoke_mesh
+
+__all__ = ["dp_axes_of", "make_production_mesh", "make_smoke_mesh"]

@@ -1,0 +1,236 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: JAX locks the device count at first
+initialization, and the production meshes need 512 placeholder host
+devices.  Tests and benchmarks never import this module; they see 1 device.
+
+Usage:
+    python -m repro.launch.dryrun --arch gemma3-1b --shape train_4k
+    python -m repro.launch.dryrun --arch all --shape all [--multipod]
+Outputs one JSON per cell under experiments/dryrun/ plus the gzipped HLO
+for the roofline/perf analysis.
+"""
+
+import argparse
+import functools
+import gzip
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCHS, SHAPES, get_config
+from ..configs.base import InputShape, ModelConfig
+from ..launch import sharding as SH
+from ..launch.hlo_analysis import analyze
+from ..launch.mesh import dp_axes_of, make_production_mesh
+from ..launch.steps import make_decode_step, make_prefill_step, make_train_step
+from ..models import init_cache, init_params
+from ..models.context import DistContext
+from ..optim import init_opt_state
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+# TPU v5e hardware model (per chip)
+PEAK_FLOPS = 197e12     # bf16
+HBM_BW = 819e9          # bytes/s
+ICI_BW = 50e9           # bytes/s per link
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, mesh=None):
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train/prefill: {'tokens': (B,S) i32[, 'inputs': (B,S,d) bf16]}
+    decode:        {'token': (B,) i32, 'pos': scalar i32}
+    """
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if shape.kind == "decode":
+        return {"token": jax.ShapeDtypeStruct((b,), jnp.int32),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.input_mode == "embeddings":
+        specs["inputs"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)
+    return specs
+
+
+def _tree_sds(f, *args):
+    return jax.eval_shape(f, *args)
+
+
+def cell_applicable(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.long_context_ok:
+        return False, ("pure full-attention arch: 500k KV cache/quadratic "
+                       "prefill out of scope (see DESIGN.md)")
+    return True, ""
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             save_hlo: bool = True, overrides: dict | None = None,
+             tag: str = "", microbatches: int = 4,
+             kv_bits: int = 0) -> dict:
+    import dataclasses
+    cfg = get_config(arch)
+    if kv_bits:
+        cfg = dataclasses.replace(cfg, kv_quant_bits=kv_bits)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "tag": tag or "baseline", "microbatches": microbatches}
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_dev = mesh.size
+        ctx = DistContext(mesh, dp_axes_of(mesh))
+        key = jax.random.PRNGKey(0)
+        params_sds = _tree_sds(functools.partial(init_params, cfg), key)
+        p_sh = SH.param_shardings(cfg, mesh, params_sds)
+        batch_sds = input_specs(cfg, shape, mesh)
+
+        if shape.kind == "train":
+            opt_sds = _tree_sds(init_opt_state, params_sds)
+            o_sh = SH.opt_shardings(cfg, mesh, opt_sds)
+            b_sh = {k: SH.batch_sharding(mesh, v.shape)
+                    for k, v in batch_sds.items()}
+            step = make_train_step(cfg, ctx, microbatches=microbatches)
+            jf = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                         out_shardings=(p_sh, o_sh, None),
+                         donate_argnums=(0, 1))
+            lowered = jf.lower(params_sds, opt_sds, batch_sds)
+        elif shape.kind == "prefill":
+            cache_sds = _tree_sds(functools.partial(
+                init_cache, cfg, shape.global_batch, shape.seq_len))
+            c_sh = SH.cache_shardings(cfg, mesh, cache_sds)
+            b_sh = {k: SH.batch_sharding(mesh, v.shape)
+                    for k, v in batch_sds.items()}
+            step = make_prefill_step(cfg, ctx)
+            jf = jax.jit(step, in_shardings=(p_sh, b_sh, c_sh),
+                         out_shardings=(None, c_sh), donate_argnums=(2,))
+            lowered = jf.lower(params_sds, batch_sds, cache_sds)
+        else:  # decode
+            cache_sds = _tree_sds(functools.partial(
+                init_cache, cfg, shape.global_batch, shape.seq_len))
+            c_sh = SH.cache_shardings(cfg, mesh, cache_sds)
+            tok_sh = SH.batch_sharding(mesh, (shape.global_batch,))
+            step = make_decode_step(cfg, ctx)
+            jf = jax.jit(step, in_shardings=(p_sh, tok_sh, c_sh, None),
+                         out_shardings=(tok_sh, c_sh), donate_argnums=(2,))
+            lowered = jf.lower(params_sds, batch_sds["token"], cache_sds,
+                               batch_sds["pos"])
+        rec["lower_s"] = round(time.time() - t0, 2)
+
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+        # ---- memory ----
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory"] = {
+                "argument_bytes": int(ma.argument_size_in_bytes),
+                "output_bytes": int(ma.output_size_in_bytes),
+                "temp_bytes": int(ma.temp_size_in_bytes),
+                "alias_bytes": int(ma.alias_size_in_bytes),
+                "peak_bytes_est": int(ma.argument_size_in_bytes
+                                      + ma.output_size_in_bytes
+                                      + ma.temp_size_in_bytes
+                                      - ma.alias_size_in_bytes),
+            }
+        except Exception as e:  # pragma: no cover
+            rec["memory"] = {"error": str(e)}
+
+        # ---- XLA's own (loop-unaware) cost analysis, for cross-checking ----
+        try:
+            ca = compiled.cost_analysis()
+            rec["xla_cost"] = {"flops": float(ca.get("flops", -1)),
+                               "bytes_accessed": float(ca.get("bytes accessed", -1))}
+        except Exception as e:  # pragma: no cover
+            rec["xla_cost"] = {"error": str(e)}
+
+        # ---- loop-aware HLO analysis ----
+        hlo = compiled.as_text()
+        if save_hlo:
+            os.makedirs(OUT_DIR, exist_ok=True)
+            hpath = os.path.join(
+                OUT_DIR, f"{arch}_{shape_name}_{mesh_name}{tag and '_' + tag}.hlo.gz")
+            with gzip.open(hpath, "wt") as f:
+                f.write(hlo)
+            rec["hlo_path"] = hpath
+        st = analyze(hlo, n_dev)
+        rec["hlo"] = st.to_json()
+
+        # ---- roofline terms (per device; global numerators / chips) ----
+        tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+        n_active = cfg.active_param_count()
+        mf = (6 if shape.kind == "train" else 2) * n_active * tokens
+        rec["model_flops_global"] = float(mf)
+        flops_t = st.flops / PEAK_FLOPS
+        mem_t = st.traffic_bytes / HBM_BW
+        coll_t = st.total_collective_bytes / ICI_BW
+        dom = max((flops_t, "compute"), (mem_t, "memory"), (coll_t, "collective"))
+        rec["roofline"] = {
+            "compute_s": flops_t, "memory_s": mem_t, "collective_s": coll_t,
+            "bound": dom[1],
+            "step_time_lower_bound_s": max(flops_t, mem_t, coll_t),
+            "model_flops_ratio": mf / (st.flops * n_dev) if st.flops else 0.0,
+            "mfu_bound": (mf / n_dev / PEAK_FLOPS)
+            / max(flops_t, mem_t, coll_t) if max(flops_t, mem_t, coll_t) else 0.0,
+        }
+        rec["status"] = "ok"
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--no-hlo", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=4)
+    ap.add_argument("--kv-bits", type=int, default=0)
+    args = ap.parse_args()
+    archs = sorted(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    os.makedirs(OUT_DIR, exist_ok=True)
+    for a in archs:
+        for s in shapes:
+            mesh_name = "pod2x16x16" if args.multipod else "pod16x16"
+            fname = f"{a}_{s}_{mesh_name}{args.tag and '_' + args.tag}.json"
+            fpath = os.path.join(OUT_DIR, fname)
+            if os.path.exists(fpath):
+                print(f"[skip existing] {fname}", flush=True)
+                continue
+            print(f"[dryrun] {a} x {s} on {mesh_name} ...", flush=True)
+            rec = run_cell(a, s, multi_pod=args.multipod,
+                           save_hlo=not args.no_hlo, tag=args.tag,
+                           microbatches=args.microbatches,
+                           kv_bits=args.kv_bits)
+            with open(fpath, "w") as f:
+                json.dump(rec, f, indent=1)
+            status = rec["status"]
+            extra = rec.get("reason", rec.get("error", ""))[:120]
+            rl = rec.get("roofline", {})
+            print(f"  -> {status} ({rec.get('total_s', 0)}s) "
+                  f"bound={rl.get('bound', '-')} {extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,343 @@
+"""Loop-aware HLO cost analysis for the dry-run roofline.
+
+XLA's ``compiled.cost_analysis()`` visits each while-loop body ONCE, which
+undercounts scanned-layer models by ~num_layers x.  This module parses the
+post-optimization HLO text, multiplies while bodies by their
+``known_trip_count`` backend config, and produces:
+
+  * flops           -- dot/convolution FLOPs per device per step
+  * traffic_bytes   -- approximate HBM traffic (fusion-boundary operands +
+                       results; GTE/bitcast/tuple/constant excluded)
+  * collectives     -- per-op-type wire bytes per device, using ring-model
+                       factors: all-reduce 2(n-1)/n, all-gather/reduce-
+                       scatter/all-to-all (n-1)/n, collective-permute 1
+
+All numbers are per-device (the HLO module is the SPMD per-device program).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# the result type may be a large tuple containing /*index=N*/ comments, so
+# match the opcode as the first bare `word(` token after the `=`.
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?.*\{\s*$")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_NEW_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_OLD_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+_NO_TRAFFIC = {"get-tuple-element", "tuple", "bitcast", "parameter",
+               "constant", "after-all", "partition-id", "replica-id",
+               "opt-barrier", "copy-start", "copy-done"}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute", "ragged-all-to-all")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(type_str: str) -> tuple[list[int], str]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return [], "f32"
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return dims, m.group(1)
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list[Instr]
+    shapes: dict[str, str]  # instr/param name -> type string
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry_name = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            # computation defs are `[ENTRY] %name (sig) -> type {`; instruction
+            # lines have `=` before the first paren (signatures may contain
+            # `/*index=N*/` comments, so only inspect the head)
+            if m and "=" not in line.split("(", 1)[0]:
+                cur = Computation(m.group(2), [], {})
+                if m.group(1):
+                    entry_name = m.group(2)
+                # parameters in the signature carry shapes
+                sig = line[line.find("(") + 1: line.rfind("->")]
+                for pm in re.finditer(r"([\w\.\-]+):\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))", sig):
+                    cur.shapes[pm.group(1)] = pm.group(2)
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            ins = Instr(m.group(1), m.group(2).strip(), m.group(3), m.group(4))
+            cur.instrs.append(ins)
+            cur.shapes[ins.name] = ins.type_str
+    if cur is not None:
+        comps[cur.name] = cur
+    comps["__entry__"] = comps[entry_name] if entry_name else None
+    return comps
+
+
+def _operand_names(rest: str) -> list[str]:
+    # operands are %name references inside the first balanced paren group
+    depth = 1
+    out = []
+    buf = []
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        buf.append(ch)
+    args = "".join(buf)
+    for m in re.finditer(r"%([\w\.\-]+)", args):
+        out.append(m.group(1))
+    return out
+
+
+def _dot_flops(ins: Instr, shapes: dict[str, str]) -> float:
+    dims, _ = _shape_dims(ins.type_str)
+    out_elems = 1
+    for d in dims:
+        out_elems *= d
+    ops = _operand_names(ins.rest)
+    k = 1
+    if ops:
+        lhs_dims, _ = _shape_dims(shapes.get(ops[0], ""))
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+        if m and m.group(1):
+            for ci in m.group(1).split(","):
+                i = int(ci)
+                if i < len(lhs_dims):
+                    k *= lhs_dims[i]
+    return 2.0 * out_elems * k
+
+
+def _group_size(rest: str, default: int) -> int:
+    m = _GROUPS_NEW_RE.search(rest)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_OLD_RE.search(rest)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return default
+
+
+def _collective_wire_bytes(ins: Instr, shapes: dict[str, str],
+                           n_devices: int) -> tuple[str, float]:
+    op = next(c for c in COLLECTIVE_OPS if ins.opcode.startswith(c))
+    n = _group_size(ins.rest, n_devices)
+    out_b = _shape_bytes(ins.type_str)
+    in_b = sum(_shape_bytes(shapes.get(o, "")) for o in _operand_names(ins.rest))
+    frac = (n - 1) / n if n > 1 else 0.0
+    if op == "all-reduce":
+        return op, 2.0 * out_b * frac
+    if op == "all-gather":
+        return op, out_b * frac
+    if op == "reduce-scatter":
+        return op, in_b * frac
+    if op in ("all-to-all", "ragged-all-to-all"):
+        return op, out_b * frac
+    return op, out_b  # collective-permute
+
+
+_PARAM_IDX_RE = re.compile(r"^(\d+)\)?")
+
+
+def _fusion_traffic(ins: Instr, caller_shapes: dict[str, str],
+                    comps: dict[str, "Computation"]) -> float:
+    """HBM traffic of a fusion: output + operands, but operands that are
+    only dynamic-sliced (or in-place dynamic-update-sliced) inside the
+    fusion count at the slice size, not the full array -- otherwise
+    scan-sliced stacked parameters/xs are overcounted by the trip count."""
+    out_b = _shape_bytes(ins.type_str)
+    ops = _operand_names(ins.rest)
+    cm = _CALLS_RE.search(ins.rest)
+    fc = comps.get(cm.group(1)) if cm else None
+    if fc is None:
+        return out_b + sum(_shape_bytes(caller_shapes.get(o, "")) for o in ops)
+
+    param_arg: dict[str, int] = {}
+    for fi in fc.instrs:
+        if fi.opcode == "parameter":
+            m = _PARAM_IDX_RE.match(fi.rest)
+            if m:
+                param_arg[fi.name] = int(m.group(1))
+    sliced_bytes: dict[int, float] = {}
+    full_use: set[int] = set()
+    root_name = fc.instrs[-1].name if fc.instrs else None
+    root_dus_update = None
+    for fi in fc.instrs:
+        if fi.opcode == "parameter":
+            continue
+        f_ops = _operand_names(fi.rest)
+        for pos, on in enumerate(f_ops):
+            if on not in param_arg:
+                continue
+            ai = param_arg[on]
+            if fi.opcode in ("dynamic-slice", "gather") and pos == 0:
+                sliced_bytes[ai] = sliced_bytes.get(ai, 0.0) \
+                    + _shape_bytes(fi.type_str)
+            elif fi.opcode == "dynamic-update-slice" and pos == 0:
+                upd = _shape_bytes(fc.shapes.get(f_ops[1], "")) \
+                    if len(f_ops) > 1 else 0.0
+                sliced_bytes[ai] = sliced_bytes.get(ai, 0.0) + upd
+            elif fi.opcode == "dynamic-update-slice" and pos > 1:
+                pass  # indices
+            else:
+                full_use.add(ai)
+        if fi.opcode == "dynamic-update-slice" and fi.name == root_name:
+            root_dus_update = _shape_bytes(fc.shapes.get(f_ops[1], "")) \
+                if len(f_ops) > 1 else None
+    total = 0.0
+    for ai, on in enumerate(ops):
+        full = _shape_bytes(caller_shapes.get(on, ""))
+        if ai in sliced_bytes and ai not in full_use:
+            total += min(full, sliced_bytes[ai])
+        else:
+            total += full
+    if root_dus_update is not None:
+        out_b = root_dus_update  # in-place update: only the window is written
+    return out_b + total
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    traffic_bytes: float = 0.0
+    collective_bytes: dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    op_counts: dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    def add(self, other: "HloStats", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.traffic_bytes += other.traffic_bytes * mult
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] += v * mult
+        for k, v in other.op_counts.items():
+            self.op_counts[k] += v * mult
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    def to_json(self) -> dict:
+        return {"flops": self.flops, "traffic_bytes": self.traffic_bytes,
+                "collective_bytes": dict(self.collective_bytes),
+                "total_collective_bytes": self.total_collective_bytes,
+                "op_counts": dict(self.op_counts)}
+
+
+def analyze(text: str, n_devices: int) -> HloStats:
+    comps = parse_hlo(text)
+    entry = comps.pop("__entry__")
+    memo: dict[str, HloStats] = {}
+
+    def comp_stats(name: str) -> HloStats:
+        if name in memo:
+            return memo[name]
+        memo[name] = HloStats()  # cycle guard
+        c = comps.get(name)
+        if c is None:
+            return memo[name]
+        st = HloStats()
+        for ins in c.instrs:
+            if ins.opcode == "dot" or ins.opcode.startswith("convolution"):
+                st.flops += _dot_flops(ins, c.shapes)
+                st.op_counts["dot"] += 1
+                st.traffic_bytes += _shape_bytes(ins.type_str) + sum(
+                    _shape_bytes(c.shapes.get(o, ""))
+                    for o in _operand_names(ins.rest))
+            elif any(ins.opcode.startswith(co) for co in COLLECTIVE_OPS):
+                if ins.opcode.endswith("-done"):
+                    continue
+                op, wb = _collective_wire_bytes(ins, c.shapes, n_devices)
+                st.collective_bytes[op] += wb
+                st.op_counts[op] += 1
+            elif ins.opcode == "while":
+                body = _BODY_RE.search(ins.rest)
+                cond = _COND_RE.search(ins.rest)
+                trip = 1
+                tm = _TRIP_RE.search(ins.rest)
+                if tm:
+                    trip = int(tm.group(1))
+                st.op_counts["while"] += 1
+                if body:
+                    st.add(comp_stats(body.group(1)), trip)
+                if cond:
+                    st.add(comp_stats(cond.group(1)), trip)
+                continue
+            elif ins.opcode in ("call", "conditional", "async-start"):
+                for cm in _CALLS_RE.finditer(ins.rest):
+                    st.add(comp_stats(cm.group(1)))
+            elif ins.opcode == "fusion":
+                cm = _CALLS_RE.search(ins.rest)
+                if cm:
+                    inner = comp_stats(cm.group(1))
+                    st.flops += inner.flops  # dots inside fusions
+                st.op_counts["fusion"] += 1
+                st.traffic_bytes += _fusion_traffic(ins, c.shapes, comps)
+            elif ins.opcode in ("dynamic-slice", "gather"):
+                st.op_counts[ins.opcode] += 1
+                st.traffic_bytes += 2.0 * _shape_bytes(ins.type_str)
+            elif ins.opcode == "dynamic-update-slice":
+                ops_n = _operand_names(ins.rest)
+                upd = _shape_bytes(c.shapes.get(ops_n[1], "")) \
+                    if len(ops_n) > 1 else _shape_bytes(ins.type_str)
+                st.op_counts[ins.opcode] += 1
+                st.traffic_bytes += 2.0 * upd
+            elif ins.opcode not in _NO_TRAFFIC:
+                st.op_counts[ins.opcode] += 1
+                st.traffic_bytes += _shape_bytes(ins.type_str) + sum(
+                    _shape_bytes(c.shapes.get(o, ""))
+                    for o in _operand_names(ins.rest))
+        memo[name] = st
+        return st
+
+    # fusions' inner computations would double-count traffic if walked from
+    # the entry; comp_stats only walks them for flops via the fusion branch.
+    return comp_stats(entry.name)

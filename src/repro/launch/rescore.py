@@ -1,0 +1,70 @@
+"""Re-run the HLO analysis over saved dry-run artifacts (no recompilation).
+
+Used whenever the cost model in hlo_analysis.py improves: re-reads each
+cell's .hlo.gz, recomputes the roofline record, and rewrites the JSON.
+
+    PYTHONPATH=src python -m repro.launch.rescore
+"""
+
+from __future__ import annotations
+
+import glob
+import gzip
+import json
+import os
+import sys
+
+from ..configs import SHAPES, get_config
+from .hlo_analysis import analyze
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def rescore_record(rec: dict, hlo_text: str) -> dict:
+    n_dev = 512 if rec["mesh"] == "pod2x16x16" else 256
+    st = analyze(hlo_text, n_dev)
+    rec["hlo"] = st.to_json()
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mf = (6 if shape.kind == "train" else 2) * cfg.active_param_count() * tokens
+    rec["model_flops_global"] = float(mf)
+    flops_t = st.flops / PEAK_FLOPS
+    mem_t = st.traffic_bytes / HBM_BW
+    coll_t = st.total_collective_bytes / ICI_BW
+    dom = max((flops_t, "compute"), (mem_t, "memory"), (coll_t, "collective"))
+    lb = max(flops_t, mem_t, coll_t)
+    rec["roofline"] = {
+        "compute_s": flops_t, "memory_s": mem_t, "collective_s": coll_t,
+        "bound": dom[1], "step_time_lower_bound_s": lb,
+        "model_flops_ratio": mf / (st.flops * n_dev) if st.flops else 0.0,
+        "mfu_bound": (mf / n_dev / PEAK_FLOPS) / lb if lb else 0.0,
+    }
+    return rec
+
+
+def main(pattern: str = "*.json"):
+    base = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                        "experiments", "dryrun")
+    for jpath in sorted(glob.glob(os.path.join(base, pattern))):
+        rec = json.load(open(jpath))
+        if rec.get("status") != "ok" or "hlo_path" not in rec:
+            continue
+        hpath = rec["hlo_path"]
+        if not os.path.exists(hpath):
+            hpath = os.path.join(base, os.path.basename(hpath))
+        if not os.path.exists(hpath):
+            print(f"[rescore] missing HLO for {jpath}")
+            continue
+        rec = rescore_record(rec, gzip.open(hpath, "rt").read())
+        json.dump(rec, open(jpath, "w"), indent=1)
+        rl = rec["roofline"]
+        print(f"[rescore] {rec['arch']:24s} {rec['shape']:12s} {rec['mesh']:11s}"
+              f" bound={rl['bound']:10s} lb={rl['step_time_lower_bound_s']:.3f}s"
+              f" mfu_bound={rl['mfu_bound']:.4f}")
+
+
+if __name__ == "__main__":
+    main(*(sys.argv[1:] or []))

@@ -1,0 +1,85 @@
+"""Jittable train / prefill / decode step builders shared by the dry-run,
+the trainer, and the serving engine."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import decode_step as _decode
+from ..models import loss_fn, prefill as _prefill
+from ..models.context import DistContext
+from ..optim import AdamWConfig, adamw_update
+
+
+def make_train_step(cfg: ModelConfig, ctx: DistContext | None = None,
+                    opt_cfg: AdamWConfig | None = None, codec_fn=None,
+                    remat: bool = True, microbatches: int = 1):
+    """Train step with optional gradient accumulation over microbatches.
+
+    Microbatching divides activation memory by ``microbatches`` at the cost
+    of re-running the FSDP weight all-gathers per microbatch; the gradient
+    all-reduce/reduce-scatter still happens once per step.
+    """
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def grads_of(p, batch):
+        def lf(pp):
+            return loss_fn(cfg, pp, batch["tokens"], ctx=ctx,
+                           inputs=batch.get("inputs"), codec_fn=codec_fn,
+                           remat=remat)
+        return jax.value_and_grad(lf, has_aux=True)(p)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, aux), grads = grads_of(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape(microbatches, x.shape[0] // microbatches,
+                                    *x.shape[1:]), batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(gsum, mbatch):
+                (l, _), g = grads_of(params, mbatch)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return gsum, l
+
+            gsum, losses = jax.lax.scan(body, g0, mb)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss, aux = jnp.mean(losses), {}
+        new_params, new_opt, metrics = adamw_update(opt_cfg, params, grads,
+                                                    opt_state)
+        out = {"loss": loss, **metrics}
+        if "codec_rate_bits" in aux:
+            out["codec_rate_bits"] = aux["codec_rate_bits"]
+        return new_params, new_opt, out
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, ctx: DistContext | None = None,
+                      codec_fn=None):
+    def prefill_step(params, batch, cache):
+        inp = batch.get("inputs", batch["tokens"])
+        logits, new_cache = _prefill(cfg, params, inp, cache, ctx=ctx,
+                                     codec_fn=codec_fn)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, ctx: DistContext | None = None,
+                     codec_fn=None):
+    def serve_step(params, token, cache, pos):
+        logits, new_cache, aux = _decode(cfg, params, token, cache, pos,
+                                         ctx=ctx, codec_fn=codec_fn)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+
+    return serve_step

@@ -1,0 +1,63 @@
+"""Training launcher: `python -m repro.launch.train --arch <id> [...]`.
+
+Single-host entry; on a real cluster each host calls
+``jax.distributed.initialize()`` first (flag below) and the same code
+runs over the global device set.  For CPU-container experimentation the
+default runs a reduced config; ``--full`` uses the real architecture (only
+feasible on real accelerators).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--full", action="store_true",
+                    help="use the full-size config (accelerators only)")
+    ap.add_argument("--distributed", action="store_true",
+                    help="call jax.distributed.initialize() (multi-host)")
+    ap.add_argument("--grad-compress-bits", type=int, default=0)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    if args.distributed:
+        import jax
+        jax.distributed.initialize()
+
+    from ..compression import GradCompressionConfig
+    from ..configs import get_config, reduced
+    from ..data import DataConfig
+    from ..train import Trainer, TrainerConfig
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = reduced(cfg)
+    gc = None
+    if args.grad_compress_bits:
+        gc = GradCompressionConfig(n_levels=1 << args.grad_compress_bits)
+    trainer = Trainer(
+        cfg,
+        TrainerConfig(steps=args.steps, ckpt_every=max(args.steps // 5, 1),
+                      ckpt_dir=args.ckpt_dir, warmup_steps=args.steps // 10,
+                      grad_compression=gc),
+        DataConfig(vocab_size=cfg.vocab_size, batch=args.batch,
+                   seq_len=args.seq_len,
+                   embed_dim=cfg.d_model if cfg.input_mode == "embeddings" else 0),
+    )
+    trainer.run(resume=args.resume)
+    for m in trainer.metrics_log[:: max(len(trainer.metrics_log) // 10, 1)]:
+        print(f"step {m['step']:5d}  loss {m['loss']:.4f}  "
+              f"gnorm {m['grad_norm']:.3f}")
+    print(f"final loss: {trainer.metrics_log[-1]['loss']:.4f}; "
+          f"straggler steps: {trainer.straggler_steps}")
+
+
+if __name__ == "__main__":
+    main()

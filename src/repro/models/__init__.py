@@ -1,0 +1,6 @@
+from .context import DistContext
+from .transformer import (build_groups, decode_step, forward, init_cache,
+                          init_params, loss_fn, prefill)
+
+__all__ = ["DistContext", "build_groups", "decode_step", "forward",
+           "init_cache", "init_params", "loss_fn", "prefill"]

@@ -1,0 +1,224 @@
+"""Shared neural layers: norms, RoPE, GQA attention (global/sliding-window,
+query-chunked), gated MLPs.
+
+TPU adaptations (see DESIGN.md):
+  * attention is query-chunked via ``lax.scan`` so the S_q x S_k score matrix
+    never materializes beyond (q_chunk x S_k) per head -- the XLA-level
+    equivalent of Flash-style tiling, exact (full row softmax per chunk);
+  * sliding-window layers additionally slice K/V to a (window + q_chunk)
+    band per chunk, so local attention costs O(S * W) not O(S^2);
+  * logits/softmax accumulate in float32 regardless of activation dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+_NEG_INF = -1e30
+DEFAULT_Q_CHUNK = 512
+
+
+# -- norms ---------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mean) ** 2, axis=-1, keepdims=True)
+    out = (xf - mean) * lax.rsqrt(var + eps) * scale.astype(jnp.float32) \
+        + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def apply_norm(x, params, kind: str, eps: float):
+    if kind == "layernorm":
+        return layer_norm(x, params["scale"], params["bias"], eps)
+    return rms_norm(x, params["scale"], eps)
+
+
+def init_norm(kind: str, d: int, dtype):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+# -- positional embeddings -------------------------------------------------------
+
+def rope(x, positions, theta: float = 10_000.0):
+    """Rotary embedding. x: (..., S, N, hd); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    freqs = theta ** (-jnp.arange(0, hd // 2, dtype=jnp.float32) / (hd // 2))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (S, hd/2) or (B,S,hd/2)
+    if ang.ndim == 2:  # (S, hd/2) -> broadcast over batch and heads
+        ang = ang[None, :, None, :]
+    else:              # (B, S, hd/2)
+        ang = ang[:, :, None, :]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos_emb(positions, d: int, dtype=jnp.float32):
+    """Classic transformer sinusoidal embedding for given positions (S,)."""
+    half = d // 2
+    freqs = jnp.exp(-math.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# -- attention -------------------------------------------------------------------
+
+def _attn_core(q, k, v, q_positions, k_positions, *, window, softcap, dtype):
+    """Exact attention for one query block.
+
+    q: (B, Sq, K, G, hd); k/v: (B, Sk, K, hd);
+    q_positions: (Sq,), k_positions: (Sk,) (negative = invalid slot).
+    """
+    hd = q.shape[-1]
+    logits = jnp.einsum("bskgh,btkh->bkgst", q, k,
+                        preferred_element_type=jnp.float32)
+    logits *= 1.0 / math.sqrt(hd)
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    valid = (k_positions[None, :] <= q_positions[:, None]) & \
+        (k_positions[None, :] >= 0)
+    if window is not None:
+        valid &= q_positions[:, None] - k_positions[None, :] < window
+    logits = jnp.where(valid[None, None, None], logits, _NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(dtype)
+
+
+def multi_head_attention(q, k, v, *, q_offset=0, k_positions=None,
+                         window=None, softcap: float = 0.0,
+                         q_chunk: int = DEFAULT_Q_CHUNK):
+    """GQA attention with optional sliding window and query chunking.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, K, hd) with H % K == 0.
+    ``q_offset``: absolute position of q[0] (int or traced scalar).
+    ``k_positions``: absolute positions of cache slots, (Sk,); defaults to
+    arange(Sk).  Entries < 0 are masked out (unwritten ring slots).
+    """
+    b, sq, h, hd = q.shape
+    sk, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, sq, kh, g, hd)
+    dtype = q.dtype
+    if k_positions is None:
+        k_positions = jnp.arange(sk, dtype=jnp.int32)
+    q_offset = jnp.asarray(q_offset, jnp.int32)
+
+    use_chunks = sq > q_chunk and sq % q_chunk == 0
+    if not use_chunks:
+        q_pos = q_offset + jnp.arange(sq, dtype=jnp.int32)
+        out = _attn_core(qg, k, v, q_pos, k_positions,
+                         window=window, softcap=softcap, dtype=dtype)
+        return out.reshape(b, sq, h, hd)
+
+    n_chunks = sq // q_chunk
+    q_scan = jnp.moveaxis(qg.reshape(b, n_chunks, q_chunk, kh, g, hd), 1, 0)
+    band = None
+    if window is not None:
+        band = window + q_chunk
+        if band >= sk:
+            band = None  # window covers everything; no point slicing
+
+    # checkpoint: never keep the (q_chunk x S_k) probs as scan residuals --
+    # the backward pass recomputes them per chunk (flash-attention-style
+    # memory behaviour at the XLA level)
+    @jax.checkpoint
+    def body(_, inp):
+        ci, qc = inp
+        start = ci * q_chunk + q_offset
+        q_pos = start + jnp.arange(q_chunk, dtype=jnp.int32)
+        if band is None:
+            kc, vc, k_pos = k, v, k_positions
+        else:
+            s0 = jnp.clip(start - window, 0, sk - band)
+            kc = lax.dynamic_slice_in_dim(k, s0, band, axis=1)
+            vc = lax.dynamic_slice_in_dim(v, s0, band, axis=1)
+            k_pos = lax.dynamic_slice_in_dim(k_positions, s0, band, axis=0)
+        out = _attn_core(qc, kc, vc, q_pos, k_pos,
+                         window=window, softcap=softcap, dtype=dtype)
+        return None, out
+
+    _, outs = lax.scan(body, None,
+                       (jnp.arange(n_chunks, dtype=jnp.int32), q_scan))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, hd)
+
+
+# -- MLP -------------------------------------------------------------------------
+
+def _act(name: str):
+    return jax.nn.gelu if name == "gelu" else jax.nn.silu
+
+
+def mlp_apply(x, p, act: str, gated: bool, ctx=None):
+    from .context import constrain
+    if gated:
+        h = _act(act)(x @ p["w1"]) * (x @ p["w3"])
+    else:
+        h = _act(act)(x @ p["w1"])
+    h = constrain(h, ctx, "dp", None, "tp")
+    return h @ p["w2"]
+
+
+def init_mlp(key, d: int, f: int, gated: bool, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    p = {"w1": jax.random.normal(k1, (d, f), dtype) * s_in,
+         "w2": jax.random.normal(k2, (f, d), dtype) * s_out}
+    if gated:
+        p["w3"] = jax.random.normal(k3, (d, f), dtype) * s_in
+    return p
+
+
+# -- attention parameter block ----------------------------------------------------
+
+def init_attention(key, cfg, dtype):
+    d, h, kh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "wq": jax.random.normal(ks[0], (d, h, hd), dtype) * s,
+        "wk": jax.random.normal(ks[1], (d, kh, hd), dtype) * s,
+        "wv": jax.random.normal(ks[2], (d, kh, hd), dtype) * s,
+        "wo": jax.random.normal(ks[3], (h, hd, d), dtype) * (1.0 / math.sqrt(h * hd)),
+    }
+    if cfg.use_qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def attention_qkv(x, p, cfg, positions):
+    """Project + RoPE.  x: (B,S,d) -> q (B,S,H,hd), k/v (B,S,K,hd)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.use_qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.pos_emb == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_out(attn, p):
+    return jnp.einsum("bshk,hkd->bsd", attn, p["wo"])

@@ -1,0 +1,201 @@
+"""Top-k routed Mixture-of-Experts with capacity-based dispatch.
+
+Three execution paths sharing the same routing math:
+
+  * ``_moe_dense_ref``   -- every expert on every token (oracle for tests);
+  * ``moe_local``        -- sort/scatter dispatch, no collectives (single
+                            device or pure data parallelism);
+  * ``moe_expert_parallel`` -- shard_map over the 'model' axis:
+      - train/prefill: tokens are *sequence-sharded* across the expert axis,
+        dispatched locally to (E, C, d) slots, exchanged with all_to_all so
+        each device runs only its E/M local experts, and combined after the
+        reverse all_to_all (the standard EP pipeline);
+      - decode (or S not divisible): tokens replicated across the expert
+        axis, each shard computes its local experts' contributions and the
+        output is psum-combined (TP-style, cheap at small T).
+
+Dropped-token semantics: assignments beyond an expert's capacity
+C = ceil(T*k/E * capacity_factor) are dropped (standard capacity MoE;
+dbrx/qwen3 are dropless -- noted in DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+
+def init_moe(key, cfg, dtype):
+    d, e, ef = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 4)
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(ef)
+    return {
+        "router": jax.random.normal(ks[0], (d, e), jnp.float32) * s_in,
+        "w1": jax.random.normal(ks[1], (e, d, ef), dtype) * s_in,
+        "w3": jax.random.normal(ks[2], (e, d, ef), dtype) * s_in,
+        "w2": jax.random.normal(ks[3], (e, ef, d), dtype) * s_out,
+    }
+
+
+def _route(x2d, router, k):
+    """x2d: (T, d) -> (weights (T,k) f32, expert ids (T,k) i32)."""
+    logits = (x2d.astype(jnp.float32) @ router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = lax.top_k(probs, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)  # renormalize
+    return top_w, top_i.astype(jnp.int32)
+
+
+def _capacity(t: int, k: int, e: int, cf: float) -> int:
+    return max(8, int(math.ceil(t * k / e * cf)))
+
+
+def _expert_ffn(buf, p, act_fn):
+    """buf: (E_local, C, d); expert weights (E_local, d, ef)/(E_local, ef, d)."""
+    h = act_fn(jnp.einsum("ecd,edf->ecf", buf, p["w1"])) \
+        * jnp.einsum("ecd,edf->ecf", buf, p["w3"])
+    return jnp.einsum("ecf,efd->ecd", h, p["w2"])
+
+
+def _dispatch_indices(top_i, k: int, e: int, cap: int):
+    """Compute per-assignment (slot, keep, token) under capacity.
+
+    Returns slot ids in [0, E*cap) with dropped assignments mapped
+    out-of-range (for mode='drop' scatters).
+    """
+    t = top_i.shape[0]
+    flat_e = top_i.reshape(-1)                          # (T*k,)
+    token_of = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.sum(jax.nn.one_hot(flat_e, e, dtype=jnp.int32), axis=0)  # (E,)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(t * k, dtype=jnp.int32) - starts[sorted_e]
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, sorted_e * cap + pos_in_e, e * cap)  # OOB when dropped
+    return slot, keep, token_of[order], order
+
+
+def _moe_dense_ref(x2d, p, cfg):
+    """Oracle: weighted sum over ALL experts (no capacity, no dropping)."""
+    act_fn = jax.nn.gelu if cfg.act == "gelu" else jax.nn.silu
+    w, i = _route(x2d, p["router"], cfg.experts_per_token)
+    outs = []
+    for ei in range(cfg.num_experts):
+        h = act_fn(x2d @ p["w1"][ei]) * (x2d @ p["w3"][ei])
+        outs.append(h @ p["w2"][ei])
+    stacked = jnp.stack(outs, axis=1)  # (T, E, d)
+    mask = jnp.sum(jax.nn.one_hot(i, cfg.num_experts, dtype=w.dtype)
+                   * w[..., None], axis=1)  # (T, E)
+    return jnp.einsum("te,ted->td", mask, stacked.astype(w.dtype)).astype(x2d.dtype)
+
+
+def moe_local(x2d, p, cfg, cap: int | None = None):
+    """Capacity dispatch without collectives. x2d: (T, d)."""
+    act_fn = jax.nn.gelu if cfg.act == "gelu" else jax.nn.silu
+    t, d = x2d.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    cap = cap or _capacity(t, k, e, cfg.capacity_factor)
+    w, i = _route(x2d, p["router"], k)
+    slot, keep, tok_sorted, order = _dispatch_indices(i, k, e, cap)
+    buf = jnp.zeros((e * cap, d), x2d.dtype).at[slot].set(
+        x2d[tok_sorted], mode="drop")
+    y = _expert_ffn(buf.reshape(e, cap, d), p, act_fn).reshape(e * cap, d)
+    contrib = jnp.where(keep[:, None], y.at[slot, :].get(mode="fill", fill_value=0.0), 0.0)
+    w_sorted = w.reshape(-1)[order]
+    out = jnp.zeros((t, d), jnp.float32).at[tok_sorted].add(
+        contrib.astype(jnp.float32) * w_sorted[:, None])
+    return out.astype(x2d.dtype)
+
+
+# -- expert parallelism ------------------------------------------------------------
+
+
+def moe_expert_parallel(x, p, cfg, mesh, dp_axes, ep_axis="model"):
+    """x: (B, S, d) global. Returns (B, S, d).  See module docstring."""
+    b, s, d = x.shape
+    m = mesh.shape[ep_axis]
+    e, k = cfg.num_experts, cfg.experts_per_token
+    act_fn = jax.nn.gelu if cfg.act == "gelu" else jax.nn.silu
+    if e % m != 0:
+        raise ValueError(f"{e} experts not divisible by axis {ep_axis}={m}")
+
+    if s % m == 0 and s >= m:
+        # ---- sequence-sharded dispatch + all_to_all --------------------------
+        def body(xl, router, w1, w3, w2):
+            pl = {"router": router, "w1": w1, "w3": w3, "w2": w2}
+            bl, sl, _ = xl.shape
+            t = bl * sl
+            x2d = xl.reshape(t, d)
+            cap = _capacity(t, k, e, cfg.capacity_factor)
+            w, i = _route(x2d, pl["router"], k)
+            slot, keep, tok_sorted, order = _dispatch_indices(i, k, e, cap)
+            buf = jnp.zeros((e * cap, d), x2d.dtype).at[slot].set(
+                x2d[tok_sorted], mode="drop").reshape(e, cap, d)
+            # exchange: each device keeps its E/M experts, all peers' tokens
+            buf = lax.all_to_all(buf, ep_axis, split_axis=0, concat_axis=1,
+                                 tiled=True)                    # (E/M, M*cap, d)
+            y = _expert_ffn(buf, pl, act_fn)
+            y = lax.all_to_all(y, ep_axis, split_axis=1, concat_axis=0,
+                               tiled=True).reshape(e * cap, d)  # back to (E*cap, d)
+            contrib = jnp.where(keep[:, None],
+                                y.at[slot, :].get(mode="fill", fill_value=0.0), 0.0)
+            w_sorted = w.reshape(-1)[order]
+            out = jnp.zeros((t, d), jnp.float32).at[tok_sorted].add(
+                contrib.astype(jnp.float32) * w_sorted[:, None])
+            return out.reshape(bl, sl, d).astype(xl.dtype)
+
+        return jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(dp_axes, ep_axis, None), P(), P(ep_axis), P(ep_axis),
+                      P(ep_axis)),
+            out_specs=P(dp_axes, ep_axis, None),
+        )(x, p["router"], p["w1"], p["w3"], p["w2"])
+
+    # ---- replicated tokens + local experts + psum (decode path) --------------
+    def body_psum(xl, router, w1, w3, w2):
+        pl = {"w1": w1, "w3": w3, "w2": w2}
+        e_loc = w1.shape[0]
+        j = lax.axis_index(ep_axis)
+        bl, sl, _ = xl.shape
+        t = bl * sl
+        x2d = xl.reshape(t, d)
+        cap = _capacity(t, k, e, cfg.capacity_factor)
+        w, i = _route(x2d, router, k)
+        # shift ids so local experts live in [0, e_loc); others go OOB
+        i_loc = i - j * e_loc
+        slot, keep, tok_sorted, order = _dispatch_indices(
+            jnp.where((i_loc >= 0) & (i_loc < e_loc), i_loc, e_loc), k,
+            e_loc + 1, cap)
+        keep &= slot < e_loc * cap
+        slot = jnp.where(keep, slot, e_loc * cap)
+        buf = jnp.zeros((e_loc * cap, d), x2d.dtype).at[slot].set(
+            x2d[tok_sorted], mode="drop").reshape(e_loc, cap, d)
+        y = _expert_ffn(buf, pl, act_fn).reshape(e_loc * cap, d)
+        contrib = jnp.where(keep[:, None],
+                            y.at[slot, :].get(mode="fill", fill_value=0.0), 0.0)
+        w_sorted = w.reshape(-1)[order]
+        out = jnp.zeros((t, d), jnp.float32).at[tok_sorted].add(
+            contrib.astype(jnp.float32) * w_sorted[:, None])
+        out = lax.psum(out, ep_axis)
+        return out.reshape(bl, sl, d).astype(xl.dtype)
+
+    return jax.shard_map(
+        body_psum, mesh=mesh,
+        in_specs=(P(dp_axes, None, None), P(), P(ep_axis), P(ep_axis),
+                  P(ep_axis)),
+        out_specs=P(dp_axes, None, None),
+    )(x, p["router"], p["w1"], p["w3"], p["w2"])
+
+
+def moe_apply(x, p, cfg, ctx=None):
+    """Entry point: (B, S, d) -> (B, S, d); picks the right execution path."""
+    if ctx is None or ctx.mesh is None or ctx.mesh.shape.get(ctx.tp_axis, 1) == 1 \
+            or cfg.num_experts % ctx.mesh.shape[ctx.tp_axis] != 0:
+        b, s, d = x.shape
+        return moe_local(x.reshape(b * s, d), p, cfg).reshape(b, s, d)
+    return moe_expert_parallel(x, p, cfg, ctx.mesh, ctx.dp_axes, ctx.tp_axis)

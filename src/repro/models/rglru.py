@@ -1,0 +1,110 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block structure (one 'rglru' mixer):
+    x -> [w_in -> causal conv1d(width 4) -> RG-LRU] * gelu(w_gate) -> w_out
+
+RG-LRU recurrence (elementwise over the rnn width r):
+    r_t = sigmoid(x_t @ W_a + b_a)          recurrence gate
+    i_t = sigmoid(x_t @ W_x + b_x)          input gate
+    log a_t = -c * softplus(Lambda) * r_t   (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+TPU adaptation: the linear recurrence is evaluated with
+``jax.lax.associative_scan`` (log-depth, VPU-friendly) for train/prefill;
+decode carries (h, conv state) and is a single fused elementwise step.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+_C = 8.0
+
+
+def init_rglru(key, cfg, dtype):
+    d, r, cw = cfg.d_model, cfg.rnn_dim, cfg.conv_width
+    ks = jax.random.split(key, 6)
+    s_d, s_r = 1.0 / math.sqrt(d), 1.0 / math.sqrt(r)
+    return {
+        "w_in": jax.random.normal(ks[0], (d, r), dtype) * s_d,
+        "w_gate": jax.random.normal(ks[1], (d, r), dtype) * s_d,
+        "conv_w": jax.random.normal(ks[2], (cw, r), dtype) * 0.3,
+        "conv_b": jnp.zeros((r,), dtype),
+        "wa": jax.random.normal(ks[3], (r, r), dtype) * s_r,
+        "ba": jnp.full((r,), 2.0, dtype),   # bias toward remembering
+        "wx": jax.random.normal(ks[4], (r, r), dtype) * s_r,
+        "bx": jnp.zeros((r,), dtype),
+        "lam": jnp.full((r,), 0.54, jnp.float32),  # softplus^-1-ish init
+        "w_out": jax.random.normal(ks[5], (r, d), dtype) * s_r,
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """x: (B, S, r); w: (cw, r) depthwise. state: (B, cw-1, r) prior inputs."""
+    cw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+cw-1, r)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(cw))
+    new_state = xp[:, -(cw - 1):, :]
+    return out + b, new_state
+
+
+def _gates(x, p):
+    """a (decay) and gated input, elementwise. x: (..., r), float32 math."""
+    xf = x.astype(jnp.float32)
+    rg = jax.nn.sigmoid(xf @ p["wa"].astype(jnp.float32) + p["ba"].astype(jnp.float32))
+    ig = jax.nn.sigmoid(xf @ p["wx"].astype(jnp.float32) + p["bx"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * rg
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (ig * xf)
+    return a, gated
+
+
+def rglru_scan(x, p, h0=None):
+    """Full-sequence RG-LRU via associative scan. x: (B, S, r) post-conv."""
+    a, bt = _gates(x, p)  # (B, S, r) f32
+    if h0 is not None:
+        # fold initial state into the first step: b_0 += a_0 * h0
+        bt = bt.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_cum, h = lax.associative_scan(combine, (a, bt), axis=1)
+    return h.astype(x.dtype), h[:, -1, :]  # outputs, final state (f32)
+
+
+def rglru_block_apply(x, p, cfg, cache=None, ctx=None):
+    """Full mixer. x: (B, S, d). cache: {'h': (B,r) f32, 'conv': (B,cw-1,r)}.
+
+    Returns (out (B,S,d), new_cache_or_None).
+    """
+    from .context import constrain
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    u = x @ p["w_in"]
+    gate = constrain(gate, ctx, "dp", None, "tp")
+    u = constrain(u, ctx, "dp", None, "tp")
+    conv_state = cache["conv"] if cache is not None else None
+    u, new_conv = _causal_conv(u, p["conv_w"], p["conv_b"], conv_state)
+    h0 = cache["h"] if cache is not None else None
+    h, h_last = rglru_scan(u, p, h0)
+    out = (gate * h) @ p["w_out"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {"h": h_last, "conv": new_conv.astype(cache["conv"].dtype)}
+    return out, new_cache
+
+
+def init_rglru_cache(cfg, batch: int, dtype):
+    r, cw = cfg.rnn_dim, cfg.conv_width
+    return {"h": jnp.zeros((batch, r), jnp.float32),
+            "conv": jnp.zeros((batch, cw - 1, r), dtype)}

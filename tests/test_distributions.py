@@ -1,0 +1,88 @@
+"""Faithfulness tests: the analytic model must reproduce the paper's numbers."""
+
+import math
+
+import numpy as np
+import pytest
+from scipy import integrate
+
+from repro.core.distributions import (FeatureModel, resnet50_layer21_model,
+                                      yolov3_layer12_model)
+
+
+class TestResNetFit:
+    """Paper Sec. III-B: ResNet-50 layer 21 published fit."""
+
+    def test_lambda_mu_match_paper(self):
+        m = resnet50_layer21_model()
+        assert m.lam == pytest.approx(0.7716595, abs=2e-6)
+        assert m.mu == pytest.approx(-1.4350621, abs=2e-6)
+
+    def test_eq8_coefficients(self):
+        m = resnet50_layer21_model()
+        # eq (8): 3.087 e^{4(3.858y+0.554)} | 3.087 e^{-(3.858y+0.554)} | 0.3087 e^{-(0.3858y+0.554)}
+        assert 4 * m.lam == pytest.approx(3.0866, abs=1e-3)      # 0.4*lam/s = 4 lam
+        assert 5 * m.lam == pytest.approx(3.858, abs=1e-3)       # lam/(kappa*s)/... exponent scale
+        assert -0.5 * m.lam * m.mu == pytest.approx(0.554, abs=1e-3)
+        assert 0.1 * m.mu == pytest.approx(-0.144, abs=1e-3)     # segment boundary
+        assert 0.4 * m.lam == pytest.approx(0.30866, abs=1e-4)   # tail coefficient
+
+    def test_closed_form_mean_var_eqs_6_7(self):
+        m = resnet50_layer21_model()
+        assert m.mean_eq6() == pytest.approx(1.1235656, abs=1e-5)
+        assert m.var_eq7() == pytest.approx(4.9280124, abs=1e-4)
+        # and the segment-based moments agree with the closed forms
+        assert m.mean() == pytest.approx(m.mean_eq6(), rel=1e-8)
+        assert m.var() == pytest.approx(m.var_eq7(), rel=1e-3)
+
+
+class TestYoloFit:
+    def test_eq12_coefficients(self):
+        m = yolov3_layer12_model()
+        assert 0.4 * m.lam == pytest.approx(0.956, abs=1e-3)
+        assert 5 * m.lam == pytest.approx(11.950, abs=5e-3)
+        assert -0.5 * m.lam * m.mu == pytest.approx(0.369, abs=1e-3)
+        assert 0.1 * m.mu == pytest.approx(-0.031, abs=1e-3)
+
+
+class TestModelConsistency:
+    @pytest.mark.parametrize("lam,mu,kappa,slope", [
+        (0.7716595, -1.4350621, 0.5, 0.1),
+        (2.39, -0.3088, 0.5, 0.1),
+        (1.0, 0.5, 0.5, 0.1),    # mu > 0 branch
+        (1.5, -0.8, 2.0, 0.2),   # kappa > 1
+    ])
+    def test_pdf_integrates_to_one(self, lam, mu, kappa, slope):
+        m = FeatureModel.from_params(lam, mu, kappa, slope)
+        assert m.total_mass() == pytest.approx(1.0, abs=1e-9)
+
+    @pytest.mark.parametrize("lam,mu,kappa", [(1.2, -0.7, 0.5), (0.9, 0.4, 1.0)])
+    def test_relu_atom_mass(self, lam, mu, kappa):
+        m = FeatureModel.from_params(lam, mu, kappa, slope=0.0)
+        assert m.total_mass() == pytest.approx(1.0, abs=1e-9)
+        assert m.atom > 0
+
+    def test_segment_moments_match_quadrature(self):
+        m = resnet50_layer21_model()
+        num_mean = sum(integrate.quad(lambda y: y * m.pdf(y), a, b)[0]
+                       for a, b in [(-60, 0.1 * m.mu), (0.1 * m.mu, 0), (0, 200)])
+        assert m.mean() == pytest.approx(num_mean, rel=1e-6)
+
+    def test_sampling_matches_moments(self):
+        m = resnet50_layer21_model()
+        s = m.sample(400_000, np.random.default_rng(7))
+        assert s.mean() == pytest.approx(m.mean(), abs=0.02)
+        assert s.var() == pytest.approx(m.var(), rel=0.03)
+
+    def test_cdf_median_quantile(self):
+        m = resnet50_layer21_model()
+        assert m.cdf_scalar(m.median()) == pytest.approx(0.5, abs=1e-8)
+        assert m.cdf_scalar(-1e6) == pytest.approx(0.0, abs=1e-9)
+        assert m.cdf_scalar(1e3) == pytest.approx(1.0, abs=1e-6)
+
+    def test_fit_from_samples_roundtrip(self):
+        true = FeatureModel.from_params(1.1, -0.9, 0.5, 0.1)
+        s = true.sample(600_000, np.random.default_rng(3))
+        fit = FeatureModel.fit_from_samples(s)
+        assert fit.lam == pytest.approx(true.lam, rel=0.05)
+        assert fit.mu == pytest.approx(true.mu, rel=0.08)

@@ -1,0 +1,115 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis.
+
+Kernels run in interpret mode on CPU (the TPU lowering is exercised by the
+pallas_call construction itself; numerical behaviour is identical).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.distributions import resnet50_layer21_model
+from repro.core.ecsq import design_ecsq
+from repro.core.rate_model import estimated_bits_np
+from repro.kernels import ops, ref
+
+SHAPES = [(128,), (1000,), (32, 32), (8, 128), (17, 93), (4, 4, 64),
+          (2, 3, 5, 7)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.fixture(scope="module")
+def samples():
+    m = resnet50_layer21_model()
+    return m.sample(200_000, np.random.default_rng(0)).astype(np.float32)
+
+
+class TestClipQuant:
+    @pytest.mark.parametrize("shape", SHAPES)
+    @pytest.mark.parametrize("dtype", DTYPES)
+    @pytest.mark.parametrize("n_levels", [2, 4, 5, 8])
+    def test_matches_ref(self, shape, dtype, n_levels):
+        rng = np.random.default_rng(42)
+        x = jnp.asarray(rng.normal(2, 4, size=shape), dtype)
+        ki, kd = ops.clip_quantize(x, cmin=0.0, cmax=9.0, n_levels=n_levels)
+        ri, rd = ref.clip_quant_ref(x, 0.0, 9.0, n_levels)
+        np.testing.assert_array_equal(np.asarray(ki), np.asarray(ri))
+        np.testing.assert_allclose(np.asarray(kd, np.float32),
+                                   np.asarray(rd, np.float32), atol=1e-6)
+
+    def test_matches_core_uniform(self, samples):
+        from repro.core import uniform
+        x = jnp.asarray(samples[:8192])
+        ki, kd = ops.clip_quantize(x, cmin=0.0, cmax=9.036, n_levels=4)
+        ci = uniform.quantize(x, 0.0, 9.036, 4)
+        np.testing.assert_array_equal(np.asarray(ki), np.asarray(ci))
+
+    @settings(max_examples=25, deadline=None)
+    @given(n=st.integers(1, 3000), lv=st.integers(2, 16),
+           cmax=st.floats(0.5, 50.0))
+    def test_hypothesis_idx_range_and_idempotence(self, n, lv, cmax):
+        rng = np.random.default_rng(n)
+        x = jnp.asarray(rng.normal(0, 5, size=(n,)).astype(np.float32))
+        idx, deq = ops.clip_quantize(x, cmin=0.0, cmax=float(cmax), n_levels=lv)
+        assert int(idx.min()) >= 0 and int(idx.max()) <= lv - 1
+        idx2, deq2 = ops.clip_quantize(deq, cmin=0.0, cmax=float(cmax),
+                                       n_levels=lv)
+        np.testing.assert_array_equal(np.asarray(idx), np.asarray(idx2))
+
+
+class TestECSQAssign:
+    @pytest.mark.parametrize("n_levels", [2, 3, 4, 8, 16])
+    def test_matches_ref(self, samples, n_levels):
+        q = design_ecsq(samples[:20000], n_levels, 0.05, 0.0, 9.0)
+        x = jnp.asarray(samples[:4096])
+        thr = jnp.asarray(q.thresholds)
+        lvl = jnp.asarray(q.levels)
+        ki, kd = ops.ecsq_quantize(x, thr, lvl, cmin=0.0, cmax=9.0)
+        ri, rd = ref.ecsq_assign_ref(x, thr, lvl, 0.0, 9.0)
+        np.testing.assert_array_equal(np.asarray(ki), np.asarray(ri))
+        np.testing.assert_allclose(np.asarray(kd), np.asarray(rd), atol=1e-6)
+
+    def test_matches_host_ecsq(self, samples):
+        q = design_ecsq(samples[:20000], 4, 0.05, 0.0, 9.0)
+        x = samples[:2048]
+        ki, _ = ops.ecsq_quantize(jnp.asarray(x), jnp.asarray(q.thresholds),
+                                  jnp.asarray(q.levels), cmin=0.0, cmax=9.0)
+        np.testing.assert_array_equal(np.asarray(ki), q.quantize_np(x))
+
+
+class TestRateHist:
+    @pytest.mark.parametrize("shape", SHAPES)
+    @pytest.mark.parametrize("n_levels", [2, 4, 8])
+    def test_matches_ref(self, shape, n_levels):
+        rng = np.random.default_rng(7)
+        idx = jnp.asarray(rng.integers(0, n_levels, size=shape).astype(np.int32))
+        kh = ops.index_histogram(idx, n_levels=n_levels)
+        rh = ref.index_histogram_ref(idx, n_levels)
+        np.testing.assert_array_equal(np.asarray(kh), np.asarray(rh))
+        assert int(kh.sum()) == idx.size
+
+    def test_rate_estimate_matches_host(self, samples):
+        idx, _ = ops.clip_quantize(jnp.asarray(samples[:32768]), cmin=0.0,
+                                   cmax=9.036, n_levels=4)
+        kernel_rate = float(ops.estimate_rate_bits(idx, 4))
+        host_rate = estimated_bits_np(np.asarray(idx), 4) / idx.size
+        assert kernel_rate == pytest.approx(host_rate, rel=1e-5)
+
+
+class TestEndToEnd:
+    def test_kernel_codec_path_equals_core_codec(self, samples):
+        """kernel clip-quant + CABAC == FeatureCodec.encode/decode."""
+        from repro.core import CodecConfig, calibrate
+        from repro.core.cabac import decode_indices, encode_indices
+        codec = calibrate(CodecConfig(n_levels=4, clip_mode="model"),
+                          samples=samples)
+        x = jnp.asarray(samples[:8192])
+        idx, deq = ops.clip_quantize(x, cmin=codec.cmin, cmax=codec.cmax,
+                                     n_levels=4)
+        blob = encode_indices(np.asarray(idx), 4)
+        back = decode_indices(blob, idx.size, 4)
+        np.testing.assert_array_equal(back, np.asarray(idx))
+        np.testing.assert_allclose(np.asarray(deq),
+                                   np.asarray(codec.apply(x)), atol=1e-6)

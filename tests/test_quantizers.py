@@ -1,0 +1,154 @@
+"""Uniform quantizer (eq. 1), ECSQ (Alg. 1), binarization, CABAC, rate model."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import binarization, cabac, uniform
+from repro.core.distributions import resnet50_layer21_model
+from repro.core.ecsq import design_ecsq
+from repro.core.rate_model import (estimated_bits_np,
+                                   estimated_bits_per_element)
+
+
+class TestUniformQuantizer:
+    def test_round_half_away_from_zero(self):
+        # with cmin=0, cmax=3, N=4: delta=1; x=0.5 is halfway -> rounds up to 1
+        idx = uniform.quantize(jnp.array([0.5, 1.5, 2.5]), 0.0, 3.0, 4)
+        assert list(np.asarray(idx)) == [1, 2, 3]
+
+    def test_pinned_outer_bins(self):
+        x = jnp.array([-5.0, 0.0, 0.2, 9.8, 10.0, 50.0])
+        y = uniform.quantize_dequantize(x, 0.0, 10.0, 6)
+        assert float(y[0]) == 0.0 and float(y[-1]) == 10.0
+        # clipped values incur no further quant error
+        assert float(y[-2]) == 10.0
+
+    @pytest.mark.parametrize("n", [2, 3, 5, 6, 7])  # non-power-of-two allowed
+    def test_n_levels_not_power_of_two(self, n):
+        x = jnp.linspace(-1.0, 12.0, 1000)
+        idx = np.asarray(uniform.quantize(x, 0.0, 10.0, n))
+        assert idx.min() == 0 and idx.max() == n - 1
+
+    def test_matches_numpy_reference(self):
+        rng = np.random.default_rng(0)
+        x = rng.normal(2, 3, size=10_000).astype(np.float32)
+        j = np.asarray(uniform.quantize(jnp.asarray(x), 0.0, 9.0, 5))
+        n = uniform.quantize_np(x, 0.0, 9.0, 5)
+        assert (j == n).all()
+
+    def test_idempotent(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(1, 2, 1000).astype(np.float32))
+        y = uniform.quantize_dequantize(x, 0.0, 8.0, 4)
+        z = uniform.quantize_dequantize(y, 0.0, 8.0, 4)
+        assert np.allclose(np.asarray(y), np.asarray(z))
+
+    def test_straight_through_gradient(self):
+        import jax
+        g = jax.grad(lambda x: uniform.straight_through_quant(x, 0.0, 4.0, 4).sum())
+        gr = g(jnp.array([1.0, 2.5, -3.0, 7.0]))
+        assert list(np.asarray(gr)) == [1.0, 1.0, 0.0, 0.0]
+
+
+class TestECSQ:
+    @pytest.fixture(scope="class")
+    def samples(self):
+        return resnet50_layer21_model().sample(60_000, np.random.default_rng(4))
+
+    def test_pinned_boundaries(self, samples):
+        q = design_ecsq(samples, 4, 0.05, 0.0, 9.0, pin_boundaries=True)
+        assert q.levels[0] == 0.0 and q.levels[-1] == 9.0
+
+    def test_conventional_shrinks_range(self, samples):
+        q = design_ecsq(samples, 4, 0.05, 0.0, 9.0, pin_boundaries=False)
+        assert q.levels[0] > 0.0 and q.levels[-1] < 9.0
+
+    def test_levels_monotone_and_thresholds_interleave(self, samples):
+        q = design_ecsq(samples, 5, 0.02, 0.0, 10.0)
+        assert (np.diff(q.levels) >= 0).all()
+        for i in range(len(q.thresholds)):
+            assert q.levels[i] - 1e-9 <= q.thresholds[i] <= q.levels[i + 1] + 1e-9
+
+    def test_beats_uniform_distortion_at_same_levels(self, samples):
+        """Non-uniform design should reduce MSE vs uniform at lam -> 0."""
+        q = design_ecsq(samples, 4, 1e-6, 0.0, 9.0)
+        xc = np.clip(samples, 0.0, 9.0)
+        mse_ecsq = np.mean((xc - q.dequantize_np(q.quantize_np(samples))) ** 2)
+        u = uniform.quantize_np(samples, 0.0, 9.0, 4)
+        mse_unif = np.mean((xc - uniform.dequantize_np(u, 0.0, 9.0, 4)) ** 2)
+        assert mse_ecsq <= mse_unif * 1.001
+
+    def test_larger_lagrangian_lowers_rate(self, samples):
+        rates = []
+        for lam in (1e-4, 0.2, 2.0):
+            q = design_ecsq(samples, 4, lam, 0.0, 9.0)
+            idx = q.quantize_np(samples)
+            rates.append(estimated_bits_np(idx, 4) / idx.size)
+        assert rates[0] >= rates[1] >= rates[2] - 1e-9
+
+
+class TestBinarization:
+    def test_tu_lengths(self):
+        assert list(binarization.truncated_unary_lengths(4)) == [1, 2, 3, 3]
+        assert list(binarization.truncated_unary_lengths(2)) == [1, 1]
+
+    def test_codewords(self):
+        assert [binarization.encode_index(i, 4) for i in range(4)] == \
+            ["0", "10", "110", "111"]
+
+    def test_plane_roundtrip(self):
+        rng = np.random.default_rng(3)
+        for n in (2, 3, 4, 8):
+            idx = rng.integers(0, n, size=5000).astype(np.int32)
+            planes = binarization.index_to_context_bits(idx, n)
+            back = binarization.context_bits_to_index(planes, idx.size, n)
+            assert (back == idx).all()
+
+    def test_total_bits(self):
+        idx = np.array([0, 1, 2, 3])
+        assert binarization.total_tu_bits(idx, 4) == 1 + 2 + 3 + 3
+
+
+class TestCABAC:
+    @pytest.mark.parametrize("n,size,skew", [(2, 2000, 0.9), (4, 5000, 0.7),
+                                             (8, 3000, 0.5), (3, 1, 0.5),
+                                             (4, 0, 0.5)])
+    def test_roundtrip_exact(self, n, size, skew):
+        rng = np.random.default_rng(42)
+        p = np.array([skew] + [(1 - skew) / (n - 1)] * (n - 1))
+        idx = rng.choice(n, size=size, p=p).astype(np.int32)
+        data = cabac.encode_indices(idx, n)
+        back = cabac.decode_indices(data, size, n)
+        assert (back == idx).all()
+
+    def test_compresses_skewed_data(self):
+        rng = np.random.default_rng(0)
+        idx = (rng.random(20_000) > 0.95).astype(np.int32) * 3  # mostly zeros
+        data = cabac.encode_indices(idx, 4)
+        raw_bits = binarization.total_tu_bits(idx, 4)
+        assert len(data) * 8 < raw_bits * 0.6
+
+    def test_rate_close_to_entropy_estimate(self):
+        m = resnet50_layer21_model()
+        s = m.sample(30_000, np.random.default_rng(9))
+        idx = uniform.quantize_np(s, 0.0, 9.036, 4)
+        est = estimated_bits_np(idx, 4)
+        actual = len(cabac.encode_indices(idx, 4)) * 8
+        assert actual == pytest.approx(est, rel=0.08)
+
+
+class TestRateModel:
+    def test_jnp_matches_np(self):
+        rng = np.random.default_rng(17)
+        idx = rng.integers(0, 4, size=9000).astype(np.int32)
+        j = float(estimated_bits_per_element(jnp.asarray(idx), 4)) * idx.size
+        n = estimated_bits_np(idx, 4)
+        assert j == pytest.approx(n, rel=1e-4)
+
+    def test_uniform_indices_cost_tu_average(self):
+        # all four indices equally likely: planes are all ~balanced
+        idx = np.tile(np.arange(4, dtype=np.int32), 1000)
+        bits = estimated_bits_np(idx, 4) / idx.size
+        # entropy bound <= average TU length (1+2+3+3)/4
+        assert bits <= 2.25 + 1e-6
