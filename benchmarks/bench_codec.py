@@ -1,0 +1,130 @@
+"""Host-codec throughput micro-benchmark (the ISSUE-1 acceptance gate).
+
+Measures, on a 1M-element float32 activation tensor drawn from the
+ResNet-50 layer-21 model:
+
+  * seed bit-serial CABAC encode/decode (``encode_indices_serial``),
+  * vectorized rANS encode/decode (``mode="rans"``),
+  * the resulting speedups (acceptance: encode >= 20x),
+  * compressed bits/element of both coders (rate parity check),
+  * per-channel vs per-tensor bits/element at equal N on channel-biased
+    benchmark activations (acceptance: channel <= tensor).
+
+Writes ``BENCH_codec.json`` next to the repo root and prints the CSV rows
+used by ``benchmarks/run.py``.
+
+    PYTHONPATH=src python -m benchmarks.bench_codec [--quick]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import numpy as np
+
+from repro.core import CodecConfig, calibrate
+from repro.core import cabac
+from repro.core.distributions import resnet50_layer21_model
+from repro.core.rate_model import estimated_bits_np
+
+
+def _biased_channel_features(n_rows: int = 16384, n_channels: int = 64,
+                             seed: int = 1) -> np.ndarray:
+    """Channel-minor (NHWC-style) features with per-channel bias, the
+    BN+ReLU-like case the companion paper's tiled coding targets."""
+    rng = np.random.default_rng(seed)
+    mu = np.linspace(0.0, 10.0, n_channels).astype(np.float32)
+    return (mu[None, :]
+            + rng.exponential(1.0, (n_rows, n_channels))).astype(np.float32)
+
+
+def bench_codec(quick: bool = False) -> list[str]:
+    n = 1 << 18 if quick else 1_000_000
+    m = resnet50_layer21_model()
+    feats = m.sample(n, np.random.default_rng(0)).astype(np.float32)
+    codec = calibrate(CodecConfig(n_levels=4, clip_mode="model"),
+                      samples=feats[:100_000])
+    idx = np.asarray(codec.quantize(feats))
+
+    t0 = time.perf_counter()
+    blob_serial = cabac.encode_indices_serial(idx, 4)
+    t_enc_serial = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    back = cabac.decode_indices_serial(blob_serial, idx.size, 4)
+    t_dec_serial = time.perf_counter() - t0
+    assert (back == idx).all()
+
+    t0 = time.perf_counter()
+    blob_rans = cabac.encode_indices(idx, 4, mode="rans")
+    t_enc_rans = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    back = cabac.decode_indices(blob_rans, idx.size, 4)
+    t_dec_rans = time.perf_counter() - t0
+    assert (back == idx).all()
+
+    enc_speedup = t_enc_serial / t_enc_rans
+    dec_speedup = t_dec_serial / t_dec_rans
+    bpe_serial = 8 * len(blob_serial) / idx.size
+    bpe_rans = 8 * len(blob_rans) / idx.size
+    bpe_entropy = estimated_bits_np(idx, 4) / idx.size
+
+    # per-channel vs per-tensor rate at equal N on biased-channel features
+    xc = _biased_channel_features()
+    common = dict(clip_mode="minmax", constrain_cmin_zero=False)
+    grain_bpe = {}
+    for n_levels in (2, 4, 8):
+        tn = calibrate(CodecConfig(n_levels=n_levels, **common), samples=xc)
+        ch = calibrate(CodecConfig(n_levels=n_levels, granularity="channel",
+                                   channel_axis=-1, **common), samples=xc)
+        grain_bpe[n_levels] = {
+            "tensor": tn.compressed_bits_per_element(xc),
+            "channel": ch.compressed_bits_per_element(xc),
+        }
+
+    result = {
+        "n_elements": int(idx.size),
+        "encode_serial_s": t_enc_serial,
+        "decode_serial_s": t_dec_serial,
+        "encode_rans_s": t_enc_rans,
+        "decode_rans_s": t_dec_rans,
+        "encode_speedup": enc_speedup,
+        "decode_speedup": dec_speedup,
+        "encode_Melem_per_s": idx.size / t_enc_rans / 1e6,
+        "bits_per_elem_serial": bpe_serial,
+        "bits_per_elem_rans": bpe_rans,
+        "bits_per_elem_entropy_bound": bpe_entropy,
+        "granularity_bits_per_elem": grain_bpe,
+        "channel_le_tensor": all(v["channel"] <= v["tensor"]
+                                 for v in grain_bpe.values()),
+        "encode_speedup_ge_20x": enc_speedup >= 20.0,
+    }
+    with open("BENCH_codec.json", "w") as f:
+        json.dump(result, f, indent=2)
+
+    rows = [
+        f"codec_encode_serial,{t_enc_serial*1e6:.0f},"
+        f"Melem_s={idx.size/t_enc_serial/1e6:.3f},bpe={bpe_serial:.3f}",
+        f"codec_encode_rans,{t_enc_rans*1e6:.0f},"
+        f"Melem_s={idx.size/t_enc_rans/1e6:.1f},bpe={bpe_rans:.3f},"
+        f"speedup={enc_speedup:.1f}x",
+        f"codec_decode_rans,{t_dec_rans*1e6:.0f},"
+        f"speedup={dec_speedup:.1f}x",
+    ]
+    for n_levels, v in grain_bpe.items():
+        rows.append(f"codec_granularity_N{n_levels},0,"
+                    f"bpe_tensor={v['tensor']:.3f},"
+                    f"bpe_channel={v['channel']:.3f}")
+    return rows
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    print("name,us_per_call,derived")
+    for row in bench_codec(quick=quick):
+        print(row, flush=True)
+
+
+if __name__ == "__main__":
+    main()

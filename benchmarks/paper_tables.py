@@ -112,6 +112,34 @@ def bench_fig8_rd_uniform() -> list[str]:
     return rows
 
 
+def bench_fig8_rd_channel() -> list[str]:
+    """Companion-paper analogue: per-channel (tiled) vs per-tensor RD.
+
+    Channel-minor features with per-channel bias (the BN+ReLU case);
+    both granularities use the same clip mode and real entropy coding, so
+    the rows expose what the per-channel header+ranges buy at equal N.
+    """
+    from .bench_codec import _biased_channel_features
+    rows = []
+    feats = _biased_channel_features(n_rows=8192, n_channels=32)
+    for n in (2, 3, 4, 8):
+        for granularity in ("tensor", "channel"):
+            codec = calibrate(
+                CodecConfig(n_levels=n, clip_mode="minmax",
+                            constrain_cmin_zero=False,
+                            granularity=granularity, channel_axis=-1),
+                samples=feats)
+            t0 = time.perf_counter()
+            blob = codec.encode(feats)
+            us = (time.perf_counter() - t0) * 1e6
+            deq = codec.decode(blob, shape=feats.shape)
+            bpe = 8 * len(blob) / feats.size
+            mse = float(np.mean((feats - deq) ** 2))
+            rows.append(f"fig8_rd_{granularity}_N{n},{us:.0f},"
+                        f"bits_per_elem={bpe:.3f},msre={mse:.4f}")
+    return rows
+
+
 def bench_fig9_10_ecsq() -> list[str]:
     """Figs. 9-10: modified (pinned) vs conventional entropy-constrained
     quantizer across the Lagrangian sweep."""

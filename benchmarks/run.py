@@ -11,6 +11,7 @@ import sys
 
 def main() -> None:
     from . import paper_tables as P
+    from .bench_codec import bench_codec
     from .roofline_table import bench_roofline
 
     sections = {
@@ -18,9 +19,11 @@ def main() -> None:
         "fig5": P.bench_fig2_fig5_curves,
         "fig7": P.bench_fig7_accuracy_proxy,
         "fig8": P.bench_fig8_rd_uniform,
+        "fig8_channel": P.bench_fig8_rd_channel,
         "fig9_10": P.bench_fig9_10_ecsq,
         "complexity": P.bench_complexity,
         "stats_convergence": P.bench_stats_convergence,
+        "codec": bench_codec,
         "roofline": bench_roofline,
     }
     picked = sys.argv[1:] or list(sections)

@@ -4,7 +4,8 @@ Serves a small LM with batched requests where the network is split at the
 collaborative-intelligence boundary: the 'edge' half runs, the boundary
 activations go through the paper's codec (clip + coarse quantize + TU +
 CABAC -- here the in-graph fake-quant with exact rate accounting), and the
-'cloud' half finishes.  Reports, per quantization level:
+'cloud' half finishes.  Reports, per quantization level and calibration
+granularity (per-tensor vs per-channel over d_model):
 
   * bits/element crossing the edge->cloud link (vs 16-bit raw),
   * greedy-token agreement vs the uncompressed model (accuracy proxy).
@@ -45,6 +46,7 @@ def main():
     print("\n=== calibrating codec on split-layer activations ===")
     stats = RunningStats()
     probe = {}
+    probe_samples = []
 
     def probe_fn(x):
         probe["x"] = x
@@ -54,41 +56,48 @@ def main():
     for _, batch in zip(range(4), stream(dcfg)):
         forward(cfg, params, jax.numpy.asarray(batch["tokens"]),
                 codec_fn=probe_fn)
-        stats.update(np.asarray(probe["x"], np.float32))
+        arr = np.asarray(probe["x"], np.float32)
+        stats.update(arr)
+        probe_samples.append(arr.reshape(-1, arr.shape[-1]))
+    samples = np.concatenate(probe_samples)  # (n, d_model): d_model = channels
     print(f"  split activations: mean={stats.mean:.4f} var={stats.var:.4f} "
-          f"({int(stats.count)} samples)")
+          f"({int(stats.count)} samples, {samples.shape[-1]} channels)")
 
     # --- serve with and without the codec ---
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab_size, size=12).astype(np.int32)
                for _ in range(6)]
 
-    def run_engine(codec_fn):
-        eng = ServeEngine(cfg, params, slots=3, max_seq=64,
-                          codec_fn=codec_fn)
+    def run_engine(codec=None):
+        eng = ServeEngine(cfg, params, slots=3, max_seq=64, codec=codec)
         reqs = [Request(prompt=p.copy(), max_new_tokens=12) for p in prompts]
         eng.generate(reqs)
         return [r.out_tokens for r in reqs], eng.rate_log
 
     ref_tokens, _ = run_engine(None)
     print("\n=== split serving: accuracy vs rate (paper Fig. 8 analogue) ===")
-    print(f"  {'N':>3} {'bits/elem':>10} {'vs bf16':>9} {'token agreement':>16}")
-    for n in (2, 3, 4, 8):
-        codec = calibrate(CodecConfig(n_levels=n, clip_mode="model",
-                                      constrain_cmin_zero=False),
-                          sample_mean=stats.mean, sample_var=stats.var)
-
-        def codec_fn(x, _c=codec):
-            return _c.apply(x), _c.estimate_rate(x)
-
-        toks, rates = run_engine(codec_fn)
-        agree = np.mean([np.mean(np.array(a) == np.array(b))
-                         for a, b in zip(toks, ref_tokens)])
-        bpe = float(np.mean(rates))
-        print(f"  {n:>3} {bpe:>10.3f} {16 / max(bpe, 1e-9):>8.1f}x "
-              f"{agree:>15.1%}")
+    print(f"  {'grain':>8} {'N':>3} {'bits/elem':>10} {'vs bf16':>9} "
+          f"{'token agreement':>16}")
+    for granularity in ("tensor", "channel"):
+        for n in (2, 3, 4, 8):
+            ccfg = CodecConfig(n_levels=n, clip_mode="model",
+                               constrain_cmin_zero=False,
+                               granularity=granularity, channel_axis=-1,
+                               channel_group_size=8)
+            if granularity == "tensor":
+                codec = calibrate(ccfg, sample_mean=stats.mean,
+                                  sample_var=stats.var)
+            else:
+                codec = calibrate(ccfg, samples=samples)
+            toks, rates = run_engine(codec)
+            agree = np.mean([np.mean(np.array(a) == np.array(b))
+                             for a, b in zip(toks, ref_tokens)])
+            bpe = float(np.mean(rates))
+            print(f"  {granularity:>8} {n:>3} {bpe:>10.3f} "
+                  f"{16 / max(bpe, 1e-9):>8.1f}x {agree:>15.1%}")
     print("\n(clipping ranges are model-based, calibrated from a few"
-          " hundred samples -- no retraining, as in the paper)")
+          " hundred samples -- no retraining, as in the paper; per-channel"
+          " ranges follow the companion paper's tiled coding)")
 
 
 if __name__ == "__main__":

@@ -8,6 +8,13 @@ and crossed over the inter-pod links with ``lax.ppermute`` -- so the
 inter-pod wire bytes drop by 4-16x vs raw bf16, which the dry-run measures
 directly in the HLO collective-permute sizes.
 
+The codec ops all route through the codec's ``QuantBackend``
+(``repro.core.backend``): inside the jitted superstep body the quantize
+lowers to the fused Pallas clip+quant kernel on TPU and the jnp reference
+on CPU hosts, and per-channel (``granularity="channel"``) codecs work
+unchanged -- the d_model axis is the channel axis, and the per-channel
+range vectors are baked into the program as constants.
+
 Execution model is the paper's *serial* edge->cloud flow expressed in SPMD
 as two supersteps over a shard_map'd 'pod' axis (stage weights are
 pod-sharded; each pod applies its own half):
@@ -37,6 +44,25 @@ from ..configs.base import ModelConfig
 from ..core.codec import FeatureCodec
 from ..models import transformer as T
 from ..models.context import DistContext
+
+
+def _shard_map_pod(body, mesh, in_specs, out_specs):
+    """shard_map over the 'pod' axis only, other mesh axes left automatic.
+
+    jax >= 0.6 exposes this as ``jax.shard_map(..., axis_names=...)``
+    with the other mesh axes left to GSPMD.  Older releases (the pinned
+    container has 0.4.x) only support fully-manual
+    ``jax.experimental.shard_map.shard_map`` reliably (the ``auto=``
+    subgroup mode trips the old SPMD partitioner), so there every axis
+    goes manual: replicated in_specs hand each device the full operand
+    and the body simply runs replicated across data/model shards.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs,
+                             axis_names=frozenset({"pod"}), check_vma=False)
+    from ..models.context import shard_map_compat
+    return shard_map_compat(body, mesh, in_specs, out_specs)
 
 
 def split_supported(cfg: ModelConfig) -> bool:
@@ -86,13 +112,21 @@ def make_split_decode_step(cfg: ModelConfig, mesh, codec: FeatureCodec,
     but full-width transfer, the ablation), or 'raw' (bf16 baseline).
     """
     assert "pod" in mesh.axis_names, "split runtime needs the multi-pod mesh"
-    inner_ctx = DistContext(mesh, ("data",))
+    # Sharding-constraint hints inside the manual 'pod' region are only
+    # understood by the modern shard_map; the 0.4.x auto-subgroup
+    # partitioner rejects full-mesh NamedShardings there, and they are
+    # perf hints, not correctness, so the fallback path drops them.
+    inner_ctx = DistContext(mesh, ("data",)) if hasattr(jax, "shard_map") \
+        else None
     half, tail = stage_layout(cfg)
     d = cfg.d_model
 
-    def body(stages, tail_p, embed, final_norm, head, token, stage_cache,
-             tail_cache, pos):
-        pod = lax.axis_index("pod")
+    def body(pod_arr, stages, tail_p, embed, final_norm, head, token,
+             stage_cache, tail_cache, pos):
+        # pod identity arrives as a pod-sharded iota instead of
+        # lax.axis_index: identical value, but it avoids the PartitionId
+        # instruction that pre-0.6 XLA SPMD rejects under auto axes.
+        pod = pod_arr[0]
         my_layers = jax.tree.map(lambda a: a[0], stages)  # (half, ...)
         base = {"embed": embed, "final_norm": final_norm}
         if head is not None:
@@ -110,6 +144,7 @@ def make_split_decode_step(cfg: ModelConfig, mesh, codec: FeatureCodec,
             x_b = recv
             rate_bits = jnp.float32(jnp.finfo(jnp.bfloat16).bits)
         else:
+            # backend-dispatched: fused Pallas clip+quant on TPU, jnp on CPU
             idx = codec.quantize(y_a)
             if transport == "packed":
                 payload = codec.pack(idx.reshape(-1))
@@ -119,7 +154,7 @@ def make_split_decode_step(cfg: ModelConfig, mesh, codec: FeatureCodec,
                 recv = lax.ppermute(idx, "pod", [(0, 1)])
                 idx_r = recv
             x_b = codec.dequantize(idx_r, dtype=y_a.dtype)
-            rate_bits = codec.estimate_rate(y_a)
+            rate_bits = codec.rate_from_indices(idx, idx.shape)
 
         # ---- superstep B: cloud half ----
         x_in_b = jnp.where(pod == 1, x_b, x)
@@ -147,7 +182,9 @@ def make_split_decode_step(cfg: ModelConfig, mesh, codec: FeatureCodec,
     def step(params, token, caches, pos):
         stage_cache, tail_cache = caches
         head = params.get("head")
-        in_specs = (pod_spec(params["stages"]),
+        n_pods = mesh.shape["pod"]
+        pod_ids = jnp.arange(n_pods, dtype=jnp.int32)
+        in_specs = (P("pod"), pod_spec(params["stages"]),
                     rep(params["tail"]) if params["tail"] is not None else None,
                     rep(params["embed"]), rep(params["final_norm"]),
                     rep(head) if head is not None else None,
@@ -155,11 +192,9 @@ def make_split_decode_step(cfg: ModelConfig, mesh, codec: FeatureCodec,
                     rep(tail_cache) if tail_cache is not None else None, P())
         out_specs = (P(), pod_spec(stage_cache),
                      rep(tail_cache) if tail_cache is not None else None, P())
-        logits, sc, tc, rate = jax.shard_map(
-            body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            axis_names=frozenset({"pod"}),  # other axes stay auto (GSPMD)
-            check_vma=False,
-        )(params["stages"], params["tail"], params["embed"],
+        logits, sc, tc, rate = _shard_map_pod(
+            body, mesh, in_specs, out_specs,
+        )(pod_ids, params["stages"], params["tail"], params["embed"],
           params["final_norm"], head, token, stage_cache, tail_cache, pos)
         return logits, (sc, tc), rate
 

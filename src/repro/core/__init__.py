@@ -9,14 +9,18 @@ Modules:
   binarization  -- truncated-unary bit planes
   cabac         -- adaptive binary arithmetic codec (host, exact round trip)
   rate_model    -- in-graph entropy rate estimation
+  rans          -- vectorized (numpy-batched) rANS plane coder
   stats         -- streaming calibration statistics
+  backend       -- QuantBackend dispatch (Pallas kernels on TPU, jnp on CPU)
   codec         -- FeatureCodec facade tying it all together
 """
 
+from .backend import QuantSpec, get_backend
 from .codec import CodecConfig, FeatureCodec, calibrate
 from .distributions import FeatureModel, resnet50_layer21_model, yolov3_layer12_model
 
 __all__ = [
     "CodecConfig", "FeatureCodec", "calibrate", "FeatureModel",
+    "QuantSpec", "get_backend",
     "resnet50_layer21_model", "yolov3_layer12_model",
 ]

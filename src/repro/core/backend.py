@@ -1,0 +1,228 @@
+"""QuantBackend: one dispatch point for every quantization primitive.
+
+The seed grew three parallel implementations of clip/quantize/histogram --
+inline jnp in ``core``, Pallas kernels in ``repro.kernels`` that nothing
+called, and numpy helpers on the host.  ``FeatureCodec`` (and everything
+above it: split runtime, serving engine, examples) now routes through a
+backend object so the hot path picks the fused Pallas kernels on TPU and
+the plain-jnp reference everywhere else, from a single code path.
+
+Backends implement four primitives over a :class:`QuantSpec`:
+
+    quantize(x, spec)             -> int32 indices
+    dequantize(idx, spec, dtype)  -> reconstructed values
+    quantize_dequantize(x, spec)  -> (indices, reconstruction)  [fused]
+    histogram(idx, n_levels)      -> (n_levels,) int32 counts
+
+Selection: ``get_backend()`` picks "kernel" when JAX's default backend is
+TPU and "jnp" otherwise; override per-codec via ``CodecConfig.backend`` or
+globally with the ``REPRO_QUANT_BACKEND`` environment variable
+("jnp" | "kernel" | "kernel_interpret", the latter forcing the Pallas
+bodies through the interpreter for CPU validation).
+
+Granularity: ``spec.channel_axis is None`` is the paper's per-tensor mode
+(scalar cmin/cmax); otherwise cmin/cmax are per-channel vectors broadcast
+along that axis ("channel" granularity, companion-paper tiling).  The two
+backends produce bit-identical *indices* for both modes (so bitstreams
+and rate accounting never depend on the backend); reconstructions agree
+to ~1 ulp (fma/ordering differences in ``cmin + q*delta``).
+Dequantize-only calls (receiver side) always use the jnp formula --
+there is no dedicated kernel because on-device decode gets the
+reconstruction from the fused quantize_dequantize pass.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import uniform
+
+_CHANNEL_EPS = 1e-12  # degenerate-range guard, shared with the row kernel
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Everything a backend needs to quantize one tensor.
+
+    ``cmin``/``cmax`` are floats (per-tensor) or (C,) arrays broadcast
+    along ``channel_axis`` (per-channel).  ``ecsq`` optionally carries a
+    designed non-uniform quantizer (per-tensor only).
+    """
+
+    cmin: Any
+    cmax: Any
+    n_levels: int
+    channel_axis: int | None = None
+    ecsq: Any = None
+
+    @property
+    def per_channel(self) -> bool:
+        return self.channel_axis is not None
+
+
+def _channel_shape(x_ndim: int, axis: int, n: int) -> tuple[int, ...]:
+    axis = axis % x_ndim
+    shape = [1] * x_ndim
+    shape[axis] = n
+    return tuple(shape)
+
+
+def _broadcast_ranges(x, spec: QuantSpec):
+    cmin = jnp.asarray(spec.cmin, jnp.float32)
+    cmax = jnp.asarray(spec.cmax, jnp.float32)
+    axis = spec.channel_axis % x.ndim
+    if x.shape[axis] != cmin.shape[0]:
+        raise ValueError(
+            f"tensor has {x.shape[axis]} channels on axis {axis}, codec "
+            f"was calibrated for {cmin.shape[0]}")
+    shape = _channel_shape(x.ndim, spec.channel_axis, cmin.shape[0])
+    return cmin.reshape(shape), cmax.reshape(shape)
+
+
+class JnpBackend:
+    """Pure-jnp reference path (CPU default; numerics identical to seed)."""
+
+    name = "jnp"
+
+    def quantize(self, x, spec: QuantSpec):
+        # index-only path: eager host callers (encode/estimate_rate) would
+        # otherwise materialize a discarded reconstruction tensor
+        if spec.ecsq is not None:
+            t = jnp.asarray(spec.ecsq.thresholds, jnp.float32)
+            xc = jnp.clip(x.astype(jnp.float32), spec.cmin, spec.cmax)
+            return jnp.searchsorted(t, xc, side="right").astype(jnp.int32)
+        if not spec.per_channel:
+            return uniform.quantize(x, spec.cmin, spec.cmax, spec.n_levels)
+        cmin, cmax = _broadcast_ranges(x, spec)
+        span = jnp.maximum(cmax - cmin, _CHANNEL_EPS)
+        scale = (spec.n_levels - 1) / span
+        xc = jnp.clip(x.astype(jnp.float32), cmin, cmax)
+        return jnp.floor((xc - cmin) * scale + 0.5).astype(jnp.int32)
+
+    def quantize_dequantize(self, x, spec: QuantSpec):
+        if spec.ecsq is not None:
+            t = jnp.asarray(spec.ecsq.thresholds, jnp.float32)
+            lv = jnp.asarray(spec.ecsq.levels, jnp.float32)
+            xc = jnp.clip(x.astype(jnp.float32), spec.cmin, spec.cmax)
+            idx = jnp.searchsorted(t, xc, side="right").astype(jnp.int32)
+            return idx, lv[idx].astype(x.dtype)
+        if not spec.per_channel:
+            idx = uniform.quantize(x, spec.cmin, spec.cmax, spec.n_levels)
+            deq = uniform.dequantize(idx, spec.cmin, spec.cmax,
+                                     spec.n_levels, dtype=x.dtype)
+            return idx, deq
+        cmin, cmax = _broadcast_ranges(x, spec)
+        span = jnp.maximum(cmax - cmin, _CHANNEL_EPS)
+        scale = (spec.n_levels - 1) / span
+        xc = jnp.clip(x.astype(jnp.float32), cmin, cmax)
+        q = jnp.floor((xc - cmin) * scale + 0.5)
+        idx = q.astype(jnp.int32)
+        deq = (cmin + q * (span / (spec.n_levels - 1))).astype(x.dtype)
+        return idx, deq
+
+    def dequantize(self, idx, spec: QuantSpec, dtype=jnp.float32):
+        if spec.ecsq is not None:
+            lv = jnp.asarray(spec.ecsq.levels, jnp.float32)
+            return lv[idx].astype(dtype)
+        if not spec.per_channel:
+            return uniform.dequantize(idx, spec.cmin, spec.cmax,
+                                      spec.n_levels, dtype=dtype)
+        cmin, cmax = _broadcast_ranges(idx, spec)
+        span = jnp.maximum(cmax - cmin, _CHANNEL_EPS)
+        delta = span / (spec.n_levels - 1)
+        return (cmin + idx.astype(jnp.float32) * delta).astype(dtype)
+
+    def histogram(self, idx, n_levels: int):
+        from .rate_model import index_histogram
+        return index_histogram(idx, n_levels)
+
+
+class KernelBackend:
+    """Pallas-kernel path (TPU hot path; interpretable on CPU).
+
+    Quantization lowers through the fused clip+quant kernels in
+    ``repro.kernels`` (scalar-range or per-row variant); histograms use
+    the on-device reduction kernel.  Falls back to the jnp formulas only
+    where no kernel exists (dequantize-only, N > 16 histograms).
+    """
+
+    name = "kernel"
+
+    def __init__(self, interpret: bool | None = None) -> None:
+        self.interpret = interpret
+        self._jnp = JnpBackend()
+
+    def quantize(self, x, spec: QuantSpec):
+        return self.quantize_dequantize(x, spec)[0]
+
+    def quantize_dequantize(self, x, spec: QuantSpec):
+        from ..kernels import ops
+        if spec.ecsq is not None:
+            return ops.ecsq_quantize(
+                x, jnp.asarray(spec.ecsq.thresholds, jnp.float32),
+                jnp.asarray(spec.ecsq.levels, jnp.float32),
+                cmin=float(spec.cmin), cmax=float(spec.cmax),
+                interpret=self.interpret)
+        if not spec.per_channel:
+            return ops.clip_quantize(x, cmin=float(spec.cmin),
+                                     cmax=float(spec.cmax),
+                                     n_levels=spec.n_levels,
+                                     interpret=self.interpret)
+        axis = spec.channel_axis % x.ndim
+        if x.shape[axis] != np.shape(spec.cmin)[0]:
+            raise ValueError(
+                f"tensor has {x.shape[axis]} channels on axis {axis}, codec "
+                f"was calibrated for {np.shape(spec.cmin)[0]}")
+        return ops.clip_quantize_channels(
+            x, jnp.asarray(spec.cmin, jnp.float32),
+            jnp.asarray(spec.cmax, jnp.float32),
+            n_levels=spec.n_levels, channel_axis=spec.channel_axis,
+            interpret=self.interpret)
+
+    def dequantize(self, idx, spec: QuantSpec, dtype=jnp.float32):
+        return self._jnp.dequantize(idx, spec, dtype=dtype)
+
+    def histogram(self, idx, n_levels: int):
+        from ..kernels import ops
+        from ..kernels.rate_hist import MAX_LEVELS
+        if n_levels > MAX_LEVELS:
+            return self._jnp.histogram(idx, n_levels)
+        return ops.index_histogram(idx, n_levels=n_levels,
+                                   interpret=self.interpret)
+
+
+_BACKENDS: dict[str, Any] = {}
+
+
+def get_backend(name: str | None = None):
+    """Resolve a backend by name, env override, or hardware default."""
+    if name is None:
+        name = os.environ.get("REPRO_QUANT_BACKEND")
+    if name is None:
+        name = "kernel" if jax.default_backend() == "tpu" else "jnp"
+    if name not in _BACKENDS:
+        if name == "jnp":
+            _BACKENDS[name] = JnpBackend()
+        elif name == "kernel":
+            _BACKENDS[name] = KernelBackend()
+        elif name == "kernel_interpret":
+            _BACKENDS[name] = KernelBackend(interpret=True)
+        else:
+            raise ValueError(f"unknown quant backend {name!r}")
+    return _BACKENDS[name]
+
+
+def spec_from_numpy(cmin, cmax, n_levels: int, channel_axis: int | None,
+                    ecsq=None) -> QuantSpec:
+    """Build a QuantSpec from host (numpy/float) calibration state."""
+    if channel_axis is None:
+        return QuantSpec(float(cmin), float(cmax), n_levels, None, ecsq)
+    return QuantSpec(np.asarray(cmin, np.float32),
+                     np.asarray(cmax, np.float32),
+                     n_levels, channel_axis, ecsq)

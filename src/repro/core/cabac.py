@@ -1,20 +1,31 @@
-"""Simplified CABAC: adaptive binary arithmetic coding with one context per
-TU bit position (paper Sec. III-D).
+"""Entropy coding of TU bit planes (paper Sec. III-D).
 
-Implementation is a carry-less binary range coder (Subbotin style) with an
-exponentially-adapting probability state per context -- functionally the
-same structure as the HEVC m-coder but without the LPS lookup tables.  The
-encoder/decoder pair round-trips bit-exactly; rates come out within a few
-percent of the adaptive-entropy bound.
+Two interchangeable host coders sit behind :func:`encode_indices` /
+:func:`decode_indices`:
 
-The coder runs on the host (it is inherently bit-serial; on a real edge
-deployment it runs on the device CPU next to the NN accelerator -- see
-DESIGN.md hardware-adaptation notes).
+  * the seed *serial* coder: a carry-less binary range coder (Subbotin
+    style) with an exponentially-adapting probability state per TU bit
+    position -- functionally the HEVC m-coder without the LPS tables.
+    Bit-serial Python, so it only stays on the hot path for small
+    payloads (< ``_SERIAL_CUTOFF_BITS`` TU bits) where its 4-byte flush
+    beats the vectorized coder's per-lane overhead;
+  * the *vectorized* coder (``repro.core.rans``): numpy-batched
+    interleaved binary rANS over the same planes with chunk-static
+    probabilities.  Same plane structure, same exact round trip, ~two
+    orders of magnitude faster on full activation tensors (measured by
+    ``benchmarks/bench_codec.py``).
+
+A one-byte coder id prefixes the payload so the decoder self-selects.
+Streams written by the seed (no id byte) are still readable through
+:func:`decode_indices_serial`, which ``FeatureCodec.decode`` uses for
+legacy headers.  See DESIGN.md for the layout.
 """
 
 from __future__ import annotations
 
 import numpy as np
+
+from . import rans
 
 _TOP = 1 << 24
 _BOT = 1 << 16
@@ -129,8 +140,15 @@ class BinaryArithmeticDecoder:
                            dtype=np.uint8, count=n_bits)
 
 
-def encode_indices(idx: np.ndarray, n_levels: int) -> bytes:
-    """TU-binarize + CABAC-encode a flat index array (plane-major order)."""
+_CODER_SERIAL = 0
+_CODER_RANS = 1
+# Below this many TU bits the serial coder's 4-byte flush undercuts the
+# vectorized coder's per-lane state overhead, and the python loop is cheap.
+_SERIAL_CUTOFF_BITS = 1 << 16
+
+
+def encode_indices_serial(idx: np.ndarray, n_levels: int) -> bytes:
+    """Seed bit-serial CABAC encode (no coder-id byte): the baseline path."""
     from .binarization import index_to_context_bits
     enc = BinaryArithmeticEncoder(n_contexts=max(n_levels - 1, 1))
     for j, plane in enumerate(index_to_context_bits(idx, n_levels)):
@@ -138,18 +156,62 @@ def encode_indices(idx: np.ndarray, n_levels: int) -> bytes:
     return enc.finish()
 
 
-def decode_indices(data: bytes, n_elems: int, n_levels: int) -> np.ndarray:
-    """Inverse of :func:`encode_indices`."""
+def decode_indices_serial(data: bytes, n_elems: int,
+                          n_levels: int) -> np.ndarray:
+    """Inverse of :func:`encode_indices_serial` (also reads seed streams)."""
     dec = BinaryArithmeticDecoder(data, n_contexts=max(n_levels - 1, 1))
+    return _decode_planes(lambda n, j: dec.decode_plane(n, j),
+                          n_elems, n_levels)
+
+
+def _decode_planes(next_plane, n_elems: int, n_levels: int) -> np.ndarray:
+    """Shared TU plane-to-index reconstruction loop."""
     idx = np.zeros(n_elems, dtype=np.int32)
     alive = np.ones(n_elems, dtype=bool)
     for j in range(n_levels - 1):
         n_alive = int(alive.sum())
         if n_alive == 0:
             break
-        bits = dec.decode_plane(n_alive, j)
+        bits = next_plane(n_alive, j)
         cont = np.zeros(n_elems, dtype=bool)
         cont[alive] = bits.astype(bool)
         idx[cont] += 1
         alive = cont
     return idx
+
+
+def encode_indices(idx: np.ndarray, n_levels: int, mode: str = "auto") -> bytes:
+    """TU-binarize + entropy-code a flat index array (plane-major order).
+
+    ``mode``: "auto" picks the vectorized coder above the size cutoff,
+    "serial" / "rans" force a coder.  The payload starts with a one-byte
+    coder id; :func:`decode_indices` dispatches on it.
+    """
+    from .binarization import index_to_context_bits
+    idx = np.asarray(idx).ravel()
+    planes = index_to_context_bits(idx, n_levels)
+    if mode == "auto":
+        total = sum(p.size for p in planes)
+        mode = "serial" if total < _SERIAL_CUTOFF_BITS else "rans"
+    if mode == "serial":
+        enc = BinaryArithmeticEncoder(n_contexts=max(n_levels - 1, 1))
+        for j, plane in enumerate(planes):
+            enc.encode_plane(plane, j)
+        return bytes([_CODER_SERIAL]) + enc.finish()
+    if mode == "rans":
+        return bytes([_CODER_RANS]) + rans.encode_planes(planes)
+    raise ValueError(f"unknown coder mode {mode!r}")
+
+
+def decode_indices(data: bytes, n_elems: int, n_levels: int) -> np.ndarray:
+    """Inverse of :func:`encode_indices` (reads the coder-id byte)."""
+    if len(data) == 0:
+        raise ValueError("empty bitstream")
+    coder, body = data[0], data[1:]
+    if coder == _CODER_SERIAL:
+        return decode_indices_serial(body, n_elems, n_levels)
+    if coder == _CODER_RANS:
+        dec = rans.PlaneStreamDecoder(body)
+        return _decode_planes(lambda n, j: dec.next_plane(n),
+                              n_elems, n_levels)
+    raise ValueError(f"unknown coder id {coder}")

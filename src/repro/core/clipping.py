@@ -96,3 +96,30 @@ def empirical_optimal_cmax(samples: np.ndarray, n_levels: int, cmin: float = 0.0
         grid = np.linspace(max(cmin + 1e-3, 0.1), float(np.quantile(x, 0.9999)) * 1.5, 200)
     errs = [empirical_e_total(x, cmin, c, n_levels) for c in grid]
     return float(grid[int(np.argmin(errs))])
+
+
+def empirical_optimal_range(samples: np.ndarray, n_levels: int,
+                            steps: int = 24) -> tuple[float, float]:
+    """Two-sided grid search of (c_min, c_max) minimizing measured MSRE.
+
+    The unconstrained analogue of :func:`empirical_optimal_cmax`, used by
+    per-channel calibration where channel supports need not start at 0
+    (BN-biased channels).  A coarse quantile-anchored grid over both ends
+    is plenty: MSRE is smooth in the range and per-channel sample counts
+    are small.
+    """
+    x = np.asarray(samples, dtype=np.float64)
+    lo0, hi0 = float(np.min(x)), float(np.max(x))
+    if hi0 - lo0 < 1e-9:
+        return lo0, lo0 + 1e-6
+    lo_grid = np.linspace(lo0, float(np.quantile(x, 0.5)), steps)
+    hi_grid = np.linspace(float(np.quantile(x, 0.5)), hi0, steps)
+    best = (np.inf, lo0, hi0)
+    for lo in lo_grid:
+        for hi in hi_grid:
+            if hi - lo < 1e-6:
+                continue
+            err = empirical_e_total(x, lo, hi, n_levels)
+            if err < best[0]:
+                best = (err, float(lo), float(hi))
+    return best[1], best[2]

@@ -2,19 +2,31 @@
 first-class framework feature.
 
     clip -> coarse scalar quantize (uniform eq.1 or modified ECSQ Alg.1)
-         -> truncated-unary binarization -> CABAC
+         -> truncated-unary binarization -> entropy coding
 
 Deployment modes:
   * in-graph fake-quant (quantize+dequantize) at a split layer, with an
     in-graph entropy rate estimate -- used inside jitted train/serve steps;
-  * host bitstream encode/decode (exact CABAC round trip) -- used by the
-    split-inference example and codec benchmarks;
+  * host bitstream encode/decode (exact entropy-coder round trip) -- used
+    by the split-inference example and codec benchmarks;
   * packed integer transport -- indices packed to uint8 (2x4bit / 8x1bit)
     for real inter-pod bandwidth reduction in the split runtime.
 
-Side information (header): c_min, c_max, N, element count -- 12 bytes for
-classification-style payloads, matching the paper's accounting; object
-detection adds tensor dims (24 bytes total).
+All quantization primitives route through a :mod:`repro.core.backend`
+``QuantBackend``: the fused Pallas kernels on TPU, the jnp reference path
+on CPU -- one code path for in-graph, host, and kernel execution.
+
+Granularity (companion-paper tiling, arXiv 2105.06002): per-tensor mode
+uses one (c_min, c_max); per-channel mode calibrates a range per channel
+group along ``channel_axis`` and records the group table in the bitstream
+header, so heterogeneous channels (BN-biased / differently-scaled feature
+maps) neither waste levels nor blow up the coded rate.
+
+Side information (header): c_min, c_max, N, flags, element count --
+16 bytes for classification-style payloads, matching the paper's
+accounting.  Flags extend the header with the ECSQ reconstruction table
+and/or the per-channel table (tensor dims + group ranges) so a receiver
+decodes with *no* shared calibration state; see DESIGN.md for the layout.
 """
 
 from __future__ import annotations
@@ -26,15 +38,22 @@ from typing import Literal
 import jax.numpy as jnp
 import numpy as np
 
-from . import aciq, cabac, clipping, uniform
+from . import aciq, cabac, clipping
+from .backend import QuantSpec, get_backend, spec_from_numpy
 from .distributions import FeatureModel
 from .ecsq import ECSQQuantizer, design_ecsq
-from .rate_model import estimated_bits_per_element
+from .rate_model import estimated_bits_from_hist
 from .stats import RunningStats
 
-ClipMode = Literal["model", "empirical", "aciq", "manual"]
+ClipMode = Literal["model", "empirical", "aciq", "manual", "minmax"]
+Granularity = Literal["tensor", "channel"]
 
 _HEADER_FMT = "<ffHHI"  # cmin, cmax, n_levels, flags, n_elems  (16 bytes)
+_CHANNEL_EXT_FMT = "<BBHH"  # ndim, channel_axis, group_size, n_groups
+
+FLAG_ECSQ = 1      # ECSQ quantizer; v2 streams append the level table
+FLAG_CHANNEL = 2   # per-channel granularity; header carries the group table
+FLAG_V2 = 4        # payload starts with a coder-id byte (serial | rans)
 
 
 @dataclasses.dataclass
@@ -49,42 +68,93 @@ class CodecConfig:
     ecsq_pin_boundaries: bool = True
     manual_cmin: float = 0.0
     manual_cmax: float = 1.0
+    granularity: Granularity = "tensor"
+    channel_axis: int = -1
+    channel_group_size: int = 1
+    backend: str | None = None  # None = auto (kernel on TPU, jnp on CPU)
 
 
 @dataclasses.dataclass
 class FeatureCodec:
-    """Calibrated codec instance.  Build with :func:`calibrate`."""
+    """Calibrated codec instance.  Build with :func:`calibrate`.
+
+    Per-tensor mode: ``cmin``/``cmax`` are floats.  Per-channel mode:
+    they are (n_groups,) float32 vectors (group g covers channels
+    ``g*group_size .. (g+1)*group_size-1`` along ``config.channel_axis``)
+    and ``n_channels`` records the calibrated channel count.
+    """
 
     config: CodecConfig
-    cmin: float
-    cmax: float
+    cmin: float | np.ndarray
+    cmax: float | np.ndarray
     model: FeatureModel | None = None
     ecsq: ECSQQuantizer | None = None
+    n_channels: int | None = None
+
+    # -- backend routing --------------------------------------------------------
+
+    @property
+    def backend(self):
+        return get_backend(self.config.backend)
+
+    @property
+    def per_channel(self) -> bool:
+        return self.n_channels is not None
+
+    def channel_ranges(self) -> tuple[np.ndarray, np.ndarray]:
+        """Per-channel (cmin, cmax) vectors, group table expanded."""
+        if not self.per_channel:
+            raise ValueError("per-tensor codec has no channel table")
+        gs = max(1, self.config.channel_group_size)
+        lo = np.repeat(np.asarray(self.cmin, np.float32), gs)[:self.n_channels]
+        hi = np.repeat(np.asarray(self.cmax, np.float32), gs)[:self.n_channels]
+        return lo, hi
+
+    def spec(self) -> QuantSpec:
+        """The backend-facing view of this codec's quantizer."""
+        if not self.per_channel:
+            return spec_from_numpy(self.cmin, self.cmax,
+                                   self.config.n_levels, None, self.ecsq)
+        lo, hi = self.channel_ranges()
+        return spec_from_numpy(lo, hi, self.config.n_levels,
+                               self.config.channel_axis, None)
 
     # -- in-graph ops ---------------------------------------------------------
 
     def quantize(self, x):
-        """x -> int32 indices (jnp). ECSQ uses designed thresholds."""
-        if self.ecsq is not None:
-            t = jnp.asarray(self.ecsq.thresholds, dtype=jnp.float32)
-            xc = jnp.clip(x.astype(jnp.float32), self.cmin, self.cmax)
-            return jnp.searchsorted(t, xc, side="right").astype(jnp.int32)
-        return uniform.quantize(x, self.cmin, self.cmax, self.config.n_levels)
+        """x -> int32 indices (backend-dispatched: Pallas on TPU, jnp on CPU)."""
+        return self.backend.quantize(x, self.spec())
 
     def dequantize(self, idx, dtype=jnp.float32):
-        if self.ecsq is not None:
-            levels = jnp.asarray(self.ecsq.levels, dtype=jnp.float32)
-            return levels[idx].astype(dtype)
-        return uniform.dequantize(idx, self.cmin, self.cmax,
-                                  self.config.n_levels, dtype=dtype)
+        return self.backend.dequantize(idx, self.spec(), dtype=dtype)
 
     def apply(self, x):
-        """Fake-quant pass-through preserving dtype (the split-layer op)."""
-        return self.dequantize(self.quantize(x), dtype=x.dtype)
+        """Fake-quant pass-through preserving dtype (the split-layer op).
+
+        Uses the fused quantize+dequantize primitive: a single kernel pass
+        on the TPU path.
+        """
+        return self.backend.quantize_dequantize(x, self.spec())[1]
 
     def estimate_rate(self, x):
-        """Bits/element the CABAC stage would need (in-graph, entropy bound)."""
-        return estimated_bits_per_element(self.quantize(x), self.config.n_levels)
+        """Bits/element the entropy stage would need (in-graph bound)."""
+        idx = self.quantize(x)
+        return self.rate_from_indices(idx, np.shape(x))
+
+    def rate_from_indices(self, idx, shape):
+        hist = self.backend.histogram(idx, self.config.n_levels)
+        n = max(int(np.prod(shape)), 1)
+        return estimated_bits_from_hist(hist, self.config.n_levels) / n
+
+    def apply_with_rate(self, x):
+        """(fake-quant x, rate bits/element) from one quantization pass.
+
+        The split-layer serving hook: quantizes once (one fused kernel on
+        the TPU path) and derives both the pass-through activations and
+        the rate estimate from it.
+        """
+        idx, deq = self.backend.quantize_dequantize(x, self.spec())
+        return deq, self.rate_from_indices(idx, np.shape(x))
 
     # -- packed transport (inter-pod) ------------------------------------------
 
@@ -93,12 +163,20 @@ class FeatureCodec:
         return max(1, int(np.ceil(np.log2(n))))
 
     def pack(self, idx):
-        """Pack int32 indices into uint8 lanes (2x4b or 8x1b per byte)."""
+        """Pack int32 indices into uint8 lanes (2x4b or 8x1b per byte).
+
+        Sizes that do not fill the last byte are zero-padded; ``unpack``
+        truncates back to the element count.
+        """
         bits = self.bits_per_index()
         per = 8 // bits if bits in (1, 2, 4) else 1
         if per == 1:
             return idx.astype(jnp.uint8)
-        flat = idx.reshape(-1, per).astype(jnp.uint8)
+        flat = idx.reshape(-1)
+        pad = (-flat.shape[0]) % per
+        if pad:
+            flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+        flat = flat.reshape(-1, per).astype(jnp.uint8)
         shifts = jnp.arange(per, dtype=jnp.uint8) * bits
         return jnp.sum(flat << shifts, axis=-1).astype(jnp.uint8)
 
@@ -114,39 +192,108 @@ class FeatureCodec:
 
     # -- host bitstream ---------------------------------------------------------
 
-    def encode(self, x: np.ndarray) -> bytes:
-        """Full host encode: clip+quantize+TU+CABAC with header."""
-        idx = np.asarray(self.quantize(jnp.asarray(np.asarray(x, np.float32))))
-        payload = cabac.encode_indices(idx.ravel(), self.config.n_levels)
-        flags = 1 if self.ecsq is not None else 0
-        header = struct.pack(_HEADER_FMT, self.cmin, self.cmax,
-                             self.config.n_levels, flags, idx.size)
+    def _header(self, x: np.ndarray) -> tuple[bytes, int]:
+        """Self-describing header for ``x``; returns (bytes, flags)."""
+        flags = FLAG_V2
+        ext = b""
+        if self.ecsq is not None:
+            flags |= FLAG_ECSQ
+            ext += np.asarray(self.ecsq.levels, "<f4").tobytes()
+        if self.per_channel:
+            flags |= FLAG_CHANNEL
+            axis = self.config.channel_axis % x.ndim
+            if x.shape[axis] != self.n_channels:
+                raise ValueError(
+                    f"axis {axis} has {x.shape[axis]} channels, codec was "
+                    f"calibrated for {self.n_channels}")
+            lo = np.asarray(self.cmin, "<f4")
+            hi = np.asarray(self.cmax, "<f4")
+            ext += struct.pack(_CHANNEL_EXT_FMT, x.ndim, axis,
+                               max(1, self.config.channel_group_size),
+                               lo.size)
+            ext += np.asarray(x.shape, "<u4").tobytes()
+            ext += np.stack([lo, hi], axis=-1).tobytes()
+            head_lo, head_hi = float(lo.min()), float(hi.max())
+        else:
+            head_lo, head_hi = float(self.cmin), float(self.cmax)
+        base = struct.pack(_HEADER_FMT, head_lo, head_hi,
+                           self.config.n_levels, flags, int(np.prod(x.shape)))
+        return base + ext, flags
+
+    def encode(self, x: np.ndarray, coder_mode: str = "auto") -> bytes:
+        """Full host encode: clip+quantize+TU+entropy coding with header."""
+        x = np.asarray(x, np.float32)
+        idx = np.asarray(self.quantize(jnp.asarray(x)))
+        header, _ = self._header(x)
+        payload = cabac.encode_indices(idx.ravel(), self.config.n_levels,
+                                       mode=coder_mode)
         return header + payload
 
     def decode(self, data: bytes, shape=None) -> np.ndarray:
-        cmin, cmax, n_levels, flags, n_elems = struct.unpack_from(_HEADER_FMT, data)
-        idx = cabac.decode_indices(data[struct.calcsize(_HEADER_FMT):],
-                                   n_elems, n_levels)
-        out = np.asarray(self.dequantize(jnp.asarray(idx)))
-        return out.reshape(shape) if shape is not None else out
+        """Decode a bitstream using *its own header* for dequantization.
+
+        A receiver-side codec needs no matching calibration state: the
+        clipping range(s), level count, ECSQ table, and channel layout all
+        come from the stream.  (Exception: legacy seed streams with the
+        ECSQ flag predate the level table and fall back to this instance's
+        designed quantizer.)
+        """
+        cmin, cmax, n_levels, flags, n_elems = struct.unpack_from(
+            _HEADER_FMT, data)
+        off = struct.calcsize(_HEADER_FMT)
+
+        levels = None
+        if flags & FLAG_ECSQ and flags & FLAG_V2:
+            levels = np.frombuffer(data, "<f4", n_levels, off)
+            off += 4 * n_levels
+        dims = None
+        spec = None
+        if flags & FLAG_CHANNEL:
+            ndim, axis, gsize, ngroups = struct.unpack_from(
+                _CHANNEL_EXT_FMT, data, off)
+            off += struct.calcsize(_CHANNEL_EXT_FMT)
+            dims = tuple(int(d) for d in np.frombuffer(data, "<u4", ndim, off))
+            off += 4 * ndim
+            table = np.frombuffer(data, "<f4", 2 * ngroups, off) \
+                .reshape(ngroups, 2)
+            off += 8 * ngroups
+            lo = np.repeat(table[:, 0], gsize)[:dims[axis]]
+            hi = np.repeat(table[:, 1], gsize)[:dims[axis]]
+            spec = spec_from_numpy(lo, hi, n_levels, axis)
+
+        if flags & FLAG_V2:
+            idx = cabac.decode_indices(data[off:], n_elems, n_levels)
+        else:  # seed stream: bare serial-CABAC payload
+            idx = cabac.decode_indices_serial(data[off:], n_elems, n_levels)
+
+        if levels is not None:
+            out = levels[idx].astype(np.float32)
+        elif flags & FLAG_ECSQ:  # legacy ECSQ stream without a level table
+            if self.ecsq is None:
+                raise ValueError("legacy ECSQ stream needs a calibrated codec")
+            out = np.asarray(self.ecsq.levels, np.float32)[idx]
+        elif spec is not None:
+            out = np.asarray(self.backend.dequantize(
+                jnp.asarray(idx.reshape(dims)), spec))
+        else:
+            out = np.asarray(self.backend.dequantize(
+                jnp.asarray(idx), QuantSpec(cmin, cmax, n_levels)))
+        if shape is not None:
+            return out.reshape(shape)
+        return out.reshape(dims) if dims is not None else out
 
     def compressed_bits_per_element(self, x: np.ndarray) -> float:
         data = self.encode(x)
         return 8.0 * len(data) / np.asarray(x).size
 
 
-def calibrate(config: CodecConfig,
-              samples: np.ndarray | None = None,
-              stats: RunningStats | None = None,
-              sample_mean: float | None = None,
-              sample_var: float | None = None) -> FeatureCodec:
-    """Build a codec from calibration data or pre-computed stats.
-
-    ``model`` / ``aciq`` modes need only (mean, var) / samples respectively;
-    ``empirical`` grid-searches measured MSRE like the paper's empirical
-    columns; ECSQ additionally runs Algorithm 1 on the samples.
-    """
-    cfg = config
+def _calibrate_range(cfg: CodecConfig,
+                     samples: np.ndarray | None = None,
+                     stats: RunningStats | None = None,
+                     sample_mean: float | None = None,
+                     sample_var: float | None = None):
+    """One (cmin, cmax, model) from calibration data -- the scalar core
+    reused per channel group in per-channel mode."""
     model = None
     if cfg.clip_mode == "manual":
         cmin, cmax = cfg.manual_cmin, cfg.manual_cmax
@@ -157,7 +304,8 @@ def calibrate(config: CodecConfig,
                     raise ValueError("model mode needs samples or stats")
                 stats = RunningStats().update(np.asarray(samples))
             sample_mean, sample_var = stats.mean, stats.var
-        model = FeatureModel.fit(sample_mean, sample_var, cfg.kappa, cfg.leaky_slope)
+        model = FeatureModel.fit(sample_mean, sample_var, cfg.kappa,
+                                 cfg.leaky_slope)
         if cfg.constrain_cmin_zero:
             cmin, cmax = 0.0, clipping.optimal_cmax(model, cfg.n_levels)
         else:
@@ -170,11 +318,70 @@ def calibrate(config: CodecConfig,
     elif cfg.clip_mode == "empirical":
         if samples is None:
             raise ValueError("empirical mode needs samples")
-        cmin = 0.0
-        cmax = clipping.empirical_optimal_cmax(np.asarray(samples), cfg.n_levels)
+        if cfg.constrain_cmin_zero:
+            cmin = 0.0
+            cmax = clipping.empirical_optimal_cmax(np.asarray(samples),
+                                                   cfg.n_levels)
+        else:
+            cmin, cmax = clipping.empirical_optimal_range(np.asarray(samples),
+                                                          cfg.n_levels)
+    elif cfg.clip_mode == "minmax":
+        if samples is None:
+            raise ValueError("minmax mode needs samples")
+        s = np.asarray(samples)
+        cmax = float(s.max())
+        # pin cmin to 0 only when the data actually lives above it; an
+        # all-negative channel would otherwise degenerate to [0, ~0]
+        cmin = 0.0 if cfg.constrain_cmin_zero and cmax > 0.0 \
+            else float(s.min())
     else:
         raise ValueError(f"unknown clip mode {cfg.clip_mode}")
+    if cmax <= cmin:
+        cmax = cmin + 1e-6
+    return float(cmin), float(cmax), model
 
+
+def calibrate(config: CodecConfig,
+              samples: np.ndarray | None = None,
+              stats: RunningStats | None = None,
+              sample_mean: float | None = None,
+              sample_var: float | None = None) -> FeatureCodec:
+    """Build a codec from calibration data or pre-computed stats.
+
+    ``model`` / ``aciq`` modes need only (mean, var) / samples respectively;
+    ``empirical`` grid-searches measured MSRE like the paper's empirical
+    columns; ``minmax`` uses the sample extremes; ECSQ additionally runs
+    Algorithm 1 on the samples.
+
+    Per-channel granularity calibrates every channel group independently
+    (``samples`` must then carry the channel axis) and returns group
+    vectors in ``cmin``/``cmax``.
+    """
+    cfg = config
+    if cfg.granularity == "channel":
+        if cfg.use_ecsq:
+            raise ValueError("ECSQ design is per-tensor only; use "
+                             "granularity='tensor'")
+        if samples is None:
+            raise ValueError("channel granularity needs calibration samples "
+                             "with the channel axis present")
+        arr = np.asarray(samples)
+        axis = cfg.channel_axis % arr.ndim
+        n_channels = arr.shape[axis]
+        per_ch = np.moveaxis(arr, axis, 0).reshape(n_channels, -1)
+        gs = max(1, cfg.channel_group_size)
+        lo, hi = [], []
+        for g in range(0, n_channels, gs):
+            cmin_g, cmax_g, _ = _calibrate_range(cfg, per_ch[g:g + gs].ravel())
+            lo.append(cmin_g)
+            hi.append(cmax_g)
+        return FeatureCodec(config=cfg,
+                            cmin=np.asarray(lo, np.float32),
+                            cmax=np.asarray(hi, np.float32),
+                            n_channels=n_channels)
+
+    cmin, cmax, model = _calibrate_range(cfg, samples, stats,
+                                         sample_mean, sample_var)
     ecsq_q = None
     if cfg.use_ecsq:
         if samples is None:
@@ -182,5 +389,5 @@ def calibrate(config: CodecConfig,
         ecsq_q = design_ecsq(np.asarray(samples), cfg.n_levels,
                              cfg.ecsq_lagrangian, cmin, cmax,
                              pin_boundaries=cfg.ecsq_pin_boundaries)
-    return FeatureCodec(config=cfg, cmin=float(cmin), cmax=float(cmax),
+    return FeatureCodec(config=cfg, cmin=cmin, cmax=cmax,
                         model=model, ecsq=ecsq_q)

@@ -38,6 +38,38 @@ class ECSQQuantizer:
     def n_levels(self) -> int:
         return len(self.levels)
 
+    @classmethod
+    def from_levels(cls, levels: np.ndarray, lagrangian: float = 0.0,
+                    codeword_lengths: np.ndarray | None = None
+                    ) -> "ECSQQuantizer":
+        """Rebuild a usable quantizer from a reconstruction-level table.
+
+        The bitstream header stores only the levels (that is all a
+        receiver needs to dequantize); this reconstructs the matching
+        decision thresholds -- Step 6's stationarity formula, reducing to
+        midpoints when ``lagrangian`` is 0 -- so a receiver-side codec can
+        also *re-encode* without the original calibration samples.
+        """
+        lv = np.asarray(levels, dtype=np.float64).ravel()
+        n = lv.size
+        if codeword_lengths is None:
+            codeword_lengths = truncated_unary_lengths(n)
+        b = np.asarray(codeword_lengths, dtype=np.float64)
+        thresholds = np.empty(max(n - 1, 0), dtype=np.float64)
+        for i in range(1, n):
+            gap = lv[i] - lv[i - 1]
+            if gap <= 1e-12:
+                thresholds[i - 1] = lv[i]
+            else:
+                thresholds[i - 1] = (lv[i] + lv[i - 1]) / 2.0 \
+                    + lagrangian * (b[i] - b[i - 1]) / (2.0 * gap)
+        thresholds = np.maximum.accumulate(
+            np.clip(thresholds, lv[0], lv[-1])) if n > 1 else thresholds
+        return cls(levels=lv, thresholds=thresholds,
+                   codeword_lengths=b.astype(np.int32),
+                   lagrangian=lagrangian, cmin=float(lv[0]),
+                   cmax=float(lv[-1]))
+
     def quantize_np(self, x: np.ndarray) -> np.ndarray:
         xc = np.clip(x, self.cmin, self.cmax)
         return np.searchsorted(self.thresholds, xc, side="right").astype(np.int32)

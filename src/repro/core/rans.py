@@ -1,0 +1,184 @@
+"""Vectorized entropy coder for TU bit planes (numpy batched rANS).
+
+The seed CABAC (``cabac.BinaryArithmeticEncoder``) is bit-serial Python:
+fine for correctness, orders of magnitude too slow for full activation
+tensors.  This module codes the same position-major TU bit planes with an
+*interleaved binary rANS* coder whose per-step state updates run batched
+over numpy lanes, so host encode/decode cost is a short python loop over
+``total_bits / lanes`` steps of vector ops instead of one python iteration
+per bit.
+
+Design (see DESIGN.md for the full layout):
+
+  * One shared coder state of L lanes (L a power of two derived from the
+    total bit count) codes the concatenation of all planes; bit i of the
+    stream lives in lane ``i % L`` at step ``i // L``.
+  * Each plane starts at a fresh step (planes are padded to a step
+    boundary with their most-probable symbol) so a step never straddles
+    two planes and the decoder -- which only learns plane j+1's length
+    after decoding plane j -- always knows the active probability.
+  * Probabilities are *chunk-static*: each plane is cut into spans of
+    ``_CHUNK_STEPS`` steps; the encoder stores one 16-bit scaled
+    probability per span (measured on the span's real bits).  This
+    replaces CABAC's serial per-bit adaptation with side information of
+    ~2 bytes per 256*L bits while coding at the span-local empirical
+    entropy, which is what the adaptive coder converges to anyway.
+  * rANS details: 32-bit states renormalized 16 bits at a time
+    (``x in [2^16, 2^32)``), probability scale 2^14.  Encoding runs over
+    steps in reverse with per-step emissions reversed lane-wise, so the
+    byte-reversed word stream is exactly what the forward decoder
+    consumes -- the standard interleaved-rANS construction, batched.
+
+Round trips are exact for any bit content; rates sit within a percent or
+two of the adaptive coder for stationary planes (see bench_codec.py).
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+_PROB_BITS = 14
+_M = 1 << _PROB_BITS                   # probability scale (f0 + f1 = _M)
+_STATE_LO = np.uint64(1 << 16)         # renormalized state lower bound
+_CHUNK_STEPS = 256                     # steps per static-probability span
+_HEADER_FMT = "<HI"                    # lanes, n_ftable_entries
+
+_U16 = np.uint64(16)
+_S64 = np.uint64(_PROB_BITS)
+_EMIT_SHIFT = np.uint64(32 - _PROB_BITS)
+_MASK_S = np.uint64(_M - 1)
+_MASK_W = np.uint64(0xFFFF)
+
+
+def lane_count(total_bits: int) -> int:
+    """Lanes used for a stream of ``total_bits`` (both sides derive this).
+
+    ~2048 bits per lane keeps the python step loop short while the fixed
+    per-lane cost (4-byte state flush) stays a tiny fraction of the
+    payload; clipped to [4, 1024].
+    """
+    return int(min(1024, max(4, 1 << (total_bits // 2048).bit_length())))
+
+
+def _chunk_freqs(bits: np.ndarray, chunk_bits: int) -> np.ndarray:
+    """Scaled P(bit=1) per chunk of ``chunk_bits``, measured on real bits."""
+    n = bits.size
+    nch = -(-n // chunk_bits)
+    bounds = np.arange(nch, dtype=np.int64) * chunk_bits
+    ones = np.add.reduceat(bits.astype(np.int64), bounds)
+    sizes = np.minimum(bounds + chunk_bits, n) - bounds
+    f1 = np.rint(ones / sizes * _M)
+    return np.clip(f1, 1, _M - 1).astype(np.uint32)
+
+
+def encode_planes(planes: list[np.ndarray]) -> bytes:
+    """Encode TU bit planes (uint8 0/1 arrays) into one rANS stream."""
+    planes = [np.asarray(p, dtype=np.uint8).ravel() for p in planes]
+    total_bits = int(sum(p.size for p in planes))
+    if total_bits == 0:
+        return struct.pack(_HEADER_FMT, 0, 0)
+    lanes = lane_count(total_bits)
+
+    ftab = []          # per-chunk scaled probabilities, plane-major
+    step_rows = []     # (steps_i, lanes) padded bit matrices
+    step_f1 = []       # per-step probability (uint32)
+    for p in planes:
+        if p.size == 0:
+            continue
+        steps = -(-p.size // lanes)
+        f1c = _chunk_freqs(p, _CHUNK_STEPS * lanes)
+        ftab.append(f1c.astype(np.uint16))
+        pad = steps * lanes - p.size
+        if pad:
+            mps = 1 if int(f1c[-1]) >= _M // 2 else 0
+            p = np.concatenate([p, np.full(pad, mps, np.uint8)])
+        step_rows.append(p.reshape(steps, lanes))
+        step_f1.append(np.repeat(f1c, _CHUNK_STEPS)[:steps])
+
+    bits2d = np.concatenate(step_rows, axis=0)
+    f1_steps = np.concatenate(step_f1)
+    ftab = np.concatenate(ftab)
+    n_steps = bits2d.shape[0]
+
+    x = np.full(lanes, _STATE_LO, dtype=np.uint64)
+    emitted = []       # encode-order word bursts (reversed lane order)
+    zero = np.uint64(0)
+    for t in range(n_steps - 1, -1, -1):
+        f1 = np.uint64(f1_steps[t])
+        f0 = np.uint64(_M) - f1
+        ones = bits2d[t] == 1
+        f = np.where(ones, f1, f0)
+        c = np.where(ones, f0, zero)
+        over = x >= (f << _EMIT_SHIFT)
+        if over.any():
+            emitted.append((x[over] & _MASK_W).astype(np.uint16)[::-1])
+            x[over] >>= _U16
+        q = x // f
+        x = (q << _S64) + (x - q * f) + c
+
+    if emitted:
+        words = np.concatenate(emitted)[::-1]
+    else:
+        words = np.empty(0, dtype=np.uint16)
+    return (struct.pack(_HEADER_FMT, lanes, ftab.size)
+            + ftab.astype("<u2").tobytes()
+            + x.astype("<u4").tobytes()
+            + words.astype("<u2").tobytes())
+
+
+class PlaneStreamDecoder:
+    """Forward decoder over a stream produced by :func:`encode_planes`.
+
+    Planes are pulled one at a time with :meth:`next_plane`; the caller
+    supplies each plane's bit count (the TU structure makes it computable
+    from previously decoded planes, so it is not stored).
+    """
+
+    def __init__(self, data: bytes) -> None:
+        lanes, n_ftab = struct.unpack_from(_HEADER_FMT, data)
+        off = struct.calcsize(_HEADER_FMT)
+        self.lanes = lanes
+        self._ftab = np.frombuffer(data, "<u2", n_ftab, off)
+        off += 2 * n_ftab
+        self._fpos = 0
+        if lanes:
+            self._x = np.frombuffer(data, "<u4", lanes, off).astype(np.uint64)
+            off += 4 * lanes
+        self._words = np.frombuffer(data, "<u2", -1, off).astype(np.uint64)
+        self._wpos = 0
+
+    def next_plane(self, n_bits: int) -> np.ndarray:
+        if n_bits == 0:
+            return np.empty(0, dtype=np.uint8)
+        if self.lanes == 0:
+            raise ValueError("empty stream cannot hold a non-empty plane")
+        lanes = self.lanes
+        steps = -(-n_bits // lanes)
+        nch = -(-steps // _CHUNK_STEPS)
+        f1c = self._ftab[self._fpos:self._fpos + nch]
+        if f1c.size != nch:
+            raise ValueError("truncated probability table")
+        self._fpos += nch
+
+        x = self._x
+        words, wpos = self._words, self._wpos
+        out = np.empty((steps, lanes), dtype=np.uint8)
+        zero = np.uint64(0)
+        for t in range(steps):
+            f1 = np.uint64(f1c[t // _CHUNK_STEPS])
+            f0 = np.uint64(_M) - f1
+            xm = x & _MASK_S
+            bit = xm >= f0
+            f = np.where(bit, f1, f0)
+            c = np.where(bit, f0, zero)
+            x = f * (x >> _S64) + xm - c
+            low = x < _STATE_LO
+            k = int(low.sum())
+            if k:
+                x[low] = (x[low] << _U16) | words[wpos:wpos + k]
+                wpos += k
+            out[t] = bit
+        self._x, self._wpos = x, wpos
+        return out.reshape(-1)[:n_bits]

@@ -50,3 +50,43 @@ def clip_quant_2d(x, cmin: float, cmax: float, n_levels: int,
                    jax.ShapeDtypeStruct((r, c), x.dtype)],
         interpret=interpret,
     )(x)
+
+
+def _kernel_rows(x_ref, cmin_ref, cmax_ref, idx_ref, deq_ref, *,
+                 n_levels: int):
+    """Per-row clipping ranges: row r of the block uses (cmin[r], cmax[r]).
+
+    Used for the codec's per-channel granularity with the tensor laid out
+    channel-major; the (br, 1) range columns broadcast against the
+    (br, bc) data block on the VPU, so the fused pass stays a single
+    HBM read like the scalar-range kernel.
+    """
+    x = x_ref[...].astype(jnp.float32)
+    cmin = cmin_ref[...].astype(jnp.float32)        # (br, 1)
+    cmax = cmax_ref[...].astype(jnp.float32)
+    span = jnp.maximum(cmax - cmin, 1e-12)
+    scale = (n_levels - 1) / span
+    xc = jnp.clip(x, cmin, cmax)
+    q = jnp.floor((xc - cmin) * scale + 0.5)        # round-half-away (q >= 0)
+    idx_ref[...] = q.astype(jnp.int32)
+    deq_ref[...] = (cmin + q * (span / (n_levels - 1))).astype(deq_ref.dtype)
+
+
+def clip_quant_rows_2d(x, cmin, cmax, n_levels: int, block=DEFAULT_BLOCK,
+                       interpret: bool = False):
+    """x: (R, C) block-aligned; cmin/cmax: (R, 1) float32 per-row ranges."""
+    r, c = x.shape
+    br, bc = min(block[0], r), min(block[1], c)
+    grid = (r // br, c // bc)
+    return pl.pallas_call(
+        functools.partial(_kernel_rows, n_levels=n_levels),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+                  pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
+                  pl.BlockSpec((br, 1), lambda i, j: (i, 0))],
+        out_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+                   pl.BlockSpec((br, bc), lambda i, j: (i, j))],
+        out_shape=[jax.ShapeDtypeStruct((r, c), jnp.int32),
+                   jax.ShapeDtypeStruct((r, c), x.dtype)],
+        interpret=interpret,
+    )(x, cmin, cmax)

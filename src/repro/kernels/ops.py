@@ -16,7 +16,7 @@ import numpy as np
 
 from . import ref
 from .ecsq_assign import ecsq_assign_2d
-from .fused_clip_quant import clip_quant_2d
+from .fused_clip_quant import clip_quant_2d, clip_quant_rows_2d
 from .rate_hist import index_histogram_2d
 
 _LANE = 128
@@ -60,6 +60,46 @@ def clip_quantize(x, *, cmin: float, cmax: float, n_levels: int,
     shape = x.shape
     return (idx.reshape(-1)[:n].reshape(shape),
             deq.reshape(-1)[:n].reshape(shape))
+
+
+@functools.partial(jax.jit, static_argnames=("n_levels", "channel_axis",
+                                             "interpret"))
+def clip_quantize_channels(x, cmin, cmax, *, n_levels: int,
+                           channel_axis: int = -1,
+                           interpret: bool | None = None):
+    """Per-channel fused clip+quantize+dequantize (tiled granularity).
+
+    ``cmin``/``cmax`` are (C,) vectors for axis ``channel_axis`` of ``x``.
+    The tensor is viewed channel-major as (C, M); each row is coded with
+    its own range by the per-row kernel.  Rows pad to the sublane multiple
+    with a dummy [0, 1] range, columns to the 128-lane multiple.
+    """
+    interpret = _on_cpu() if interpret is None else interpret
+    axis = channel_axis % x.ndim
+    xm = jnp.moveaxis(x, axis, 0)
+    moved_shape = xm.shape
+    ch = moved_shape[0]
+    x2 = xm.reshape(ch, -1)
+    m = x2.shape[1]
+
+    cols = max(_LANE, ((m + _LANE - 1) // _LANE) * _LANE)
+    if cols > 512:
+        cols = ((cols + 511) // 512) * 512
+    align = _ROW if ch <= 256 else 256
+    rows = ((ch + align - 1) // align) * align
+
+    xp = jnp.zeros((rows, cols), x.dtype).at[:ch, :m].set(x2)
+    lo = jnp.zeros((rows, 1), jnp.float32) \
+        .at[:ch, 0].set(cmin.astype(jnp.float32))
+    hi = jnp.ones((rows, 1), jnp.float32) \
+        .at[:ch, 0].set(cmax.astype(jnp.float32))
+    br = min(256, rows)
+    idx, deq = clip_quant_rows_2d(xp, lo, hi, n_levels,
+                                  block=(br, min(512, cols)),
+                                  interpret=interpret)
+    idx = jnp.moveaxis(idx[:ch, :m].reshape(moved_shape), 0, axis)
+    deq = jnp.moveaxis(deq[:ch, :m].reshape(moved_shape), 0, axis)
+    return idx, deq
 
 
 @functools.partial(jax.jit, static_argnames=("cmin", "cmax", "interpret"))

@@ -36,16 +36,15 @@ def main():
         cfg = reduced(cfg)
     params = init_params(cfg, jax.random.PRNGKey(0))
 
-    codec_fn = None
+    codec = None
     if args.codec_levels:
         codec = calibrate(CodecConfig(n_levels=args.codec_levels,
                                       clip_mode="manual", manual_cmin=-8.0,
                                       manual_cmax=8.0))
-        codec_fn = lambda x: (codec.apply(x), codec.estimate_rate(x))
 
     eng = ServeEngine(cfg, params, slots=4,
                       max_seq=args.prompt_len + args.new_tokens + 8,
-                      codec_fn=codec_fn)
+                      codec=codec)
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
                                         size=args.prompt_len).astype(np.int32),

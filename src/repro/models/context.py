@@ -66,3 +66,20 @@ def constrain(x, ctx: DistContext | None, *axes):
     spec += [None] * (len(x.shape) - len(spec))
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(ctx.mesh, P(*spec)))
+
+
+def shard_map_compat(body, mesh, in_specs, out_specs):
+    """Fully-manual shard_map across jax versions.
+
+    jax >= 0.6 has ``jax.shard_map``; the 0.4.x line spells it
+    ``jax.experimental.shard_map.shard_map`` (``check_rep=False`` to skip
+    the stricter replication verifier the old version applies to psum
+    outputs).
+    """
+    import jax
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(body, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=False)

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
+from ..core.codec import FeatureCodec
 from ..models import decode_step, init_cache, prefill
 
 
@@ -30,8 +31,18 @@ class Request:
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
-                 max_seq: int = 256, ctx=None, codec_fn=None):
+                 max_seq: int = 256, ctx=None, codec_fn=None,
+                 codec: FeatureCodec | None = None):
+        """``codec`` is the preferred split-layer hookup: a calibrated
+        :class:`FeatureCodec` (any granularity/backend) whose fused
+        fake-quant + rate estimate is applied at the boundary.  The raw
+        ``codec_fn`` callable ``x -> (x', rate_bits)`` remains for custom
+        transforms."""
         self.cfg, self.params, self.ctx = cfg, params, ctx
+        if codec is not None:
+            if codec_fn is not None:
+                raise ValueError("pass either codec or codec_fn, not both")
+            codec_fn = codec.apply_with_rate
         self.codec_fn = codec_fn
         self.slots = slots
         self.max_seq = max_seq

@@ -1,0 +1,217 @@
+"""Tiled codec core tests: QuantBackend dispatch, per-channel granularity,
+self-describing headers, packed-transport edge sizes, vectorized coder."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CodecConfig, calibrate
+from repro.core.backend import JnpBackend, QuantSpec, get_backend
+from repro.core import cabac
+
+
+@pytest.fixture(scope="module")
+def channel_samples():
+    """NHWC-style channel-minor features with per-channel bias (BN-like)."""
+    rng = np.random.default_rng(0)
+    mu = np.linspace(0.0, 10.0, 12).astype(np.float32)
+    return (mu[None, :] + rng.exponential(1.0, (3000, 12))).astype(np.float32)
+
+
+class TestBackendDispatch:
+    def test_kernel_matches_jnp_per_tensor(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(2, 4, size=(513,)).astype(np.float32))
+        spec = QuantSpec(0.0, 9.036, 4)
+        ji, jd = JnpBackend().quantize_dequantize(x, spec)
+        ki, kd = get_backend("kernel_interpret").quantize_dequantize(x, spec)
+        np.testing.assert_array_equal(np.asarray(ki), np.asarray(ji))
+        np.testing.assert_allclose(np.asarray(kd), np.asarray(jd), atol=1e-6)
+
+    @pytest.mark.parametrize("shape,axis", [((7, 5), -1), ((4, 6, 9), 1),
+                                            ((130, 300), 0)])
+    def test_kernel_matches_jnp_per_channel(self, shape, axis):
+        rng = np.random.default_rng(2)
+        C = shape[axis]
+        x = jnp.asarray(rng.normal(2, 3, size=shape).astype(np.float32))
+        spec = QuantSpec(rng.uniform(-1, 0, C).astype(np.float32),
+                         rng.uniform(1, 5, C).astype(np.float32), 4, axis)
+        ji, jd = JnpBackend().quantize_dequantize(x, spec)
+        ki, kd = get_backend("kernel_interpret").quantize_dequantize(x, spec)
+        np.testing.assert_array_equal(np.asarray(ki), np.asarray(ji))
+        np.testing.assert_allclose(np.asarray(kd), np.asarray(jd), atol=1e-6)
+
+    def test_codec_backend_override(self):
+        codec = calibrate(CodecConfig(n_levels=4, clip_mode="manual",
+                                      manual_cmax=8.0,
+                                      backend="kernel_interpret"))
+        assert codec.backend.name == "kernel"
+        ref = calibrate(CodecConfig(n_levels=4, clip_mode="manual",
+                                    manual_cmax=8.0, backend="jnp"))
+        x = jnp.asarray(np.random.default_rng(3)
+                        .normal(3, 3, 1000).astype(np.float32))
+        np.testing.assert_array_equal(np.asarray(codec.quantize(x)),
+                                      np.asarray(ref.quantize(x)))
+
+    def test_histogram_unified(self):
+        idx = jnp.asarray(np.random.default_rng(4).integers(0, 4, 5000)
+                          .astype(np.int32))
+        h1 = JnpBackend().histogram(idx, 4)
+        h2 = get_backend("kernel_interpret").histogram(idx, 4)
+        np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+
+
+class TestChannelGranularity:
+    def test_calibrate_produces_group_vectors(self, channel_samples):
+        codec = calibrate(CodecConfig(n_levels=4, clip_mode="minmax",
+                                      granularity="channel", channel_axis=-1,
+                                      constrain_cmin_zero=False),
+                          samples=channel_samples)
+        assert codec.per_channel and codec.n_channels == 12
+        assert codec.cmin.shape == (12,) and codec.cmax.shape == (12,)
+        assert (np.diff(codec.cmin) > 0).all()  # tracks the channel bias
+
+    def test_channel_groups(self, channel_samples):
+        codec = calibrate(CodecConfig(n_levels=4, clip_mode="minmax",
+                                      granularity="channel", channel_axis=-1,
+                                      channel_group_size=4,
+                                      constrain_cmin_zero=False),
+                          samples=channel_samples)
+        assert codec.cmin.shape == (3,)
+        lo, hi = codec.channel_ranges()
+        assert lo.shape == (12,) and (lo[:4] == lo[0]).all()
+
+    def test_header_roundtrip_fresh_receiver(self, channel_samples):
+        codec = calibrate(CodecConfig(n_levels=4, clip_mode="minmax",
+                                      granularity="channel", channel_axis=-1,
+                                      constrain_cmin_zero=False),
+                          samples=channel_samples)
+        x = channel_samples[:512]
+        blob = codec.encode(x)
+        receiver = calibrate(CodecConfig(n_levels=2, clip_mode="manual"))
+        decoded = receiver.decode(blob)
+        fake = np.asarray(codec.apply(jnp.asarray(x)))
+        assert decoded.shape == x.shape
+        np.testing.assert_allclose(decoded, fake, atol=1e-5)
+
+    def test_channel_rate_beats_tensor_on_biased_channels(self,
+                                                          channel_samples):
+        x = channel_samples
+        common = dict(n_levels=4, clip_mode="minmax",
+                      constrain_cmin_zero=False)
+        ch = calibrate(CodecConfig(granularity="channel", channel_axis=-1,
+                                   **common), samples=x)
+        tn = calibrate(CodecConfig(**common), samples=x)
+        assert ch.compressed_bits_per_element(x) <= \
+            tn.compressed_bits_per_element(x)
+
+    def test_channel_accuracy_beats_tensor(self, channel_samples):
+        x = channel_samples
+        common = dict(n_levels=4, clip_mode="minmax",
+                      constrain_cmin_zero=False)
+        ch = calibrate(CodecConfig(granularity="channel", channel_axis=-1,
+                                   **common), samples=x)
+        tn = calibrate(CodecConfig(**common), samples=x)
+        xj = jnp.asarray(x)
+        mse_ch = float(np.mean((np.asarray(ch.apply(xj)) - x) ** 2))
+        mse_tn = float(np.mean((np.asarray(tn.apply(xj)) - x) ** 2))
+        assert mse_ch < mse_tn
+
+    def test_ecsq_channel_rejected(self, channel_samples):
+        with pytest.raises(ValueError):
+            calibrate(CodecConfig(granularity="channel", use_ecsq=True),
+                      samples=channel_samples)
+
+
+class TestHeaderHonored:
+    def test_receiver_with_mismatched_config(self):
+        rng = np.random.default_rng(5)
+        x = rng.exponential(1.0, 6000).astype(np.float32)
+        sender = calibrate(CodecConfig(n_levels=4, clip_mode="model"),
+                           samples=x)
+        blob = sender.encode(x)
+        receiver = calibrate(CodecConfig(n_levels=8, clip_mode="manual",
+                                         manual_cmax=99.0))
+        decoded = receiver.decode(blob, shape=x.shape)
+        np.testing.assert_allclose(
+            decoded, np.asarray(sender.apply(jnp.asarray(x))), atol=1e-5)
+
+    def test_ecsq_receiver_can_reencode_from_levels(self):
+        """Header levels + from_levels rebuild a working quantizer."""
+        from repro.core.ecsq import ECSQQuantizer, design_ecsq
+        rng = np.random.default_rng(10)
+        x = rng.exponential(1.0, 20000).astype(np.float32)
+        q = design_ecsq(x, 4, 0.05, 0.0, 6.0)
+        rebuilt = ECSQQuantizer.from_levels(q.levels, q.lagrangian)
+        np.testing.assert_allclose(rebuilt.thresholds, q.thresholds,
+                                   atol=1e-9)
+        np.testing.assert_array_equal(rebuilt.quantize_np(x),
+                                      q.quantize_np(x))
+
+    def test_ecsq_levels_travel_in_header(self):
+        rng = np.random.default_rng(6)
+        x = rng.exponential(1.0, 15000).astype(np.float32)
+        sender = calibrate(CodecConfig(n_levels=4, clip_mode="model",
+                                       use_ecsq=True), samples=x)
+        receiver = calibrate(CodecConfig(n_levels=3, clip_mode="manual"))
+        decoded = receiver.decode(sender.encode(x), shape=x.shape)
+        np.testing.assert_allclose(
+            decoded, np.asarray(sender.apply(jnp.asarray(x))), atol=1e-6)
+
+
+class TestPackingEdgeSizes:
+    @pytest.mark.parametrize("n", [1, 3, 7, 13, 255, 1001, 4097])
+    @pytest.mark.parametrize("n_levels", [2, 3, 4, 8, 17])
+    def test_pack_unpack_awkward_sizes(self, n, n_levels):
+        rng = np.random.default_rng(n)
+        idx = jnp.asarray(rng.integers(0, n_levels, size=n).astype(np.int32))
+        codec = calibrate(CodecConfig(n_levels=n_levels, clip_mode="manual",
+                                      manual_cmax=1.0))
+        back = codec.unpack(codec.pack(idx), n)
+        np.testing.assert_array_equal(np.asarray(back),
+                                      np.asarray(idx).reshape(-1))
+
+    def test_packed_byte_count_rounds_up(self):
+        codec = calibrate(CodecConfig(n_levels=4, clip_mode="manual",
+                                      manual_cmax=1.0))
+        idx = jnp.ones((13,), jnp.int32)
+        assert codec.pack(idx).size == 4  # ceil(13 / 4) lanes of 2 bits
+
+
+class TestVectorizedCoder:
+    @pytest.mark.parametrize("n", [0, 1, 100, 5000, 70_001])
+    @pytest.mark.parametrize("n_levels", [2, 3, 4, 8])
+    def test_rans_roundtrip(self, n, n_levels):
+        rng = np.random.default_rng(n + n_levels)
+        idx = rng.integers(0, n_levels, size=n).astype(np.int32)
+        blob = cabac.encode_indices(idx, n_levels, mode="rans")
+        np.testing.assert_array_equal(
+            cabac.decode_indices(blob, n, n_levels), idx)
+
+    def test_serial_roundtrip_and_auto_dispatch(self):
+        rng = np.random.default_rng(7)
+        small = rng.integers(0, 4, size=500).astype(np.int32)
+        large = rng.integers(0, 4, size=80_000).astype(np.int32)
+        assert cabac.encode_indices(small, 4)[0] == cabac._CODER_SERIAL
+        assert cabac.encode_indices(large, 4)[0] == cabac._CODER_RANS
+        for idx in (small, large):
+            blob = cabac.encode_indices(idx, 4)
+            np.testing.assert_array_equal(
+                cabac.decode_indices(blob, idx.size, 4), idx)
+
+    def test_seed_stream_still_decodes(self):
+        """Legacy (headerless-payload) serial streams remain readable."""
+        rng = np.random.default_rng(8)
+        idx = rng.integers(0, 4, size=2000).astype(np.int32)
+        legacy = cabac.encode_indices_serial(idx, 4)
+        np.testing.assert_array_equal(
+            cabac.decode_indices_serial(legacy, idx.size, 4), idx)
+
+    def test_rans_rate_near_entropy(self):
+        from repro.core.rate_model import estimated_bits_np
+        rng = np.random.default_rng(9)
+        idx = rng.choice(4, size=300_000,
+                         p=[0.55, 0.25, 0.13, 0.07]).astype(np.int32)
+        blob = cabac.encode_indices(idx, 4, mode="rans")
+        est = estimated_bits_np(idx, 4)
+        assert 8 * len(blob) <= est * 1.05  # within 5% of the adaptive bound

@@ -65,9 +65,13 @@ _SCRIPT = textwrap.dedent("""
 
 @pytest.mark.timeout(600)
 def test_split_runtime_and_ep_moe_multidevice():
+    import os
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+           # force the host platform: without this, containers that ship
+           # libtpu spend 60s+ probing for TPU metadata before falling back
+           "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")}
     res = subprocess.run([sys.executable, "-c", _SCRIPT],
                          capture_output=True, text=True, timeout=600,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"}, cwd="/root/repo")
+                         env=env, cwd="/root/repo")
     assert "DISTRIBUTED_OK" in res.stdout, \
         f"stdout:\n{res.stdout[-2000:]}\nstderr:\n{res.stderr[-3000:]}"

@@ -1,6 +1,9 @@
 """System-level property tests (hypothesis) for codec invariants."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import binarization, cabac, uniform
