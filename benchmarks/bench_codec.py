@@ -19,6 +19,7 @@ used by ``benchmarks/run.py``.
 from __future__ import annotations
 
 import json
+import os
 import sys
 import time
 
@@ -64,6 +65,24 @@ def bench_codec(quick: bool = False) -> list[str]:
     t_dec_rans = time.perf_counter() - t0
     assert (back == idx).all()
 
+    # thread-sharded rANS (REPRO_RANS_THREADS): independent element-range
+    # shards coded on a pool.  Reported honestly: on GIL-bound numpy builds
+    # this loses to serial dispatch; the row records the measured ratio.
+    n_threads = min(2, os.cpu_count() or 1)
+    os.environ["REPRO_RANS_THREADS"] = str(n_threads)
+    try:
+        cabac.encode_indices(idx[:1000], 4, mode="rans_sharded")  # warm pool
+        t0 = time.perf_counter()
+        blob_shard = cabac.encode_indices(idx, 4, mode="rans_sharded")
+        t_enc_shard = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        back = cabac.decode_indices(blob_shard, idx.size, 4)
+        t_dec_shard = time.perf_counter() - t0
+        assert (back == idx).all()
+    finally:
+        del os.environ["REPRO_RANS_THREADS"]
+    bpe_shard = 8 * len(blob_shard) / idx.size
+
     enc_speedup = t_enc_serial / t_enc_rans
     dec_speedup = t_dec_serial / t_dec_rans
     bpe_serial = 8 * len(blob_serial) / idx.size
@@ -89,6 +108,10 @@ def bench_codec(quick: bool = False) -> list[str]:
         "decode_serial_s": t_dec_serial,
         "encode_rans_s": t_enc_rans,
         "decode_rans_s": t_dec_rans,
+        "rans_shard_threads": n_threads,
+        "encode_rans_sharded_s": t_enc_shard,
+        "decode_rans_sharded_s": t_dec_shard,
+        "bits_per_elem_rans_sharded": bpe_shard,
         "encode_speedup": enc_speedup,
         "decode_speedup": dec_speedup,
         "encode_Melem_per_s": idx.size / t_enc_rans / 1e6,
@@ -111,6 +134,9 @@ def bench_codec(quick: bool = False) -> list[str]:
         f"speedup={enc_speedup:.1f}x",
         f"codec_decode_rans,{t_dec_rans*1e6:.0f},"
         f"speedup={dec_speedup:.1f}x",
+        f"codec_encode_rans_sharded,{t_enc_shard*1e6:.0f},"
+        f"threads={n_threads},vs_rans={t_enc_rans/t_enc_shard:.2f}x,"
+        f"bpe={bpe_shard:.3f}",
     ]
     for n_levels, v in grain_bpe.items():
         rows.append(f"codec_granularity_N{n_levels},0,"

@@ -1,0 +1,301 @@
+"""Transport benchmark: streaming overlap gain + rate-controller tracking
+(the ISSUE-2 acceptance gates).
+
+1. **Overlap**: one >= 4 MB split-layer tensor crosses a localhost
+   socket to a decoder subprocess, with the sender pacing its writes to
+   a simulated link bandwidth (chosen so transfer time ~= codec time,
+   the regime where the collaborative-intelligence link operates).
+   *Sequential* is the old path: encode the whole bitstream, send it,
+   decode it.  *Streamed* sends chunked frames as they are encoded and
+   the receiver entropy-decodes each chunk on arrival, so encode,
+   transfer, and decode overlap across the two processes -- exactly the
+   edge/cloud split of examples/edge_cloud_demo.py.  Latency is
+   measured to *reconstruction done* (receiver acks).  Gate: streamed
+   >= 1.2x faster.
+
+2. **Rate control**: a stream of tensors under a bits/element budget
+   with a 4x bandwidth step change mid-run.  The controller re-picks the
+   quantizer rung per tensor (leaky bucket over coded bits + link
+   feedback); gate: measured bits/element within 10% of the budget in
+   both bandwidth phases.
+
+Writes ``BENCH_transport.json`` and prints CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.bench_transport [--quick]
+"""
+
+from __future__ import annotations
+
+import json
+import multiprocessing as mp
+import queue
+import socket
+import struct
+import sys
+import threading
+import time
+
+import numpy as np
+
+from repro.core import CodecConfig, calibrate
+from repro.core.distributions import resnet50_layer21_model
+from repro.transport import (CodecBank, RateControlConfig, RateController,
+                             tensor_to_frames)
+
+_ACK = b"K"
+
+
+def _recv_proc(port: int, mode: str) -> None:
+    """Decoder subprocess: plays the cloud half for one transfer.
+
+    mode 'oneshot': read <Q>-length-prefixed bitstream, decode whole.
+    mode 'stream': parse frames incrementally, decode chunks on arrival.
+    Acks one byte once the reconstruction is complete.
+    """
+    from repro.core import CodecConfig, calibrate
+    from repro.transport import FrameReader, TensorAssembler
+
+    # warm the decode path (first-call jax dispatch) before signaling
+    # ready, so the measured latency is steady-state codec work
+    dummy = calibrate(CodecConfig(n_levels=8, clip_mode="manual",
+                                  manual_cmin=0.0, manual_cmax=1.0))
+    warm = np.linspace(0, 1, 1 << 12, dtype=np.float32)
+    dummy.decode(dummy.encode(warm))
+    dummy.decode_stream(dummy.encode_stream(warm, chunk_elems=1 << 11))
+
+    srv = socket.socket()
+    srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    srv.bind(("127.0.0.1", port))
+    srv.listen(1)
+    conn, _ = srv.accept()
+    conn.sendall(_ACK)  # ready (decoder imports + jit are warm)
+    try:
+        if mode == "oneshot":
+            head = b""
+            while len(head) < 8:
+                head += conn.recv(8 - len(head))
+            (length,) = struct.unpack("<Q", head)
+            buf = bytearray()
+            while len(buf) < length:
+                part = conn.recv(1 << 16)
+                if not part:
+                    raise ConnectionError("sender closed early")
+                buf.extend(part)
+            out = dummy.decode(bytes(buf))
+            assert out.size > 0
+        else:
+            frames = FrameReader()
+            asm = TensorAssembler()
+            out = None
+            while out is None:
+                part = conn.recv(1 << 16)
+                if not part:
+                    raise ConnectionError("sender closed early")
+                frames.feed(part)
+                for f in frames:
+                    r = asm.feed(f)
+                    if r is not None:
+                        out = r
+        conn.sendall(_ACK)
+    finally:
+        conn.close()
+        srv.close()
+
+
+def _paced_sendall(conn: socket.socket, data: bytes,
+                   bytes_per_s: float) -> None:
+    """Send pacing the wire to a link bandwidth (64 KiB bursts)."""
+    burst = 1 << 16
+    t_next = time.perf_counter()
+    for off in range(0, len(data), burst):
+        chunk = data[off:off + burst]
+        t_next += len(chunk) / bytes_per_s
+        conn.sendall(chunk)
+        dt = t_next - time.perf_counter()
+        if dt > 0:
+            time.sleep(dt)
+
+
+def _run_transfer(codec, x, bw: float, mode: str,
+                  chunk_elems: int) -> tuple[float, int]:
+    """Returns (latency to reconstruction ack, coded bytes on the wire)."""
+    ctx = mp.get_context("spawn")
+    with socket.socket() as probe:
+        probe.bind(("127.0.0.1", 0))
+        port = probe.getsockname()[1]
+    proc = ctx.Process(target=_recv_proc, args=(port, mode), daemon=True)
+    proc.start()
+    conn = None
+    try:
+        deadline = time.time() + 120
+        while True:
+            try:
+                conn = socket.create_connection(("127.0.0.1", port),
+                                                timeout=1.0)
+                # connect probing used a 1 s timeout; the transfer itself
+                # (paced sends, final reconstruction ack) must not
+                conn.settimeout(120.0)
+                break
+            except OSError:
+                if time.time() > deadline or not proc.is_alive():
+                    raise RuntimeError("decoder subprocess did not start")
+                time.sleep(0.2)
+        assert conn.recv(1) == _ACK  # decoder warm + listening
+        coded = 0
+        t0 = time.perf_counter()
+        if mode == "oneshot":
+            blob = codec.encode(x)
+            coded = len(blob)
+            conn.sendall(struct.pack("<Q", len(blob)))
+            _paced_sendall(conn, blob, bw)
+        else:
+            # a sender thread paces the wire while the main thread
+            # entropy-codes the next chunk (the pacing sleep releases the
+            # GIL); the bounded queue is the backpressure
+            q: queue.Queue = queue.Queue(maxsize=4)
+            send_err: list[BaseException] = []
+
+            def sender():
+                draining = False
+                while True:
+                    fb = q.get()
+                    if fb is None:
+                        return
+                    if draining:
+                        continue
+                    try:
+                        _paced_sendall(conn, fb, bw)
+                    except OSError as e:
+                        # keep consuming so the producer never blocks on
+                        # a full queue; surface the error after join
+                        send_err.append(e)
+                        draining = True
+
+            th = threading.Thread(target=sender)
+            th.start()
+            for fb in tensor_to_frames(codec, x, session=0,
+                                       chunk_elems=chunk_elems):
+                coded += len(fb)
+                q.put(fb)
+            q.put(None)
+            th.join()
+            if send_err:
+                raise RuntimeError("streamed send failed") from send_err[0]
+        assert conn.recv(1) == _ACK  # reconstruction complete
+        dt = time.perf_counter() - t0
+    finally:
+        if conn is not None:
+            conn.close()
+        proc.join(timeout=30)
+        if proc.is_alive():
+            proc.terminate()
+    return dt, coded
+
+
+def bench_overlap(quick: bool) -> dict:
+    n = 1 << 19 if quick else 4_000_000      # >= 4 MB float32 payload (16 MB)
+    # a handful of pipeline stages: the vectorized coder has a
+    # near-constant python-loop cost per chunk, so deep pipelines pay
+    # more in per-chunk overhead than they win in overlap granularity
+    chunk_elems = 1 << 17 if quick else 1 << 19
+    m = resnet50_layer21_model()
+    x = m.sample(n, np.random.default_rng(0)).astype(np.float32)
+    codec = calibrate(CodecConfig(n_levels=8, clip_mode="model"),
+                      samples=x[:100_000])
+
+    # warm the codec (jit of the quantizer), then set the simulated link
+    # so transfer time ~= one-shot codec time; min-of-3 keeps transient
+    # host load out of the bandwidth calibration
+    blob = codec.encode(x)
+    codec.decode(blob, shape=x.shape)
+    t_codec = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        blob = codec.encode(x)
+        codec.decode(blob, shape=x.shape)
+        t_codec = min(t_codec, time.perf_counter() - t0)
+    bw = len(blob) / t_codec
+
+    # best-of-2 per mode: filters transient host load out of the gate
+    reps = 1 if quick else 2
+    t_seq, seq_bytes = min(
+        _run_transfer(codec, x, bw, "oneshot", chunk_elems)
+        for _ in range(reps))
+    t_str, str_bytes = min(
+        _run_transfer(codec, x, bw, "stream", chunk_elems)
+        for _ in range(reps))
+    return {
+        "payload_mb": 4.0 * n / 1e6,
+        "chunk_elems": chunk_elems,
+        "link_mb_per_s": bw / 1e6,
+        "coded_bytes_oneshot": seq_bytes,
+        "coded_bytes_streamed": str_bytes,
+        "sequential_s": t_seq,
+        "streamed_s": t_str,
+        "overlap_gain": t_seq / t_str,
+        "overlap_gain_ge_1p2": t_seq / t_str >= 1.2,
+    }
+
+
+def bench_rate_control(quick: bool) -> dict:
+    n_tensors = 24 if quick else 48
+    elems = 1 << 15 if quick else 1 << 16
+    target = 2.5
+    rng = np.random.default_rng(1)
+    m = resnet50_layer21_model()
+    samples = m.sample(200_000, rng).astype(np.float32)
+    bank = CodecBank(CodecConfig(n_levels=8, clip_mode="model"), samples)
+    rc = RateController(RateControlConfig(target_bpe=target))
+
+    phases = {"high_bw": [], "low_bw": []}
+    for i in range(n_tensors):
+        phase = "high_bw" if i < n_tensors // 2 else "low_bw"
+        bw = 8e6 if phase == "high_bw" else 2e6    # 4x step change
+        x = m.sample(elems, rng).astype(np.float32)
+        n_levels = rc.next_levels()
+        blob = bank.get(n_levels).encode(x)
+        send_s = len(blob) / bw                     # simulated transfer
+        rc.on_tensor(n_levels, len(blob), x.size, send_seconds=send_s)
+        rc.on_feedback(bw, queue_depth=0)
+        phases[phase].append((len(blob), x.size, n_levels))
+
+    def phase_bpe(rows):
+        bits = 8.0 * sum(b for b, _, _ in rows)
+        el = sum(e for _, e, _ in rows)
+        return bits / el
+
+    high, low = phase_bpe(phases["high_bw"]), phase_bpe(phases["low_bw"])
+    return {
+        "target_bpe": target,
+        "n_tensors": n_tensors,
+        "bpe_high_bw": high,
+        "bpe_low_bw": low,
+        "levels_high_bw": sorted({r[2] for r in phases["high_bw"]}),
+        "levels_low_bw": sorted({r[2] for r in phases["low_bw"]}),
+        "within_10pct": (abs(high - target) <= 0.1 * target
+                         and abs(low - target) <= 0.1 * target),
+    }
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    overlap = bench_overlap(quick)
+    rate = bench_rate_control(quick)
+    result = {"overlap": overlap, "rate_control": rate}
+    with open("BENCH_transport.json", "w") as f:
+        json.dump(result, f, indent=2)
+    print("name,value,derived")
+    print(f"transport_sequential_s,{overlap['sequential_s']:.3f},"
+          f"payload_mb={overlap['payload_mb']:.1f},"
+          f"link_MBps={overlap['link_mb_per_s']:.1f}")
+    print(f"transport_streamed_s,{overlap['streamed_s']:.3f},"
+          f"gain={overlap['overlap_gain']:.2f}x,"
+          f"ge_1.2x={overlap['overlap_gain_ge_1p2']}")
+    print(f"rate_control_bpe,{rate['target_bpe']},"
+          f"high_bw={rate['bpe_high_bw']:.3f},"
+          f"low_bw={rate['bpe_low_bw']:.3f},"
+          f"within_10pct={rate['within_10pct']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,11 +16,15 @@ Modules:
 """
 
 from .backend import QuantSpec, get_backend
-from .codec import CodecConfig, FeatureCodec, calibrate
+from .codec import (ChunkStreamDecoder, CodecConfig, FeatureCodec,
+                    ParsedHeader, calibrate, parse_header,
+                    reconstruct_indices)
 from .distributions import FeatureModel, resnet50_layer21_model, yolov3_layer12_model
 
 __all__ = [
     "CodecConfig", "FeatureCodec", "calibrate", "FeatureModel",
     "QuantSpec", "get_backend",
+    "ChunkStreamDecoder", "ParsedHeader", "parse_header",
+    "reconstruct_indices",
     "resnet50_layer21_model", "yolov3_layer12_model",
 ]

@@ -23,6 +23,8 @@ legacy headers.  See DESIGN.md for the layout.
 
 from __future__ import annotations
 
+import struct
+
 import numpy as np
 
 from . import rans
@@ -142,9 +144,14 @@ class BinaryArithmeticDecoder:
 
 _CODER_SERIAL = 0
 _CODER_RANS = 1
+_CODER_RANS_SHARDED = 2
 # Below this many TU bits the serial coder's 4-byte flush undercuts the
 # vectorized coder's per-lane state overhead, and the python loop is cheap.
 _SERIAL_CUTOFF_BITS = 1 << 16
+# Above this many TU bits "auto" shards the payload across the rANS thread
+# pool (multi-MB activation tensors); below it the per-shard state/table
+# duplication and pool dispatch are not worth it.
+_SHARD_MIN_BITS = 1 << 21
 
 
 def encode_indices_serial(idx: np.ndarray, n_levels: int) -> bytes:
@@ -180,26 +187,84 @@ def _decode_planes(next_plane, n_elems: int, n_levels: int) -> np.ndarray:
     return idx
 
 
+def _shard_bounds(n_elems: int, n_shards: int) -> list[tuple[int, int]]:
+    """Contiguous element ranges for sharded coding (last may be short)."""
+    per = -(-n_elems // max(1, n_shards))
+    return [(s * per, min((s + 1) * per, n_elems))
+            for s in range(n_shards) if s * per < n_elems]
+
+
+def _encode_rans_sharded(idx: np.ndarray, n_levels: int,
+                         n_shards: int) -> bytes:
+    """Shard elements into independent rANS streams coded on the thread
+    pool.  Layout: id byte | <H> n_shards | n_shards x <I> byte length |
+    concatenated shard streams.  Each shard flushes its own coder state,
+    so shards decode independently (and in parallel)."""
+    from .binarization import index_to_context_bits
+    bounds = _shard_bounds(idx.size, n_shards)
+
+    def enc(seg: np.ndarray) -> bytes:
+        return rans.encode_planes(index_to_context_bits(seg, n_levels))
+
+    blobs = rans.parallel_map(enc, [idx[a:b] for a, b in bounds])
+    head = struct.pack("<H", len(blobs))
+    head += struct.pack(f"<{len(blobs)}I", *[len(b) for b in blobs])
+    return bytes([_CODER_RANS_SHARDED]) + head + b"".join(blobs)
+
+
+def _decode_rans_sharded(body: bytes, n_elems: int,
+                         n_levels: int) -> np.ndarray:
+    (n_shards,) = struct.unpack_from("<H", body)
+    lens = struct.unpack_from(f"<{n_shards}I", body, 2)
+    bounds = _shard_bounds(n_elems, n_shards)
+    if len(bounds) != n_shards:
+        raise ValueError("shard count does not match element count")
+    off = 2 + 4 * n_shards
+    jobs = []
+    for (a, b), ln in zip(bounds, lens):
+        jobs.append((body[off:off + ln], b - a))
+        off += ln
+
+    def dec(job: tuple[bytes, int]) -> np.ndarray:
+        blob, count = job
+        d = rans.PlaneStreamDecoder(blob)
+        return _decode_planes(lambda n, j: d.next_plane(n), count, n_levels)
+
+    if not jobs:
+        return np.zeros(n_elems, dtype=np.int32)
+    return np.concatenate(rans.parallel_map(dec, jobs))
+
+
 def encode_indices(idx: np.ndarray, n_levels: int, mode: str = "auto") -> bytes:
     """TU-binarize + entropy-code a flat index array (plane-major order).
 
-    ``mode``: "auto" picks the vectorized coder above the size cutoff,
-    "serial" / "rans" force a coder.  The payload starts with a one-byte
-    coder id; :func:`decode_indices` dispatches on it.
+    ``mode``: "auto" picks the serial coder below the size cutoff, the
+    vectorized coder above it, and the thread-sharded vectorized coder for
+    multi-MB payloads when the pool has more than one worker;
+    "serial" / "rans" / "rans_sharded" force a coder.  The payload starts
+    with a one-byte coder id; :func:`decode_indices` dispatches on it.
     """
     from .binarization import index_to_context_bits
     idx = np.asarray(idx).ravel()
-    planes = index_to_context_bits(idx, n_levels)
     if mode == "auto":
-        total = sum(p.size for p in planes)
-        mode = "serial" if total < _SERIAL_CUTOFF_BITS else "rans"
+        from .binarization import total_tu_bits
+        total = total_tu_bits(idx, n_levels)
+        if total < _SERIAL_CUTOFF_BITS:
+            mode = "serial"
+        elif total >= _SHARD_MIN_BITS and rans.rans_threads() > 1:
+            mode = "rans_sharded"
+        else:
+            mode = "rans"
     if mode == "serial":
         enc = BinaryArithmeticEncoder(n_contexts=max(n_levels - 1, 1))
-        for j, plane in enumerate(planes):
+        for j, plane in enumerate(index_to_context_bits(idx, n_levels)):
             enc.encode_plane(plane, j)
         return bytes([_CODER_SERIAL]) + enc.finish()
     if mode == "rans":
-        return bytes([_CODER_RANS]) + rans.encode_planes(planes)
+        return bytes([_CODER_RANS]) \
+            + rans.encode_planes(index_to_context_bits(idx, n_levels))
+    if mode == "rans_sharded":
+        return _encode_rans_sharded(idx, n_levels, rans.rans_threads())
     raise ValueError(f"unknown coder mode {mode!r}")
 
 
@@ -214,4 +279,6 @@ def decode_indices(data: bytes, n_elems: int, n_levels: int) -> np.ndarray:
         dec = rans.PlaneStreamDecoder(body)
         return _decode_planes(lambda n, j: dec.next_plane(n),
                               n_elems, n_levels)
+    if coder == _CODER_RANS_SHARDED:
+        return _decode_rans_sharded(body, n_elems, n_levels)
     raise ValueError(f"unknown coder id {coder}")

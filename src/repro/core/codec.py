@@ -50,6 +50,7 @@ Granularity = Literal["tensor", "channel"]
 
 _HEADER_FMT = "<ffHHI"  # cmin, cmax, n_levels, flags, n_elems  (16 bytes)
 _CHANNEL_EXT_FMT = "<BBHH"  # ndim, channel_axis, group_size, n_groups
+_STREAM_META_FMT = "<IIB"  # chunk_elems, n_chunks, ndim (then ndim u32 dims)
 
 FLAG_ECSQ = 1      # ECSQ quantizer; v2 streams append the level table
 FLAG_CHANNEL = 2   # per-channel granularity; header carries the group table
@@ -72,6 +73,132 @@ class CodecConfig:
     channel_axis: int = -1
     channel_group_size: int = 1
     backend: str | None = None  # None = auto (kernel on TPU, jnp on CPU)
+
+
+@dataclasses.dataclass
+class ParsedHeader:
+    """Decoded self-describing bitstream header (see DESIGN.md layout)."""
+
+    cmin: float
+    cmax: float
+    n_levels: int
+    flags: int
+    n_elems: int
+    levels: np.ndarray | None = None   # ECSQ reconstruction table (v2)
+    dims: tuple[int, ...] | None = None
+    spec: QuantSpec | None = None      # per-channel dequant spec
+    payload_off: int = 0               # byte offset of the entropy payload
+
+
+def parse_header(data: bytes) -> ParsedHeader:
+    """Parse the self-describing header shared by one-shot and streamed
+    bitstreams.  ``payload_off`` points at the entropy-coder payload."""
+    cmin, cmax, n_levels, flags, n_elems = struct.unpack_from(
+        _HEADER_FMT, data)
+    off = struct.calcsize(_HEADER_FMT)
+    levels = None
+    if flags & FLAG_ECSQ and flags & FLAG_V2:
+        levels = np.frombuffer(data, "<f4", n_levels, off)
+        off += 4 * n_levels
+    dims = None
+    spec = None
+    if flags & FLAG_CHANNEL:
+        ndim, axis, gsize, ngroups = struct.unpack_from(
+            _CHANNEL_EXT_FMT, data, off)
+        off += struct.calcsize(_CHANNEL_EXT_FMT)
+        dims = tuple(int(d) for d in np.frombuffer(data, "<u4", ndim, off))
+        off += 4 * ndim
+        table = np.frombuffer(data, "<f4", 2 * ngroups, off) \
+            .reshape(ngroups, 2)
+        off += 8 * ngroups
+        lo = np.repeat(table[:, 0], gsize)[:dims[axis]]
+        hi = np.repeat(table[:, 1], gsize)[:dims[axis]]
+        spec = spec_from_numpy(lo, hi, n_levels, axis)
+    return ParsedHeader(cmin=float(cmin), cmax=float(cmax),
+                        n_levels=int(n_levels), flags=int(flags),
+                        n_elems=int(n_elems), levels=levels, dims=dims,
+                        spec=spec, payload_off=off)
+
+
+def reconstruct_indices(idx: np.ndarray, hdr: ParsedHeader, *,
+                        backend=None, ecsq: ECSQQuantizer | None = None,
+                        shape=None) -> np.ndarray:
+    """Dequantize decoded indices per the stream header.
+
+    The single reconstruction path shared by :meth:`FeatureCodec.decode`
+    and the chunked/stream decoders, so both are bit-exact by
+    construction.  ``backend``/``ecsq`` default to the auto backend and no
+    legacy-ECSQ fallback (a self-describing v2 stream needs neither).
+    """
+    backend = backend if backend is not None else get_backend(None)
+    if hdr.levels is not None:
+        out = hdr.levels[idx].astype(np.float32)
+    elif hdr.flags & FLAG_ECSQ:  # legacy ECSQ stream without a level table
+        if ecsq is None:
+            raise ValueError("legacy ECSQ stream needs a calibrated codec")
+        out = np.asarray(ecsq.levels, np.float32)[idx]
+    elif hdr.spec is not None:
+        out = np.asarray(backend.dequantize(
+            jnp.asarray(idx.reshape(hdr.dims)), hdr.spec))
+    else:
+        out = np.asarray(backend.dequantize(
+            jnp.asarray(idx), QuantSpec(hdr.cmin, hdr.cmax, hdr.n_levels)))
+    if shape is not None:
+        return out.reshape(shape)
+    return out.reshape(hdr.dims) if hdr.dims is not None else out
+
+
+class ChunkStreamDecoder:
+    """Incremental decoder for :meth:`FeatureCodec.encode_stream` payloads.
+
+    Chunks are entropy-decoded the moment they are fed (that is the
+    expensive stage, and what streaming overlaps with the transfer); the
+    final dequantize runs once in :meth:`finish`.  Chunks may arrive in
+    any order -- each payload carries its chunk id.
+    """
+
+    def __init__(self, header_payload: bytes, *, backend=None,
+                 ecsq: ECSQQuantizer | None = None) -> None:
+        self.chunk_elems, self.n_chunks, ndim = struct.unpack_from(
+            _STREAM_META_FMT, header_payload)
+        meta = struct.calcsize(_STREAM_META_FMT)
+        self.shape = tuple(
+            int(d) for d in np.frombuffer(header_payload, "<u4", ndim, meta))
+        meta += 4 * ndim
+        self.header = parse_header(header_payload[meta:])
+        if self.header.payload_off != len(header_payload) - meta:
+            raise ValueError("trailing bytes after stream header")
+        self._backend = backend
+        self._ecsq = ecsq
+        self._idx = np.zeros(self.header.n_elems, dtype=np.int32)
+        self._seen = np.zeros(self.n_chunks, dtype=bool)
+
+    def add_chunk(self, payload: bytes) -> int:
+        """Entropy-decode one chunk payload; returns its chunk id."""
+        (cid,) = struct.unpack_from("<I", payload)
+        if cid >= self.n_chunks:
+            raise ValueError(f"chunk id {cid} out of range")
+        if self._seen[cid]:
+            raise ValueError(f"duplicate chunk {cid}")
+        start = cid * self.chunk_elems
+        stop = min(start + self.chunk_elems, self.header.n_elems)
+        self._idx[start:stop] = cabac.decode_indices(
+            payload[4:], stop - start, self.header.n_levels)
+        self._seen[cid] = True
+        return cid
+
+    @property
+    def complete(self) -> bool:
+        return bool(self._seen.all())
+
+    def finish(self, shape=None) -> np.ndarray:
+        if not self.complete:
+            missing = int((~self._seen).sum())
+            raise ValueError(f"stream incomplete: {missing} chunks missing")
+        return reconstruct_indices(self._idx, self.header,
+                                   backend=self._backend, ecsq=self._ecsq,
+                                   shape=self.shape if shape is None
+                                   else shape)
 
 
 @dataclasses.dataclass
@@ -238,53 +365,66 @@ class FeatureCodec:
         ECSQ flag predate the level table and fall back to this instance's
         designed quantizer.)
         """
-        cmin, cmax, n_levels, flags, n_elems = struct.unpack_from(
-            _HEADER_FMT, data)
-        off = struct.calcsize(_HEADER_FMT)
-
-        levels = None
-        if flags & FLAG_ECSQ and flags & FLAG_V2:
-            levels = np.frombuffer(data, "<f4", n_levels, off)
-            off += 4 * n_levels
-        dims = None
-        spec = None
-        if flags & FLAG_CHANNEL:
-            ndim, axis, gsize, ngroups = struct.unpack_from(
-                _CHANNEL_EXT_FMT, data, off)
-            off += struct.calcsize(_CHANNEL_EXT_FMT)
-            dims = tuple(int(d) for d in np.frombuffer(data, "<u4", ndim, off))
-            off += 4 * ndim
-            table = np.frombuffer(data, "<f4", 2 * ngroups, off) \
-                .reshape(ngroups, 2)
-            off += 8 * ngroups
-            lo = np.repeat(table[:, 0], gsize)[:dims[axis]]
-            hi = np.repeat(table[:, 1], gsize)[:dims[axis]]
-            spec = spec_from_numpy(lo, hi, n_levels, axis)
-
-        if flags & FLAG_V2:
-            idx = cabac.decode_indices(data[off:], n_elems, n_levels)
+        hdr = parse_header(data)
+        if hdr.flags & FLAG_V2:
+            idx = cabac.decode_indices(data[hdr.payload_off:],
+                                       hdr.n_elems, hdr.n_levels)
         else:  # seed stream: bare serial-CABAC payload
-            idx = cabac.decode_indices_serial(data[off:], n_elems, n_levels)
-
-        if levels is not None:
-            out = levels[idx].astype(np.float32)
-        elif flags & FLAG_ECSQ:  # legacy ECSQ stream without a level table
-            if self.ecsq is None:
-                raise ValueError("legacy ECSQ stream needs a calibrated codec")
-            out = np.asarray(self.ecsq.levels, np.float32)[idx]
-        elif spec is not None:
-            out = np.asarray(self.backend.dequantize(
-                jnp.asarray(idx.reshape(dims)), spec))
-        else:
-            out = np.asarray(self.backend.dequantize(
-                jnp.asarray(idx), QuantSpec(cmin, cmax, n_levels)))
-        if shape is not None:
-            return out.reshape(shape)
-        return out.reshape(dims) if dims is not None else out
+            idx = cabac.decode_indices_serial(data[hdr.payload_off:],
+                                              hdr.n_elems, hdr.n_levels)
+        return reconstruct_indices(idx, hdr, backend=self.backend,
+                                   ecsq=self.ecsq, shape=shape)
 
     def compressed_bits_per_element(self, x: np.ndarray) -> float:
         data = self.encode(x)
         return 8.0 * len(data) / np.asarray(x).size
+
+    # -- chunked (streaming) bitstream ------------------------------------------
+
+    def encode_stream(self, x: np.ndarray, chunk_elems: int = 1 << 18,
+                      coder_mode: str = "auto"):
+        """Chunked encode: yields the header payload, then chunk payloads.
+
+        The first payload is the stream header: ``<II>`` (chunk_elems,
+        n_chunks) followed by the same self-describing tensor header
+        :meth:`encode` writes.  Every following payload is ``<I>``
+        (chunk id) + an independently flushed :func:`cabac.encode_indices`
+        stream over that chunk's flat indices, so a receiver entropy-decodes
+        each chunk the moment it arrives and only the final dequantize
+        waits for the last chunk.  Reconstruction is bit-exact with the
+        one-shot path (same quantize, same dequantize -- asserted in
+        tests/test_transport.py).  Framing for the wire (session ids, CRC,
+        end-of-tensor) lives in :mod:`repro.transport.framing`.
+        """
+        if chunk_elems <= 0:
+            raise ValueError("chunk_elems must be positive")
+        x = np.asarray(x, np.float32)
+        idx = np.asarray(self.quantize(jnp.asarray(x))).ravel()
+        header, _ = self._header(x)
+        n_chunks = max(1, -(-idx.size // chunk_elems))
+        # the stream meta carries the tensor shape (the one-shot header only
+        # does for per-channel streams): a cloud receiver reshapes before
+        # running the tail network
+        meta = struct.pack(_STREAM_META_FMT, chunk_elems, n_chunks, x.ndim)
+        meta += np.asarray(x.shape, "<u4").tobytes()
+        yield meta + header
+        for c in range(n_chunks):
+            seg = idx[c * chunk_elems:(c + 1) * chunk_elems]
+            yield struct.pack("<I", c) + cabac.encode_indices(
+                seg, self.config.n_levels, mode=coder_mode)
+
+    def decode_stream(self, payloads, shape=None) -> np.ndarray:
+        """Inverse of :meth:`encode_stream` over an iterable of payloads."""
+        dec = None
+        for p in payloads:
+            if dec is None:
+                dec = ChunkStreamDecoder(p, backend=self.backend,
+                                         ecsq=self.ecsq)
+            else:
+                dec.add_chunk(p)
+        if dec is None:
+            raise ValueError("empty payload stream")
+        return dec.finish(shape)
 
 
 def _calibrate_range(cfg: CodecConfig,

@@ -35,7 +35,9 @@ two of the adaptive coder for stationary planes (see bench_codec.py).
 
 from __future__ import annotations
 
+import os
 import struct
+from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
@@ -50,6 +52,50 @@ _S64 = np.uint64(_PROB_BITS)
 _EMIT_SHIFT = np.uint64(32 - _PROB_BITS)
 _MASK_S = np.uint64(_M - 1)
 _MASK_W = np.uint64(0xFFFF)
+
+
+def rans_threads() -> int:
+    """Worker count for sharded plane coding (``REPRO_RANS_THREADS``).
+
+    Defaults to 1 (sharding off): the step loop is numpy-dispatch bound,
+    and on CPython builds whose numpy holds the GIL through the small
+    per-step ops a thread pool is measured *slower* than serial (see
+    ``BENCH_codec.json``'s ``encode_rans_sharded`` row).  Opt in on
+    hosts with a GIL-releasing numpy / free-threaded interpreter, where
+    the independent shards scale to ``min(threads, shards)`` cores.
+    """
+    env = os.environ.get("REPRO_RANS_THREADS", "").strip()
+    if env:
+        return max(1, int(env))
+    return 1
+
+
+_POOL: ThreadPoolExecutor | None = None
+_POOL_SIZE = 0
+
+
+def _get_pool(n: int) -> ThreadPoolExecutor:
+    global _POOL, _POOL_SIZE
+    if _POOL is None or _POOL_SIZE < n:
+        if _POOL is not None:
+            _POOL.shutdown(wait=False)
+        _POOL = ThreadPoolExecutor(max_workers=n, thread_name_prefix="rans")
+        _POOL_SIZE = n
+    return _POOL
+
+
+def parallel_map(fn, items, n_threads: int | None = None) -> list:
+    """Map ``fn`` over ``items`` on the rANS thread pool (ordered results).
+
+    Falls back to a plain loop for a single item or a single-thread
+    configuration, so callers need no special casing.
+    """
+    items = list(items)
+    n = rans_threads() if n_threads is None else n_threads
+    n = min(n, len(items))
+    if n <= 1:
+        return [fn(it) for it in items]
+    return list(_get_pool(n).map(fn, items))
 
 
 def lane_count(total_bits: int) -> int:

@@ -1,8 +1,19 @@
 """Serving launcher: `python -m repro.launch.serve --arch <id> [...]`.
 
 Runs the continuous-batching engine on a (reduced by default) config, with
-the paper's codec optionally applied at the split boundary, and prints
-tokens/s plus the measured split-link rate.
+the paper's codec applied at the split boundary, and prints tokens/s, the
+measured split-link rate, and per-request latency.
+
+The codec is calibrated from a *warm-up batch of real split-layer
+activations* (``--clip-mode model|empirical|minmax|aciq``, the paper's
+calibration modes) instead of a hardcoded manual range; ``--clip-mode
+manual`` keeps the old [-8, 8] behavior.
+
+``--transport loopback`` wires the split boundary through a real socket
+pair: a CloudServer thread on localhost receives the streamed, framed
+bitstream and echoes the reconstruction, and the engine's split-layer
+callback (``jax.experimental.io_callback``) round-trips every boundary
+tensor through it -- the transport stack under a live serving load.
 """
 
 from __future__ import annotations
@@ -13,6 +24,90 @@ import time
 import numpy as np
 
 
+def _calibrate_warmup(cfg, params, args):
+    """Calibrate the codec on a warm-up batch of split-layer activations."""
+    import jax
+
+    from ..core import CodecConfig, calibrate
+    from ..data import DataConfig, stream
+    from ..models import forward
+
+    ccfg = CodecConfig(n_levels=args.codec_levels, clip_mode=args.clip_mode,
+                       constrain_cmin_zero=False)
+    if args.clip_mode == "manual":
+        return calibrate(CodecConfig(n_levels=args.codec_levels,
+                                     clip_mode="manual", manual_cmin=-8.0,
+                                     manual_cmax=8.0))
+    probe = {}
+
+    def probe_fn(x):
+        probe["x"] = x
+        return x, 0.0
+
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, batch=4,
+                      seq_len=min(64, args.prompt_len + args.new_tokens))
+    chunks = []
+    for _, batch in zip(range(args.warmup_batches), stream(dcfg)):
+        forward(cfg, params, jax.numpy.asarray(batch["tokens"]),
+                codec_fn=probe_fn)
+        chunks.append(np.asarray(probe["x"], np.float32).reshape(-1))
+    samples = np.concatenate(chunks)
+    codec = calibrate(ccfg, samples=samples)
+    print(f"calibrated codec on {samples.size} warm-up activations: "
+          f"clip_mode={args.clip_mode} range=[{float(np.min(codec.cmin)):.3f},"
+          f" {float(np.max(codec.cmax)):.3f}]")
+    return codec
+
+
+def _loopback_codec_fn(codec, chunk_elems: int):
+    """Split-boundary hook that streams every tensor over localhost.
+
+    Starts a CloudServer (echoing reconstructions) on a daemon thread and
+    returns a codec_fn whose io_callback submits the boundary activations
+    through the framed streaming client and feeds the *socket-round-
+    tripped* reconstruction back into the jitted step.  The reported rate
+    is the true wire bits/element (frames, headers and all).
+    """
+    import asyncio
+    import threading
+
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import io_callback
+
+    from ..transport import CloudServer, SyncEdgeClient
+
+    loop = asyncio.new_event_loop()
+    threading.Thread(target=loop.run_forever, name="cloud-server",
+                     daemon=True).start()
+    server = CloudServer(echo_features=True)
+    asyncio.run_coroutine_threadsafe(server.start(), loop).result()
+    client = SyncEdgeClient("127.0.0.1", server.port, codec=codec,
+                            chunk_elems=chunk_elems)
+    print(f"loopback transport: streaming split tensors via "
+          f"127.0.0.1:{server.port}")
+
+    def host_roundtrip(x):
+        res = client.submit(np.asarray(x, np.float32))
+        recon = np.asarray(res.arrays[0], np.float32).reshape(x.shape)
+        return recon, np.float32(res.bits_per_elem)
+
+    def codec_fn(x):
+        recon, rate = io_callback(
+            host_roundtrip,
+            (jax.ShapeDtypeStruct(x.shape, jnp.float32),
+             jax.ShapeDtypeStruct((), jnp.float32)),
+            x, ordered=True)
+        return recon.astype(x.dtype), rate
+
+    def cleanup():
+        client.close()
+        asyncio.run_coroutine_threadsafe(server.close(), loop).result()
+        loop.call_soon_threadsafe(loop.stop)
+
+    return codec_fn, cleanup
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -21,13 +116,23 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--codec-levels", type=int, default=0,
                     help="0 = no split codec; else N quantizer levels")
+    ap.add_argument("--clip-mode", default="model",
+                    choices=["model", "empirical", "minmax", "aciq",
+                             "manual"],
+                    help="codec calibration mode (warm-up activations; "
+                         "'manual' keeps the legacy [-8, 8] range)")
+    ap.add_argument("--warmup-batches", type=int, default=4)
+    ap.add_argument("--transport", default="none",
+                    choices=["none", "loopback"],
+                    help="'loopback' streams every split tensor through "
+                         "the framed transport over a localhost socket")
+    ap.add_argument("--chunk-elems", type=int, default=1 << 16)
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
 
     import jax
 
     from ..configs import get_config, reduced
-    from ..core import CodecConfig, calibrate
     from ..models import init_params
     from ..serving import Request, ServeEngine
 
@@ -37,14 +142,19 @@ def main():
     params = init_params(cfg, jax.random.PRNGKey(0))
 
     codec = None
+    codec_fn = None
+    cleanup = None
     if args.codec_levels:
-        codec = calibrate(CodecConfig(n_levels=args.codec_levels,
-                                      clip_mode="manual", manual_cmin=-8.0,
-                                      manual_cmax=8.0))
+        codec = _calibrate_warmup(cfg, params, args)
+        if args.transport == "loopback":
+            codec_fn, cleanup = _loopback_codec_fn(codec, args.chunk_elems)
+            codec = None
+    elif args.transport == "loopback":
+        ap.error("--transport loopback needs --codec-levels")
 
     eng = ServeEngine(cfg, params, slots=4,
                       max_seq=args.prompt_len + args.new_tokens + 8,
-                      codec=codec)
+                      codec=codec, codec_fn=codec_fn)
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
                                         size=args.prompt_len).astype(np.int32),
@@ -59,6 +169,13 @@ def main():
     if eng.rate_log:
         print(f"split-link rate: {np.mean(eng.rate_log):.3f} bits/element "
               f"({16 / max(np.mean(eng.rate_log), 1e-9):.1f}x vs bf16)")
+    if eng.latency_log:
+        lat = [d["latency_s"] for d in eng.latency_log]
+        print(f"request latency: mean={np.mean(lat):.3f}s "
+              f"p50={np.percentile(lat, 50):.3f}s "
+              f"max={np.max(lat):.3f}s")
+    if cleanup is not None:
+        cleanup()
 
 
 if __name__ == "__main__":

@@ -1,6 +1,8 @@
 from .context import DistContext
-from .transformer import (build_groups, decode_step, forward, init_cache,
+from .transformer import (build_groups, decode_step, forward,
+                          forward_from_boundary, forward_head, init_cache,
                           init_params, loss_fn, prefill)
 
 __all__ = ["DistContext", "build_groups", "decode_step", "forward",
+           "forward_from_boundary", "forward_head",
            "init_cache", "init_params", "loss_fn", "prefill"]

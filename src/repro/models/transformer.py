@@ -427,6 +427,46 @@ def forward(cfg: ModelConfig, params, batch_in, *, ctx: DistContext | None = Non
     return _logits_out(cfg, params, x, ctx=ctx), aux
 
 
+def forward_head(cfg: ModelConfig, params, batch_in, *,
+                 ctx: DistContext | None = None):
+    """Edge half of the split forward: embed + the groups before the
+    collaborative-intelligence boundary.  Returns the raw split-layer
+    activations (B, S, d) that cross the edge->cloud link (the transport
+    subsystem streams exactly this tensor)."""
+    groups, boundary = build_groups(cfg, split=True)
+    if not boundary:
+        raise ValueError(f"{cfg.name}: no split boundary (needs >= 2 "
+                         "full periods)")
+    pgroups = _align_param_groups(params, groups)
+    x = _embed_in(cfg, params, batch_in, ctx=ctx)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    for gi in range(boundary):
+        x, _ = _apply_group(x, pgroups[gi], groups[gi], cfg, pos=0,
+                            gcache=None, ctx=ctx, positions=positions)
+    return x
+
+
+def forward_from_boundary(cfg: ModelConfig, params, x, *,
+                          ctx: DistContext | None = None):
+    """Cloud half: the groups after the boundary + final norm/head.
+
+    ``x`` is the (possibly decompressed) split-layer tensor from
+    :func:`forward_head`; returns logits (B, S, V).  Together the two
+    halves are numerically identical to :func:`forward` with an identity
+    ``codec_fn`` -- asserted in tests/test_transport.py."""
+    groups, boundary = build_groups(cfg, split=True)
+    if not boundary:
+        raise ValueError(f"{cfg.name}: no split boundary (needs >= 2 "
+                         "full periods)")
+    pgroups = _align_param_groups(params, groups)
+    x = jnp.asarray(x, jnp.dtype(cfg.dtype))
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    for gi in range(boundary, len(groups)):
+        x, _ = _apply_group(x, pgroups[gi], groups[gi], cfg, pos=0,
+                            gcache=None, ctx=ctx, positions=positions)
+    return _logits_out(cfg, params, x, ctx=ctx)
+
+
 def _hidden_forward(cfg, params, batch_in, *, ctx, codec_fn, split, remat):
     """Backbone only: returns final hidden states (B, S, d) + aux."""
     groups, boundary = build_groups(cfg, split or codec_fn is not None)

@@ -2,14 +2,24 @@
 feature codec applied at the split layer.
 
 Slots hold independent requests; each engine step decodes one token for
-every active slot (static-shape friendly).  Finished slots are refilled
-from the queue -- the standard continuous-batching pattern, kept minimal.
-The codec path reports bits/element of the split-layer transfer per step.
+every active slot (static-shape friendly).  Finished slots are *refilled
+from the queue mid-flight*: a freed slot gets the next queued request
+prefilled (batch-1, left-padded to the batch's current absolute length so
+its cache positions line up with the shared position counter) and
+scattered into the batched cache, so short requests free capacity instead
+of holding the batch until the longest request finishes.  When every slot
+is idle the engine starts a fresh epoch with a full-batch prefill (which
+also admits prompts longer than the current position).
+
+The codec path reports bits/element of the split-layer transfer per step,
+and per-request wall-clock latency lands in ``latency_log``.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import logging
+import time
 from typing import Callable
 
 import jax
@@ -20,6 +30,8 @@ from ..configs.base import ModelConfig
 from ..core.codec import FeatureCodec
 from ..models import decode_step, init_cache, prefill
 
+log = logging.getLogger(__name__)
+
 
 @dataclasses.dataclass
 class Request:
@@ -27,17 +39,32 @@ class Request:
     max_new_tokens: int = 16
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
+    t_admit: float | None = None
+    t_done: float | None = None
+
+    @property
+    def latency_s(self) -> float | None:
+        if self.t_admit is None or self.t_done is None:
+            return None
+        return self.t_done - self.t_admit
 
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_seq: int = 256, ctx=None, codec_fn=None,
-                 codec: FeatureCodec | None = None):
+                 codec: FeatureCodec | None = None, refill_align: int = 1):
         """``codec`` is the preferred split-layer hookup: a calibrated
         :class:`FeatureCodec` (any granularity/backend) whose fused
         fake-quant + rate estimate is applied at the boundary.  The raw
         ``codec_fn`` callable ``x -> (x', rate_bits)`` remains for custom
-        transforms."""
+        transforms.
+
+        ``refill_align``: admit mid-epoch refills only at positions that
+        are multiples of this.  Every refill prefills at the current
+        absolute length, so each *distinct* length jit-compiles once;
+        raising the alignment bounds the compile set to
+        ``max_seq / refill_align`` at the cost of freed slots idling up
+        to ``refill_align - 1`` steps."""
         self.cfg, self.params, self.ctx = cfg, params, ctx
         if codec is not None:
             if codec_fn is not None:
@@ -46,7 +73,9 @@ class ServeEngine:
         self.codec_fn = codec_fn
         self.slots = slots
         self.max_seq = max_seq
+        self.refill_align = max(1, refill_align)
         self.rate_log: list[float] = []
+        self.latency_log: list[dict] = []
 
         self._prefill = jax.jit(
             lambda p, t, c: prefill(cfg, p, t, c, ctx=ctx, codec_fn=codec_fn))
@@ -54,31 +83,128 @@ class ServeEngine:
             lambda p, t, c, pos: decode_step(cfg, p, t, c, pos, ctx=ctx,
                                              codec_fn=codec_fn))
 
-    def generate(self, requests: list[Request], greedy: bool = True):
-        """Run all requests to completion (simple same-length batching)."""
-        for i in range(0, len(requests), self.slots):
-            self._run_batch(requests[i:i + self.slots])
-        return requests
+    # -- scheduling -----------------------------------------------------------
 
-    def _run_batch(self, batch: list[Request]):
-        n = len(batch)
-        plen = max(len(r.prompt) for r in batch)
-        toks = np.zeros((n, plen), np.int32)
-        for i, r in enumerate(batch):
-            toks[i, -len(r.prompt):] = r.prompt  # left-pad with 0
-        cache = init_cache(self.cfg, batch=n, max_seq=self.max_seq,
-                           split=self.codec_fn is not None)
-        logits, cache = self._prefill(self.params, jnp.asarray(toks), cache)
-        cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        steps = max(r.max_new_tokens for r in batch)
-        for t in range(steps):
-            for i, r in enumerate(batch):
+    def generate(self, requests: list[Request], greedy: bool = True):
+        """Run all requests to completion (continuous batching with slot
+        refill)."""
+        for r in requests:
+            if len(r.prompt) + r.max_new_tokens > self.max_seq:
+                raise ValueError(
+                    f"request needs {len(r.prompt) + r.max_new_tokens} "
+                    f"cache positions, engine has max_seq={self.max_seq}")
+        queue = list(requests)
+        active: list[Request | None] = [None] * self.slots
+        cache = None
+        cur = None          # (slots,) next token per slot
+        pos = 0             # shared absolute position of the next decode
+
+        while queue or any(r is not None for r in active):
+            if all(r is None for r in active):
+                cache, cur, pos = self._start_epoch(queue, active)
+                continue
+            # one decode step for every slot (finished/empty slots ride
+            # along; their logits are ignored)
+            for i, r in enumerate(active):
+                if r is None:
+                    continue
                 if len(r.out_tokens) < r.max_new_tokens:
                     r.out_tokens.append(int(cur[i]))
+                if len(r.out_tokens) >= r.max_new_tokens:
+                    self._retire(active, i)
+            if all(r is None for r in active) and not queue:
+                break
+            if pos % self.refill_align == 0:
+                for i in range(self.slots):
+                    if active[i] is None and queue:
+                        cache, cur = self._refill(queue, active, i, cache,
+                                                  cur, pos)
+            if all(r is None for r in active):
+                continue    # nothing admitted (prompts too long for pos)
             lg, cache, aux = self._decode(self.params, cur, cache,
-                                          jnp.int32(plen + t))
+                                          jnp.int32(pos))
             if "codec_rate_bits" in aux:
                 self.rate_log.append(float(aux["codec_rate_bits"]))
             cur = jnp.argmax(lg, axis=-1).astype(jnp.int32)
-        for r in batch:
-            r.done = True
+            pos += 1
+        return requests
+
+    def _retire(self, active: list, i: int) -> None:
+        r = active[i]
+        r.done = True
+        r.t_done = time.perf_counter()
+        self.latency_log.append({
+            "slot": i, "prompt_len": int(len(r.prompt)),
+            "new_tokens": len(r.out_tokens), "latency_s": r.latency_s,
+        })
+        log.info("request done: slot=%d prompt_len=%d tokens=%d "
+                 "latency=%.3fs", i, len(r.prompt), len(r.out_tokens),
+                 r.latency_s)
+        active[i] = None
+
+    def _admissible(self, r: Request, plen: int) -> bool:
+        """Can ``r`` be prefilled at padded length ``plen``?"""
+        return len(r.prompt) <= plen \
+            and plen + r.max_new_tokens <= self.max_seq
+
+    def _start_epoch(self, queue: list, active: list):
+        """Full-batch prefill of up to ``slots`` queued requests."""
+        batch = [queue.pop(0) for _ in range(min(self.slots, len(queue)))]
+        plen = max(len(r.prompt) for r in batch)
+        toks = np.zeros((self.slots, plen), np.int32)
+        t_admit = time.perf_counter()
+        for i, r in enumerate(batch):
+            toks[i, plen - len(r.prompt):] = r.prompt  # left-pad with 0
+            r.t_admit = t_admit
+            active[i] = r
+        cache = init_cache(self.cfg, batch=self.slots, max_seq=self.max_seq,
+                           split=self.codec_fn is not None)
+        logits, cache = self._prefill(self.params, jnp.asarray(toks), cache)
+        cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        # zero-token requests retire immediately
+        for i, r in enumerate(batch):
+            if r.max_new_tokens <= 0:
+                self._retire(active, i)
+        return cache, cur, plen
+
+    def _refill(self, queue: list, active: list, slot: int, cache, cur,
+                pos: int):
+        """Admit the next queued request into a freed slot mid-epoch.
+
+        The prompt is left-padded to the batch's current absolute length
+        ``pos`` and prefilled at batch size 1, then its cache is scattered
+        into the batched cache (batch is axis 1 of every cache leaf --
+        leaves are stacked (n_periods, batch, ...)), so the shared
+        position counter stays valid for every slot.  Requests whose
+        prompt is longer than ``pos`` (or that would overflow ``max_seq``)
+        wait for a fresh epoch.
+        """
+        k = next((j for j, r in enumerate(queue)
+                  if self._admissible(r, pos)), None)
+        if k is None:
+            return cache, cur
+        r = queue.pop(k)
+        if r.max_new_tokens <= 0:
+            r.t_admit = time.perf_counter()
+            active[slot] = r
+            self._retire(active, slot)
+            return cache, cur
+        toks = np.zeros((1, pos), np.int32)
+        toks[0, pos - len(r.prompt):] = r.prompt
+        one = init_cache(self.cfg, batch=1, max_seq=self.max_seq,
+                         split=self.codec_fn is not None)
+        r.t_admit = time.perf_counter()
+        logits, one = self._prefill(self.params, jnp.asarray(toks), one)
+        cache = jax.tree.map(lambda full, o: full.at[:, slot].set(o[:, 0]),
+                             cache, one)
+        first = jnp.argmax(logits[0]).astype(jnp.int32)
+        cur = cur.at[slot].set(first)
+        active[slot] = r
+        # this iteration's append phase already ran, so the refilled
+        # request's first generated token is recorded here (it is fed to
+        # the model at this iteration's decode); the next append phase
+        # then records token two
+        r.out_tokens.append(int(first))
+        if len(r.out_tokens) >= r.max_new_tokens:
+            self._retire(active, slot)
+        return cache, cur

@@ -1,0 +1,37 @@
+"""Streaming split-inference transport: chunked bitstream framing, async
+edge<->cloud sessions, and bandwidth-adaptive rate control.
+
+Layering (bottom up):
+
+  framing      -- length-prefixed CRC'd frames, incremental FrameReader
+  stream_codec -- tensor <-> frame streams (chunked FeatureCodec payloads)
+  rate_control -- bits/element budget tracking + quantizer rung selection
+  server       -- asyncio cloud half (incremental decode + model tail)
+  client       -- asyncio edge half (multiplexed sessions, sync facade)
+
+The chunked codec itself (``FeatureCodec.encode_stream`` /
+``decode_stream``) lives in :mod:`repro.core.codec`; this package is the
+wire protocol and session machinery around it.  See DESIGN.md,
+"Transport framing and streaming sessions".
+"""
+
+from .client import EdgeClient, SubmitResult, SyncEdgeClient, TransportError
+from .framing import (FT_CHUNK, FT_END, FT_ERROR, FT_FEEDBACK, FT_HEADER,
+                      FT_RESULT, Frame, FrameReader, FramingError,
+                      encode_frame, pack_arrays, unpack_arrays)
+from .rate_control import (DEFAULT_LADDER, CodecBank, RateControlConfig,
+                           RateController)
+from .server import CloudServer
+from .stream_codec import (DEFAULT_CHUNK_ELEMS, Feedback, TensorAssembler,
+                           tensor_to_frames)
+
+__all__ = [
+    "EdgeClient", "SyncEdgeClient", "SubmitResult", "TransportError",
+    "Frame", "FrameReader", "FramingError", "encode_frame",
+    "pack_arrays", "unpack_arrays",
+    "FT_HEADER", "FT_CHUNK", "FT_END", "FT_RESULT", "FT_FEEDBACK",
+    "FT_ERROR",
+    "CodecBank", "RateControlConfig", "RateController", "DEFAULT_LADDER",
+    "CloudServer", "TensorAssembler", "tensor_to_frames", "Feedback",
+    "DEFAULT_CHUNK_ELEMS",
+]

@@ -1,0 +1,232 @@
+"""Edge-side streaming client (asyncio) + a synchronous wrapper.
+
+:class:`EdgeClient` streams split-layer tensors to a
+:class:`~repro.transport.server.CloudServer` over one connection.  Any
+number of :meth:`submit` coroutines may run concurrently: sessions are
+multiplexed at frame granularity (a per-connection write lock keeps
+frames atomic, ``await drain()`` after every frame bounds the send queue
+and propagates TCP backpressure into the encoder).
+
+Each chunk is entropy-coded in a worker thread while the previous frame
+is on the wire, which is the encode/transfer overlap the transport
+benchmark measures.  With a :class:`RateController` + :class:`CodecBank`
+attached, every submit re-picks the quantizer rung against the
+bits/element budget and the link state fed back by the cloud.
+
+:class:`SyncEdgeClient` runs the event loop on a background thread so
+blocking callers (the serving engine's loopback transport, scripts) get
+a plain ``submit(x) -> arrays`` call.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import threading
+import time
+
+import numpy as np
+
+from ..core.codec import FeatureCodec
+from .framing import (FT_ERROR, FT_FEEDBACK, FT_RESULT, FrameReader,
+                      unpack_arrays)
+from .rate_control import CodecBank, RateController
+from .stream_codec import DEFAULT_CHUNK_ELEMS, Feedback, tensor_to_frames
+
+
+class TransportError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class SubmitResult:
+    arrays: list[np.ndarray]      # RESULT arrays from the cloud
+    n_levels: int
+    coded_bytes: int
+    n_elems: int
+    bits_per_elem: float
+    send_s: float                 # time spent encoding+writing frames
+    total_s: float                # submit round-trip time
+    feedback: Feedback | None = None
+
+
+class EdgeClient:
+    def __init__(self, host: str, port: int, *,
+                 codec: FeatureCodec | None = None,
+                 codec_bank: CodecBank | None = None,
+                 rate_controller: RateController | None = None,
+                 chunk_elems: int = DEFAULT_CHUNK_ELEMS,
+                 coder_mode: str = "auto") -> None:
+        if codec is None and codec_bank is None:
+            raise ValueError("need a codec or a codec_bank")
+        if rate_controller is not None and codec_bank is None:
+            raise ValueError("rate control needs a codec_bank (per-rung "
+                             "calibrated codecs)")
+        self.host, self.port = host, port
+        self.codec = codec
+        self.codec_bank = codec_bank
+        self.rate_controller = rate_controller
+        self.chunk_elems = chunk_elems
+        self.coder_mode = coder_mode
+        self._reader: asyncio.StreamReader | None = None
+        self._writer: asyncio.StreamWriter | None = None
+        self._write_lock = asyncio.Lock()
+        self._pending: dict[int, asyncio.Future] = {}
+        self._feedback: dict[int, Feedback] = {}
+        self._next_session = 0
+        self._reader_task: asyncio.Task | None = None
+        self._dead: Exception | None = None
+
+    async def connect(self) -> "EdgeClient":
+        self._reader, self._writer = await asyncio.open_connection(
+            self.host, self.port)
+        self._reader_task = asyncio.ensure_future(self._read_loop())
+        return self
+
+    async def __aenter__(self) -> "EdgeClient":
+        return await self.connect()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.close()
+
+    async def close(self) -> None:
+        if self._reader_task is not None:
+            self._reader_task.cancel()
+            try:
+                await self._reader_task
+            except (asyncio.CancelledError, ConnectionError):
+                pass
+            self._reader_task = None
+        if self._writer is not None:
+            self._writer.close()
+            try:
+                await self._writer.wait_closed()
+            except ConnectionError:
+                pass
+            self._writer = None
+
+    # -- receive path ---------------------------------------------------------
+
+    async def _read_loop(self) -> None:
+        frames = FrameReader()
+        try:
+            while True:
+                data = await self._reader.read(1 << 16)
+                if not data:
+                    raise ConnectionError("cloud closed the connection")
+                frames.feed(data)
+                for frame in frames:
+                    if frame.ftype == FT_RESULT:
+                        fut = self._pending.pop(frame.session, None)
+                        if fut is not None and not fut.done():
+                            fut.set_result(unpack_arrays(frame.payload))
+                    elif frame.ftype == FT_FEEDBACK:
+                        fb = Feedback.decode(frame)
+                        self._feedback[frame.session] = fb
+                        if self.rate_controller is not None:
+                            self.rate_controller.on_feedback(
+                                fb.recv_bytes_per_s, fb.queue_depth)
+                    elif frame.ftype == FT_ERROR:
+                        raise TransportError(frame.payload.decode())
+        except asyncio.CancelledError:
+            self._fail_pending(TransportError("client closed"))
+            raise
+        except Exception as e:  # framing errors, connection loss, ...
+            # fail in-flight AND future submits: a dead reader must never
+            # leave a submit() awaiting a result that cannot arrive
+            self._fail_pending(TransportError(str(e)))
+
+    def _fail_pending(self, err: Exception) -> None:
+        self._dead = err
+        for fut in self._pending.values():
+            if not fut.done():
+                fut.set_exception(err)
+        self._pending.clear()
+
+    # -- send path ------------------------------------------------------------
+
+    def _pick_codec(self) -> tuple[FeatureCodec, int]:
+        if self.rate_controller is not None:
+            n = self.rate_controller.next_levels()
+            return self.codec_bank.get(n), n
+        if self.codec is not None:
+            return self.codec, self.codec.config.n_levels
+        n = max(self.codec_bank.ladder)
+        return self.codec_bank.get(n), n
+
+    async def submit(self, x: np.ndarray,
+                     codec: FeatureCodec | None = None) -> SubmitResult:
+        """Stream one tensor; resolves when the cloud's RESULT arrives."""
+        if self._writer is None:
+            raise TransportError("not connected")
+        if self._dead is not None:
+            raise TransportError(f"connection failed: {self._dead}")
+        if codec is None:
+            codec, n_levels = self._pick_codec()
+        else:
+            n_levels = codec.config.n_levels
+        session = self._next_session
+        self._next_session += 1
+        fut = asyncio.get_running_loop().create_future()
+        self._pending[session] = fut
+
+        x = np.asarray(x, np.float32)
+        t0 = time.perf_counter()
+        coded = 0
+        gen = tensor_to_frames(codec, x, session,
+                               chunk_elems=self.chunk_elems,
+                               coder_mode=self.coder_mode)
+        while True:
+            # chunk entropy-coding runs off-loop, overlapping the socket
+            frame_bytes = await asyncio.to_thread(next, gen, None)
+            if frame_bytes is None:
+                break
+            coded += len(frame_bytes)
+            async with self._write_lock:
+                self._writer.write(frame_bytes)
+                await self._writer.drain()
+            if self.rate_controller is not None:
+                buf = self._writer.transport.get_write_buffer_size()
+                self.rate_controller.on_queue_depth(buf // (1 << 16))
+        send_s = time.perf_counter() - t0
+
+        arrays = await fut
+        total_s = time.perf_counter() - t0
+        fb = self._feedback.pop(session, None)
+        if self.rate_controller is not None:
+            self.rate_controller.on_tensor(n_levels, coded, x.size,
+                                           send_seconds=send_s)
+        return SubmitResult(arrays=arrays, n_levels=n_levels,
+                            coded_bytes=coded, n_elems=int(x.size),
+                            bits_per_elem=8.0 * coded / max(x.size, 1),
+                            send_s=send_s, total_s=total_s, feedback=fb)
+
+
+class SyncEdgeClient:
+    """Blocking facade: owns an event loop on a daemon thread.
+
+    Used by the serving launcher's ``--transport loopback`` path, where
+    the split-boundary callback runs inside a jitted step and cannot
+    await.
+    """
+
+    def __init__(self, *args, **kwargs) -> None:
+        self._client = EdgeClient(*args, **kwargs)
+        self._loop = asyncio.new_event_loop()
+        self._thread = threading.Thread(target=self._loop.run_forever,
+                                        name="edge-client", daemon=True)
+        self._thread.start()
+        self._run(self._client.connect())
+
+    def _run(self, coro):
+        return asyncio.run_coroutine_threadsafe(coro, self._loop).result()
+
+    def submit(self, x: np.ndarray,
+               codec: FeatureCodec | None = None) -> SubmitResult:
+        return self._run(self._client.submit(x, codec=codec))
+
+    def close(self) -> None:
+        self._run(self._client.close())
+        self._loop.call_soon_threadsafe(self._loop.stop)
+        self._thread.join(timeout=5)
+        self._loop.close()

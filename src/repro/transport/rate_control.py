@@ -1,0 +1,165 @@
+"""Bandwidth-adaptive rate control for streamed split-layer tensors.
+
+The self-describing bitstream header makes every tensor independently
+decodable, so the edge is free to re-pick the quantizer *per request*.
+:class:`RateController` chooses the ``n_levels`` rung of a calibrated
+codec ladder (:class:`CodecBank`) so that
+
+  * the *running average* bits/element tracks a target budget (a leaky
+    bucket over coded bits: if the stream has been running hot the next
+    tensor is coded coarser, and vice versa -- this is what keeps the
+    long-run rate within a few percent of the budget even though the
+    ladder is discrete), and
+  * sustained link pressure (send queue building up, or measured
+    throughput falling below what the current rate needs) steps the rung
+    down ahead of the bucket, so a bandwidth drop degrades quantization
+    instead of stalling the pipeline.
+
+Per-rung bits/element is learned online from the actual coded sizes
+(EWMA per rung, log2-scaled estimates for unvisited rungs), so the
+controller needs no a-priori rate model of the feature distribution.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+DEFAULT_LADDER = (2, 3, 4, 6, 8, 12, 16, 24, 32)
+
+
+@dataclasses.dataclass
+class RateControlConfig:
+    target_bpe: float                     # budget, bits per element on the wire
+    ladder: tuple[int, ...] = DEFAULT_LADDER
+    ewma: float = 0.4                     # per-rung bpe measurement smoothing
+    window_elems: int = 1 << 22           # leaky-bucket horizon (elements)
+    queue_high: int = 8                   # frames queued => link pressure
+    throughput_ewma: float = 0.3
+
+
+class RateController:
+    def __init__(self, cfg: RateControlConfig) -> None:
+        if cfg.target_bpe <= 0:
+            raise ValueError("target_bpe must be positive")
+        self.cfg = cfg
+        self.ladder = tuple(sorted(set(cfg.ladder)))
+        self._bpe = {}                    # rung -> EWMA measured bits/elem
+        self._bucket_bits = 0.0           # leaky bucket: coded bits
+        self._bucket_elems = 0.0
+        self._queue_depth = 0
+        self._throughput = None           # EWMA bytes/s of the link
+        self._last_levels = None
+        self.history: list[dict] = []
+
+    # -- measurements ---------------------------------------------------------
+
+    def on_tensor(self, n_levels: int, coded_bytes: int, n_elems: int,
+                  send_seconds: float | None = None) -> None:
+        """Record one coded tensor (and optionally its send time)."""
+        if n_elems <= 0:
+            return
+        bpe = 8.0 * coded_bytes / n_elems
+        prev = self._bpe.get(n_levels)
+        a = self.cfg.ewma
+        self._bpe[n_levels] = bpe if prev is None else a * bpe + (1 - a) * prev
+        self._bucket_bits += 8.0 * coded_bytes
+        self._bucket_elems += n_elems
+        # leak so that only ~window_elems of history steers the bucket
+        if self._bucket_elems > self.cfg.window_elems:
+            scale = self.cfg.window_elems / self._bucket_elems
+            self._bucket_bits *= scale
+            self._bucket_elems *= scale
+        if send_seconds and send_seconds > 0:
+            tput = coded_bytes / send_seconds
+            t = self.cfg.throughput_ewma
+            self._throughput = tput if self._throughput is None \
+                else t * tput + (1 - t) * self._throughput
+        self.history.append({"n_levels": n_levels, "bpe": bpe,
+                             "cum_bpe": self.measured_bpe,
+                             "queue_depth": self._queue_depth})
+
+    def on_queue_depth(self, depth: int) -> None:
+        self._queue_depth = int(depth)
+
+    def on_feedback(self, recv_bytes_per_s: float, queue_depth: int) -> None:
+        """Cloud-side FEEDBACK frame: receiver-measured link throughput."""
+        if recv_bytes_per_s > 0:
+            t = self.cfg.throughput_ewma
+            self._throughput = recv_bytes_per_s if self._throughput is None \
+                else t * recv_bytes_per_s + (1 - t) * self._throughput
+        self._queue_depth = max(self._queue_depth, int(queue_depth))
+
+    # -- decisions ------------------------------------------------------------
+
+    @property
+    def measured_bpe(self) -> float:
+        if self._bucket_elems <= 0:
+            return 0.0
+        return self._bucket_bits / self._bucket_elems
+
+    @property
+    def link_bytes_per_s(self) -> float | None:
+        return self._throughput
+
+    def estimate_bpe(self, n_levels: int) -> float:
+        """Expected coded bits/element at a rung: measured EWMA when the
+        rung has been used, else scaled from the nearest measured rung by
+        the log2(N) ratio (exact for uniform indices, adequate to order
+        the ladder), else the TU-coded upper bound log2(N)."""
+        if n_levels in self._bpe:
+            return self._bpe[n_levels]
+        if self._bpe:
+            ref = min(self._bpe, key=lambda n: abs(math.log2(n / n_levels)))
+            return self._bpe[ref] * math.log2(n_levels) / math.log2(ref)
+        return math.log2(n_levels)
+
+    def next_levels(self) -> int:
+        """Rung for the next tensor against the budget + link state."""
+        # leaky bucket: aim the next tensor at 2*target - running average,
+        # so rate errors are actively paid back instead of persisting
+        desired = 2 * self.cfg.target_bpe - self.measured_bpe \
+            if self._bucket_elems > 0 else self.cfg.target_bpe
+        desired = float(np.clip(desired, 0.25 * self.cfg.target_bpe,
+                                2.0 * self.cfg.target_bpe))
+        choice = self.ladder[0]
+        for n in self.ladder:
+            if self.estimate_bpe(n) <= desired:
+                choice = n
+        if self._queue_depth >= self.cfg.queue_high \
+                and self._last_levels is not None:
+            # sustained backpressure: step below the last rung regardless
+            below = [n for n in self.ladder if n < self._last_levels]
+            if below:
+                choice = min(choice, below[-1])
+        self._last_levels = choice
+        return choice
+
+
+class CodecBank:
+    """Calibrated codecs at every ladder rung, sharing one sample set.
+
+    Calibration is per-rung because the optimal clipping range depends on
+    N (coarser quantizers clip tighter); codecs are built lazily and
+    cached, so switching rungs mid-stream costs nothing after first use.
+    """
+
+    def __init__(self, base_config, samples: np.ndarray,
+                 ladder: tuple[int, ...] = DEFAULT_LADDER) -> None:
+        from ..core.codec import calibrate
+        self._calibrate = calibrate
+        self.base_config = base_config
+        self.samples = np.asarray(samples, np.float32)
+        self.ladder = tuple(sorted(set(ladder)))
+        self._codecs = {}
+
+    def get(self, n_levels: int):
+        if n_levels not in self.ladder:
+            raise KeyError(f"{n_levels} not in ladder {self.ladder}")
+        if n_levels not in self._codecs:
+            cfg = dataclasses.replace(self.base_config, n_levels=n_levels)
+            self._codecs[n_levels] = self._calibrate(cfg,
+                                                     samples=self.samples)
+        return self._codecs[n_levels]

@@ -1,0 +1,162 @@
+"""Cloud-side streaming server (asyncio).
+
+Accepts one or more edge connections, demultiplexes interleaved tensor
+sessions, entropy-decodes chunk frames *as they arrive* (the expensive
+stage overlaps the transfer), and on each END frame reconstructs the
+split-layer tensor and runs the cloud half (``tail_fn``).  The result
+arrays go back in a RESULT frame; a FEEDBACK frame carries
+receiver-measured link throughput and queue depth for the edge-side
+rate controller.
+
+Backpressure is the transport's: frames are processed in arrival order
+per connection and the server only reads more bytes once the previous
+batch is handled, so a slow cloud propagates to TCP flow control and
+ultimately to the edge's bounded send path.
+
+Decode and tail computation run via ``asyncio.to_thread`` so heartbeats
+and other connections stay responsive while numpy/jax work runs.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import logging
+import time
+from typing import Callable
+
+import numpy as np
+
+from .framing import (FT_CHUNK, FT_END, FT_ERROR, FT_HEADER, FT_RESULT,
+                      FrameReader, FramingError, encode_frame, pack_arrays)
+from .stream_codec import Feedback, TensorAssembler
+
+log = logging.getLogger(__name__)
+
+
+class _Session:
+    __slots__ = ("assembler", "t_first", "decode_s", "seq")
+
+    def __init__(self, assembler: TensorAssembler) -> None:
+        self.assembler = assembler
+        self.t_first = time.perf_counter()
+        self.decode_s = 0.0
+        self.seq = 0
+
+
+class CloudServer:
+    """``async with CloudServer(tail_fn=...) as srv: await srv.wait_closed()``
+
+    ``tail_fn``: reconstruction -> ndarray (or list of ndarrays), the
+    cloud half of the split network.  None echoes nothing back beyond
+    what ``echo_features`` selects.
+    ``echo_features``: prepend the reconstructed split-layer tensor to
+    the RESULT arrays (used by the demo/tests for the bit-exactness
+    check and by the loopback serving transport).
+    """
+
+    def __init__(self, *, tail_fn: Callable | None = None,
+                 echo_features: bool = False, host: str = "127.0.0.1",
+                 port: int = 0, backend=None) -> None:
+        self.tail_fn = tail_fn
+        self.echo_features = echo_features
+        self.host = host
+        self.port = port
+        self._backend = backend
+        self._server: asyncio.AbstractServer | None = None
+        self.sessions_served = 0
+        self.open_connections = 0
+
+    async def start(self) -> "CloudServer":
+        self._server = await asyncio.start_server(self._handle, self.host,
+                                                  self.port)
+        self.port = self._server.sockets[0].getsockname()[1]
+        log.info("cloud server listening on %s:%d", self.host, self.port)
+        return self
+
+    async def __aenter__(self) -> "CloudServer":
+        return await self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.close()
+
+    async def close(self) -> None:
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+            self._server = None
+
+    async def wait_closed(self) -> None:
+        if self._server is not None:
+            await self._server.serve_forever()
+
+    # -- connection handling --------------------------------------------------
+
+    async def _handle(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter) -> None:
+        peer = writer.get_extra_info("peername")
+        log.info("edge connected: %s", peer)
+        self.open_connections += 1
+        frames = FrameReader()
+        sessions: dict[int, _Session] = {}
+        try:
+            while True:
+                data = await reader.read(1 << 16)
+                if not data:
+                    break
+                frames.feed(data)
+                for frame in frames:
+                    if frame.ftype in (FT_HEADER, FT_CHUNK, FT_END):
+                        await self._on_tensor_frame(frame, sessions, writer)
+                    else:
+                        raise FramingError(
+                            f"unexpected frame type {frame.ftype} from edge")
+        except (FramingError, ValueError) as e:
+            log.error("protocol error from %s: %s", peer, e)
+            try:
+                writer.write(encode_frame(FT_ERROR, 0, 0, str(e).encode()))
+                await writer.drain()
+            except ConnectionError:
+                pass
+        except ConnectionError:
+            pass
+        finally:
+            self.open_connections -= 1
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except ConnectionError:
+                pass
+            log.info("edge disconnected: %s", peer)
+
+    async def _on_tensor_frame(self, frame, sessions, writer) -> None:
+        sess = sessions.get(frame.session)
+        if sess is None:
+            sess = sessions[frame.session] = _Session(
+                TensorAssembler(backend=self._backend))
+        t0 = time.perf_counter()
+        tensor = await asyncio.to_thread(sess.assembler.feed, frame)
+        sess.decode_s += time.perf_counter() - t0
+        if tensor is None:
+            return
+        del sessions[frame.session]
+        self.sessions_served += 1
+        arrays = [tensor] if self.echo_features else []
+        if self.tail_fn is not None:
+            t0 = time.perf_counter()
+            out = await asyncio.to_thread(self.tail_fn, tensor)
+            sess.decode_s += time.perf_counter() - t0
+            arrays.extend(out if isinstance(out, (list, tuple)) else [out])
+        elapsed = max(time.perf_counter() - sess.t_first, 1e-9)
+        fb = Feedback(
+            recv_bytes_per_s=sess.assembler.chunk_bytes / elapsed,
+            decode_s=sess.decode_s,
+            queue_depth=len(sessions),
+            active_sessions=len(sessions),
+        )
+        # FEEDBACK goes out *before* RESULT: the client resolves the
+        # session on RESULT, so in-order delivery guarantees the submit
+        # sees its own link stats
+        writer.write(fb.encode(frame.session, sess.seq))
+        writer.write(encode_frame(FT_RESULT, frame.session, sess.seq + 1,
+                                  pack_arrays([np.asarray(a) for a in arrays])))
+        await writer.drain()

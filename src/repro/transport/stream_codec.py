@@ -1,0 +1,134 @@
+"""Chunked tensor <-> frame stream glue.
+
+Maps :meth:`FeatureCodec.encode_stream` payloads onto wire frames
+(HEADER, CHUNK..., END) for one session, and reassembles/decodes the
+frames on the receiving side with :class:`TensorAssembler` --
+entropy-decoding each chunk the moment its frame arrives, so decode
+overlaps the transfer and only the final dequantize waits for END.
+
+FEEDBACK frame payloads (link stats the cloud reports back for the
+edge-side rate controller) are also defined here so both halves share
+one layout.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import struct
+
+import numpy as np
+
+from ..core.codec import ChunkStreamDecoder, FeatureCodec
+from .framing import (FT_CHUNK, FT_END, FT_FEEDBACK, FT_HEADER, Frame,
+                      encode_frame)
+
+# Chunk size balances pipeline granularity against per-chunk coder cost:
+# the vectorized coder's python step loop runs ~bits/lanes iterations with
+# lanes capped by payload size, so many small chunks multiply loop overhead
+# (19 x 64Ki-elem chunks cost ~7x one 1.2M-elem encode).  256Ki elements
+# keeps chunk overhead ~2x while still giving a multi-MB tensor a
+# several-stage pipeline.
+DEFAULT_CHUNK_ELEMS = 1 << 18
+
+_END_FMT = "<I"            # n_chunks sent (completeness check)
+_FEEDBACK_FMT = "<ddII"    # recv_bytes_per_s, decode_s, queue_depth, sessions
+
+
+def tensor_to_frames(codec: FeatureCodec, x: np.ndarray, session: int,
+                     chunk_elems: int = DEFAULT_CHUNK_ELEMS,
+                     coder_mode: str = "auto"):
+    """Yield wire-ready frame bytes for one tensor (HEADER, CHUNKs, END).
+
+    A generator on purpose: the sender can put each frame on the socket
+    while the next chunk is still being entropy-coded, which is the
+    overlap ``benchmarks/bench_transport.py`` measures.
+    """
+    seq = 0
+    for payload in codec.encode_stream(x, chunk_elems=chunk_elems,
+                                       coder_mode=coder_mode):
+        ftype = FT_HEADER if seq == 0 else FT_CHUNK
+        yield encode_frame(ftype, session, seq, payload)
+        seq += 1
+    yield encode_frame(FT_END, session, seq, struct.pack(_END_FMT, seq - 1))
+
+
+class TensorAssembler:
+    """Per-session receiver: feed frames, get the reconstructed tensor.
+
+    ``feed`` returns the reconstruction (a float32 ndarray, bit-exact
+    with the in-process ``codec.decode(codec.encode(x))`` path) when the
+    END frame completes the tensor, else None.  Chunk frames are
+    entropy-decoded immediately on arrival.
+    """
+
+    def __init__(self, *, backend=None, ecsq=None) -> None:
+        self._backend = backend
+        self._ecsq = ecsq
+        self._dec: ChunkStreamDecoder | None = None
+        self._end_chunks: int | None = None
+        self.chunk_bytes = 0          # coded payload bytes seen so far
+
+    @property
+    def started(self) -> bool:
+        return self._dec is not None
+
+    @property
+    def n_elems(self) -> int:
+        if self._dec is None:
+            raise ValueError("no HEADER frame yet")
+        return self._dec.header.n_elems
+
+    def _maybe_finish(self) -> np.ndarray | None:
+        if self._end_chunks is None or self._dec is None:
+            return None
+        if not self._dec.complete:
+            return None
+        return self._dec.finish()
+
+    def feed(self, frame: Frame) -> np.ndarray | None:
+        if frame.ftype == FT_HEADER:
+            if self._dec is not None:
+                raise ValueError("duplicate HEADER frame")
+            self._dec = ChunkStreamDecoder(frame.payload,
+                                           backend=self._backend,
+                                           ecsq=self._ecsq)
+            self.chunk_bytes += len(frame.payload)
+            return self._maybe_finish()
+        if frame.ftype == FT_CHUNK:
+            if self._dec is None:
+                raise ValueError("CHUNK before HEADER")
+            self._dec.add_chunk(frame.payload)
+            self.chunk_bytes += len(frame.payload)
+            return self._maybe_finish()
+        if frame.ftype == FT_END:
+            (n_chunks,) = struct.unpack(_END_FMT, frame.payload)
+            if self._dec is None or n_chunks != self._dec.n_chunks:
+                raise ValueError("END does not match stream header")
+            self._end_chunks = n_chunks
+            return self._maybe_finish()
+        raise ValueError(f"unexpected frame type {frame.ftype} in tensor "
+                         "stream")
+
+
+@dataclasses.dataclass
+class Feedback:
+    """Cloud-side link stats, one per completed tensor (FEEDBACK frames)."""
+
+    recv_bytes_per_s: float
+    decode_s: float
+    queue_depth: int
+    active_sessions: int
+
+    def encode(self, session: int, seq: int) -> bytes:
+        payload = struct.pack(_FEEDBACK_FMT, self.recv_bytes_per_s,
+                              self.decode_s, self.queue_depth,
+                              self.active_sessions)
+        return encode_frame(FT_FEEDBACK, session, seq, payload)
+
+    @classmethod
+    def decode(cls, frame: Frame) -> "Feedback":
+        if frame.ftype != FT_FEEDBACK:
+            raise ValueError("not a FEEDBACK frame")
+        r, d, q, s = struct.unpack(_FEEDBACK_FMT, frame.payload)
+        return cls(recv_bytes_per_s=r, decode_s=d, queue_depth=q,
+                   active_sessions=s)

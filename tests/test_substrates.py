@@ -162,3 +162,55 @@ class TestServing:
         assert len(eng.rate_log) > 0
         # entropy-coded TU bits/elem for N=4 is bounded by the max TU length
         assert all(0 <= r <= 3.0 for r in eng.rate_log)
+
+    def test_slot_refill_staggered_lengths(self, tiny_cfg):
+        """Short requests free their slot mid-epoch and queued requests
+        are admitted without waiting for the longest request."""
+        from repro.serving import Request, ServeEngine
+        params = init_params(tiny_cfg, jax.random.PRNGKey(0))
+        eng = ServeEngine(tiny_cfg, params, slots=2, max_seq=64)
+        rng = np.random.default_rng(0)
+        reqs = [Request(prompt=rng.integers(0, 128, 5).astype(np.int32),
+                        max_new_tokens=m) for m in (2, 9, 3, 4, 1)]
+        eng.generate(reqs)
+        for r in reqs:
+            assert r.done and len(r.out_tokens) == r.max_new_tokens
+            assert r.latency_s is not None and r.latency_s >= 0
+        assert len(eng.latency_log) == len(reqs)
+        assert all(d["latency_s"] >= 0 for d in eng.latency_log)
+
+    def test_refilled_request_keeps_first_token(self, tiny_cfg):
+        """Regression: the refill path must record the prefill argmax as
+        the request's first generated token, not silently consume it."""
+        import jax.numpy as jnp
+
+        from repro.models import init_cache, prefill
+        from repro.serving import Request, ServeEngine
+        params = init_params(tiny_cfg, jax.random.PRNGKey(0))
+        eng = ServeEngine(tiny_cfg, params, slots=1, max_seq=64)
+        rng = np.random.default_rng(3)
+        a = Request(prompt=rng.integers(0, 128, 5).astype(np.int32),
+                    max_new_tokens=2)
+        b = Request(prompt=rng.integers(0, 128, 5).astype(np.int32),
+                    max_new_tokens=3)
+        eng.generate([a, b])
+        # b was refilled at pos 6 (a's 5-token prompt + 1 decode step);
+        # reproduce its batch-1 left-padded prefill independently
+        toks = np.zeros((1, 6), np.int32)
+        toks[0, 1:] = b.prompt
+        cache = init_cache(tiny_cfg, batch=1, max_seq=64)
+        logits, _ = prefill(tiny_cfg, params, jnp.asarray(toks), cache)
+        assert b.out_tokens[0] == int(jnp.argmax(logits[0]))
+        assert len(b.out_tokens) == 3
+
+    def test_slot_refill_zero_token_requests(self, tiny_cfg):
+        from repro.serving import Request, ServeEngine
+        params = init_params(tiny_cfg, jax.random.PRNGKey(0))
+        eng = ServeEngine(tiny_cfg, params, slots=2, max_seq=64)
+        reqs = [Request(prompt=np.arange(4, dtype=np.int32),
+                        max_new_tokens=0),
+                Request(prompt=np.arange(4, dtype=np.int32),
+                        max_new_tokens=2)]
+        eng.generate(reqs)
+        assert reqs[0].done and reqs[0].out_tokens == []
+        assert reqs[1].done and len(reqs[1].out_tokens) == 2
