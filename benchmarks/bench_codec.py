@@ -1,4 +1,4 @@
-"""Host-codec throughput micro-benchmark (the ISSUE-1 acceptance gate).
+"""Host-codec throughput micro-benchmark (the ISSUE-1/ISSUE-3 gates).
 
 Measures, on a 1M-element float32 activation tensor drawn from the
 ResNet-50 layer-21 model:
@@ -8,7 +8,13 @@ ResNet-50 layer-21 model:
   * the resulting speedups (acceptance: encode >= 20x),
   * compressed bits/element of both coders (rate parity check),
   * per-channel vs per-tensor bits/element at equal N on channel-biased
-    benchmark activations (acceptance: channel <= tensor).
+    benchmark activations (acceptance: channel <= tensor),
+  * the tiled-RD sweep: per-tensor vs TilePlan (channel-group x
+    spatial-block, v3 streams) measured bits/element *and* MSE at equal N
+    (acceptance: tiled MSE below per-tensor at equal-or-lower measured
+    bpe for >= 2 level counts),
+  * chunked stream encode with per-chunk dispatch vs the batched rANS
+    chunk loop (``encode_planes_batch``).
 
 Writes ``BENCH_codec.json`` next to the repo root and prints the CSV rows
 used by ``benchmarks/run.py``.
@@ -93,14 +99,59 @@ def bench_codec(quick: bool = False) -> list[str]:
     xc = _biased_channel_features()
     common = dict(clip_mode="minmax", constrain_cmin_zero=False)
     grain_bpe = {}
+    tensor_codecs = {}
     for n_levels in (2, 4, 8):
         tn = calibrate(CodecConfig(n_levels=n_levels, **common), samples=xc)
+        tensor_codecs[n_levels] = tn
         ch = calibrate(CodecConfig(n_levels=n_levels, granularity="channel",
                                    channel_axis=-1, **common), samples=xc)
         grain_bpe[n_levels] = {
             "tensor": tn.compressed_bits_per_element(xc),
             "channel": ch.compressed_bits_per_element(xc),
         }
+
+    # tiled-RD sweep: channel-group x spatial-block TilePlan (v3 streams)
+    # vs per-tensor at equal N -- measured wire bpe (header included) + MSE
+    # (the per-tensor codecs/rates are reused from the granularity loop)
+    import jax.numpy as jnp
+    xj = jnp.asarray(xc)
+    tiled_rd = {}
+    for n_levels in (2, 4, 8):
+        tn = tensor_codecs[n_levels]
+        tl = calibrate(CodecConfig(n_levels=n_levels, granularity="tile",
+                                   channel_axis=-1, channel_group_size=2,
+                                   spatial_block_size=4096, **common),
+                       samples=xc)
+        tiled_rd[n_levels] = {
+            "tensor_bpe": grain_bpe[n_levels]["tensor"],
+            "tensor_mse": float(np.mean(
+                (np.asarray(tn.apply(xj)) - xc) ** 2)),
+            "tile_bpe": tl.compressed_bits_per_element(xc),
+            "tile_mse": float(np.mean(
+                (np.asarray(tl.apply(xj)) - xc) ** 2)),
+        }
+    rd_wins = sum(1 for v in tiled_rd.values()
+                  if v["tile_bpe"] <= v["tensor_bpe"]
+                  and v["tile_mse"] < v["tensor_mse"])
+
+    # chunked stream encode: per-chunk dispatch vs batched rANS chunk loop
+    stream_codec = calibrate(CodecConfig(n_levels=4, clip_mode="model"),
+                             samples=feats[:100_000])
+    # 2^16-element chunks keep every chunk above the serial-coder cutoff
+    # (so the batched rANS loop is what gets measured) in --quick too
+    chunk = 1 << 16
+    for _ in range(2):  # warm + measure
+        t0 = time.perf_counter()
+        n_payloads = sum(1 for _ in stream_codec.encode_stream(
+            feats, chunk_elems=chunk, chunk_batch=1))
+        t_stream_serial = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        n_batched = sum(1 for _ in stream_codec.encode_stream(
+            feats, chunk_elems=chunk))
+        t_stream_batch = time.perf_counter() - t0
+        if n_batched != n_payloads:
+            raise RuntimeError("batched stream produced a different "
+                               "payload count")
 
     result = {
         "n_elements": int(idx.size),
@@ -122,6 +173,13 @@ def bench_codec(quick: bool = False) -> list[str]:
         "channel_le_tensor": all(v["channel"] <= v["tensor"]
                                  for v in grain_bpe.values()),
         "encode_speedup_ge_20x": enc_speedup >= 20.0,
+        "tiled_rd": tiled_rd,
+        "tiled_rd_wins": rd_wins,
+        "tiled_beats_tensor_ge_2_levels": rd_wins >= 2,
+        "stream_chunk_elems": chunk,
+        "stream_encode_perchunk_s": t_stream_serial,
+        "stream_encode_batched_s": t_stream_batch,
+        "stream_batch_speedup": t_stream_serial / t_stream_batch,
     }
     with open("BENCH_codec.json", "w") as f:
         json.dump(result, f, indent=2)
@@ -142,6 +200,15 @@ def bench_codec(quick: bool = False) -> list[str]:
         rows.append(f"codec_granularity_N{n_levels},0,"
                     f"bpe_tensor={v['tensor']:.3f},"
                     f"bpe_channel={v['channel']:.3f}")
+    for n_levels, v in tiled_rd.items():
+        rows.append(f"codec_tiled_rd_N{n_levels},0,"
+                    f"tensor_bpe={v['tensor_bpe']:.3f},"
+                    f"tensor_mse={v['tensor_mse']:.4f},"
+                    f"tile_bpe={v['tile_bpe']:.3f},"
+                    f"tile_mse={v['tile_mse']:.4f}")
+    rows.append(f"codec_stream_encode_batched,{t_stream_batch*1e6:.0f},"
+                f"chunks={n_payloads - 1},"
+                f"vs_perchunk={t_stream_serial/t_stream_batch:.2f}x")
     return rows
 
 

@@ -10,10 +10,15 @@ directly in the HLO collective-permute sizes.
 
 The codec ops all route through the codec's ``QuantBackend``
 (``repro.core.backend``): inside the jitted superstep body the quantize
-lowers to the fused Pallas clip+quant kernel on TPU and the jnp reference
-on CPU hosts, and per-channel (``granularity="channel"``) codecs work
-unchanged -- the d_model axis is the channel axis, and the per-channel
-range vectors are baked into the program as constants.
+lowers to the fused Pallas clip+quant kernel on TPU (the blocked per-tile
+variant when the codec carries a TilePlan) and the jnp reference on CPU
+hosts, and tiled codecs (``granularity="channel"`` with the d_model axis
+as the channel axis, or ``"tile"`` when the boundary shape is static, as
+it is inside a fixed-shape decode step) work unchanged -- the per-tile
+range tables are baked into the program as constants.  ``codec.pack``
+likewise dispatches to the in-graph Pallas pack kernel on TPU, so
+clip+quant+pack is a fused on-device pipeline and only wire-width bytes
+cross the inter-pod links.
 
 Execution model is the paper's *serial* edge->cloud flow expressed in SPMD
 as two supersteps over a shard_map'd 'pod' axis (stage weights are

@@ -11,6 +11,7 @@ Modules:
   rate_model    -- in-graph entropy rate estimation
   rans          -- vectorized (numpy-batched) rANS plane coder
   stats         -- streaming calibration statistics
+  tiling        -- TilePlan geometry (channel-group x spatial-block tiles)
   backend       -- QuantBackend dispatch (Pallas kernels on TPU, jnp on CPU)
   codec         -- FeatureCodec facade tying it all together
 """
@@ -20,10 +21,11 @@ from .codec import (ChunkStreamDecoder, CodecConfig, FeatureCodec,
                     ParsedHeader, calibrate, parse_header,
                     reconstruct_indices)
 from .distributions import FeatureModel, resnet50_layer21_model, yolov3_layer12_model
+from .tiling import TileECSQ, TilePlan
 
 __all__ = [
     "CodecConfig", "FeatureCodec", "calibrate", "FeatureModel",
-    "QuantSpec", "get_backend",
+    "QuantSpec", "get_backend", "TilePlan", "TileECSQ",
     "ChunkStreamDecoder", "ParsedHeader", "parse_header",
     "reconstruct_indices",
     "resnet50_layer21_model", "yolov3_layer12_model",

@@ -7,12 +7,13 @@ above it: split runtime, serving engine, examples) now routes through a
 backend object so the hot path picks the fused Pallas kernels on TPU and
 the plain-jnp reference everywhere else, from a single code path.
 
-Backends implement four primitives over a :class:`QuantSpec`:
+Backends implement five primitives over a :class:`QuantSpec`:
 
     quantize(x, spec)             -> int32 indices
     dequantize(idx, spec, dtype)  -> reconstructed values
     quantize_dequantize(x, spec)  -> (indices, reconstruction)  [fused]
     histogram(idx, n_levels)      -> (n_levels,) int32 counts
+    pack_indices(idx, bits)       -> uint8 wire bytes (in-graph pack)
 
 Selection: ``get_backend()`` picks "kernel" when JAX's default backend is
 TPU and "jnp" otherwise; override per-codec via ``CodecConfig.backend`` or
@@ -20,15 +21,21 @@ globally with the ``REPRO_QUANT_BACKEND`` environment variable
 ("jnp" | "kernel" | "kernel_interpret", the latter forcing the Pallas
 bodies through the interpreter for CPU validation).
 
-Granularity: ``spec.channel_axis is None`` is the paper's per-tensor mode
-(scalar cmin/cmax); otherwise cmin/cmax are per-channel vectors broadcast
-along that axis ("channel" granularity, companion-paper tiling).  The two
-backends produce bit-identical *indices* for both modes (so bitstreams
-and rate accounting never depend on the backend); reconstructions agree
-to ~1 ulp (fma/ordering differences in ``cmin + q*delta``).
-Dequantize-only calls (receiver side) always use the jnp formula --
-there is no dedicated kernel because on-device decode gets the
-reconstruction from the fused quantize_dequantize pass.
+Granularity is a :class:`~repro.core.tiling.TilePlan`: ``spec.plan is
+None`` with scalar cmin/cmax is the paper's per-tensor mode; a plan makes
+cmin/cmax (n_cgroups, n_sblocks) per-tile tables over the channel-major
+view.  The legacy per-channel spec form -- (C,) vectors plus
+``channel_axis``, produced by v2 stream headers and direct QuantSpec
+users -- is normalized into a one-spatial-block plan on entry, so there
+is exactly one granularity code path per backend.  The two backends
+produce bit-identical *indices* for every plan (so bitstreams and rate
+accounting never depend on the backend); reconstructions agree to ~1 ulp
+(fma/ordering differences in ``cmin + q*delta``).  Dequantize-only calls
+(receiver side) always use the jnp formula -- there is no dedicated
+kernel because on-device decode gets the reconstruction from the fused
+quantize_dequantize pass.  Per-tile ECSQ (``spec.ecsq`` a
+:class:`~repro.core.tiling.TileECSQ`) runs on the jnp formulas in both
+backends: it is a host/receiver path, not the in-graph hot path.
 """
 
 from __future__ import annotations
@@ -42,17 +49,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import uniform
+from .tiling import TileECSQ, TilePlan
 
-_CHANNEL_EPS = 1e-12  # degenerate-range guard, shared with the row kernel
+_CHANNEL_EPS = 1e-12  # degenerate-range guard, shared with the tile kernel
 
 
 @dataclasses.dataclass(frozen=True)
 class QuantSpec:
     """Everything a backend needs to quantize one tensor.
 
-    ``cmin``/``cmax`` are floats (per-tensor) or (C,) arrays broadcast
-    along ``channel_axis`` (per-channel).  ``ecsq`` optionally carries a
-    designed non-uniform quantizer (per-tensor only).
+    ``cmin``/``cmax`` are floats (per-tensor), (C,) arrays broadcast
+    along ``channel_axis`` (legacy per-channel form), or
+    (n_cgroups, n_sblocks) per-tile tables when ``plan`` is set.
+    ``ecsq`` optionally carries a designed non-uniform quantizer: an
+    ``ECSQQuantizer`` (per-tensor) or a ``TileECSQ`` (per-tile, with
+    ``plan``).
     """
 
     cmin: Any
@@ -60,29 +71,51 @@ class QuantSpec:
     n_levels: int
     channel_axis: int | None = None
     ecsq: Any = None
+    plan: TilePlan | None = None
 
     @property
     def per_channel(self) -> bool:
-        return self.channel_axis is not None
+        return self.channel_axis is not None or self.plan is not None
 
 
-def _channel_shape(x_ndim: int, axis: int, n: int) -> tuple[int, ...]:
-    axis = axis % x_ndim
-    shape = [1] * x_ndim
-    shape[axis] = n
-    return tuple(shape)
+def _normalize(spec: QuantSpec) -> QuantSpec:
+    """Fold the legacy (C,)-vector per-channel form into a TilePlan, and
+    reject spec combinations that would otherwise be silently ignored."""
+    if spec.plan is not None or spec.channel_axis is not None:
+        if spec.ecsq is not None and not isinstance(spec.ecsq, TileECSQ):
+            raise ValueError(
+                "a tiled QuantSpec needs per-tile TileECSQ tables; a "
+                "per-tensor ECSQQuantizer cannot be combined with a "
+                "plan or channel_axis")
+    if spec.plan is not None:
+        return spec
+    if spec.channel_axis is None:
+        return spec
+    lo = np.asarray(spec.cmin, np.float32).reshape(-1, 1)
+    hi = np.asarray(spec.cmax, np.float32).reshape(-1, 1)
+    plan = TilePlan(channel_axis=spec.channel_axis, channel_group_size=1,
+                    spatial_block_size=0, n_channels=lo.shape[0])
+    return dataclasses.replace(spec, cmin=lo, cmax=hi, plan=plan)
 
 
-def _broadcast_ranges(x, spec: QuantSpec):
-    cmin = jnp.asarray(spec.cmin, jnp.float32)
-    cmax = jnp.asarray(spec.cmax, jnp.float32)
-    axis = spec.channel_axis % x.ndim
-    if x.shape[axis] != cmin.shape[0]:
-        raise ValueError(
-            f"tensor has {x.shape[axis]} channels on axis {axis}, codec "
-            f"was calibrated for {cmin.shape[0]}")
-    shape = _channel_shape(x.ndim, spec.channel_axis, cmin.shape[0])
-    return cmin.reshape(shape), cmax.reshape(shape)
+def _tile_tables(x_ndim_shape, spec: QuantSpec):
+    """Per-element (C, M) range views for a plan spec over ``shape``.
+
+    Returns (axis, C, M, lo, hi) with lo/hi broadcastable against the
+    channel-major (C, M) view: (C, 1) when one spatial block (no
+    materialized (C, M) table), full (C, M) gathers otherwise.
+    """
+    plan = spec.plan
+    axis, c, m = plan.resolve(x_ndim_shape)
+    lo = jnp.asarray(spec.cmin, jnp.float32).reshape(
+        plan.n_cgroups, plan.n_sblocks)
+    hi = jnp.asarray(spec.cmax, jnp.float32).reshape(
+        plan.n_cgroups, plan.n_sblocks)
+    cg = plan.cgroup_ids()
+    if plan.n_sblocks == 1:
+        return axis, c, m, lo[cg], hi[cg]          # (C, 1) broadcast
+    sb = plan.sblock_ids(m)
+    return axis, c, m, lo[cg][:, sb], hi[cg][:, sb]
 
 
 class JnpBackend:
@@ -90,66 +123,111 @@ class JnpBackend:
 
     name = "jnp"
 
+    def _tiled_qdq(self, x, spec: QuantSpec, want_deq: bool):
+        axis, c, m, lo, hi = _tile_tables(x.shape, spec)
+        xm = jnp.moveaxis(x, axis, 0).reshape(c, m).astype(jnp.float32)
+        if isinstance(spec.ecsq, TileECSQ):
+            tid = spec.plan.tile_ids_2d(m)
+            thr = np.asarray(spec.ecsq.thresholds, np.float32)
+            xc = jnp.clip(xm, lo, hi)
+            idx = jnp.zeros(xm.shape, jnp.int32)
+            for k in range(spec.n_levels - 1):
+                idx = idx + (xc >= jnp.asarray(thr[:, k])[tid]) \
+                    .astype(jnp.int32)
+            deq = None
+            if want_deq:
+                lv = jnp.asarray(spec.ecsq.levels, jnp.float32)
+                deq = lv[tid, idx]
+        else:
+            span = jnp.maximum(hi - lo, _CHANNEL_EPS)
+            scale = (spec.n_levels - 1) / span
+            xc = jnp.clip(xm, lo, hi)
+            q = jnp.floor((xc - lo) * scale + 0.5)
+            idx = q.astype(jnp.int32)
+            deq = (lo + q * (span / (spec.n_levels - 1))) if want_deq \
+                else None
+
+        def restore(a, dtype):
+            moved = (c,) + tuple(s for d, s in enumerate(x.shape)
+                                 if d != axis)
+            return jnp.moveaxis(a.reshape(moved), 0, axis).astype(dtype)
+        idx = restore(idx, jnp.int32)
+        return idx, (restore(deq, x.dtype) if want_deq else None)
+
     def quantize(self, x, spec: QuantSpec):
         # index-only path: eager host callers (encode/estimate_rate) would
         # otherwise materialize a discarded reconstruction tensor
+        spec = _normalize(spec)
+        if spec.plan is not None:
+            return self._tiled_qdq(x, spec, want_deq=False)[0]
         if spec.ecsq is not None:
             t = jnp.asarray(spec.ecsq.thresholds, jnp.float32)
             xc = jnp.clip(x.astype(jnp.float32), spec.cmin, spec.cmax)
             return jnp.searchsorted(t, xc, side="right").astype(jnp.int32)
-        if not spec.per_channel:
-            return uniform.quantize(x, spec.cmin, spec.cmax, spec.n_levels)
-        cmin, cmax = _broadcast_ranges(x, spec)
-        span = jnp.maximum(cmax - cmin, _CHANNEL_EPS)
-        scale = (spec.n_levels - 1) / span
-        xc = jnp.clip(x.astype(jnp.float32), cmin, cmax)
-        return jnp.floor((xc - cmin) * scale + 0.5).astype(jnp.int32)
+        return uniform.quantize(x, spec.cmin, spec.cmax, spec.n_levels)
 
     def quantize_dequantize(self, x, spec: QuantSpec):
+        spec = _normalize(spec)
+        if spec.plan is not None:
+            return self._tiled_qdq(x, spec, want_deq=True)
         if spec.ecsq is not None:
             t = jnp.asarray(spec.ecsq.thresholds, jnp.float32)
             lv = jnp.asarray(spec.ecsq.levels, jnp.float32)
             xc = jnp.clip(x.astype(jnp.float32), spec.cmin, spec.cmax)
             idx = jnp.searchsorted(t, xc, side="right").astype(jnp.int32)
             return idx, lv[idx].astype(x.dtype)
-        if not spec.per_channel:
-            idx = uniform.quantize(x, spec.cmin, spec.cmax, spec.n_levels)
-            deq = uniform.dequantize(idx, spec.cmin, spec.cmax,
-                                     spec.n_levels, dtype=x.dtype)
-            return idx, deq
-        cmin, cmax = _broadcast_ranges(x, spec)
-        span = jnp.maximum(cmax - cmin, _CHANNEL_EPS)
-        scale = (spec.n_levels - 1) / span
-        xc = jnp.clip(x.astype(jnp.float32), cmin, cmax)
-        q = jnp.floor((xc - cmin) * scale + 0.5)
-        idx = q.astype(jnp.int32)
-        deq = (cmin + q * (span / (spec.n_levels - 1))).astype(x.dtype)
+        idx = uniform.quantize(x, spec.cmin, spec.cmax, spec.n_levels)
+        deq = uniform.dequantize(idx, spec.cmin, spec.cmax,
+                                 spec.n_levels, dtype=x.dtype)
         return idx, deq
 
     def dequantize(self, idx, spec: QuantSpec, dtype=jnp.float32):
+        spec = _normalize(spec)
+        if spec.plan is not None:
+            axis, c, m, lo, hi = _tile_tables(idx.shape, spec)
+            im = jnp.moveaxis(idx, axis, 0).reshape(c, m)
+            if isinstance(spec.ecsq, TileECSQ):
+                lv = jnp.asarray(spec.ecsq.levels, jnp.float32)
+                out = lv[spec.plan.tile_ids_2d(m), im]
+            else:
+                delta = jnp.maximum(hi - lo, _CHANNEL_EPS) \
+                    / (spec.n_levels - 1)
+                out = lo + im.astype(jnp.float32) * delta
+            moved = (c,) + tuple(s for d, s in enumerate(idx.shape)
+                                 if d != axis)
+            return jnp.moveaxis(out.reshape(moved), 0, axis).astype(dtype)
         if spec.ecsq is not None:
             lv = jnp.asarray(spec.ecsq.levels, jnp.float32)
             return lv[idx].astype(dtype)
-        if not spec.per_channel:
-            return uniform.dequantize(idx, spec.cmin, spec.cmax,
-                                      spec.n_levels, dtype=dtype)
-        cmin, cmax = _broadcast_ranges(idx, spec)
-        span = jnp.maximum(cmax - cmin, _CHANNEL_EPS)
-        delta = span / (spec.n_levels - 1)
-        return (cmin + idx.astype(jnp.float32) * delta).astype(dtype)
+        return uniform.dequantize(idx, spec.cmin, spec.cmax,
+                                  spec.n_levels, dtype=dtype)
 
     def histogram(self, idx, n_levels: int):
         from .rate_model import index_histogram
         return index_histogram(idx, n_levels)
+
+    def pack_indices(self, idx, bits: int):
+        """Host/jnp bit-pack (the wire layout every backend shares)."""
+        per = 8 // bits if bits in (1, 2, 4) else 1
+        if per == 1:
+            return idx.astype(jnp.uint8)
+        flat = idx.reshape(-1)
+        pad = (-flat.shape[0]) % per
+        if pad:
+            flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+        flat = flat.reshape(-1, per).astype(jnp.uint8)
+        shifts = jnp.arange(per, dtype=jnp.uint8) * bits
+        return jnp.sum(flat << shifts, axis=-1).astype(jnp.uint8)
 
 
 class KernelBackend:
     """Pallas-kernel path (TPU hot path; interpretable on CPU).
 
     Quantization lowers through the fused clip+quant kernels in
-    ``repro.kernels`` (scalar-range or per-row variant); histograms use
-    the on-device reduction kernel.  Falls back to the jnp formulas only
-    where no kernel exists (dequantize-only, N > 16 histograms).
+    ``repro.kernels`` (scalar-range or blocked per-tile variant);
+    histograms use the on-device reduction kernel and packing the
+    on-device pack kernel.  Falls back to the jnp formulas only where no
+    kernel exists (dequantize-only, per-tile ECSQ, N > 64).
     """
 
     name = "kernel"
@@ -163,27 +241,35 @@ class KernelBackend:
 
     def quantize_dequantize(self, x, spec: QuantSpec):
         from ..kernels import ops
+        from ..kernels.ecsq_assign import MAX_LEVELS
+        spec = _normalize(spec)
+        if spec.plan is not None:
+            if isinstance(spec.ecsq, TileECSQ):
+                return self._jnp.quantize_dequantize(x, spec)
+            plan = spec.plan
+            plan.resolve(x.shape)
+            lo = jnp.asarray(spec.cmin, jnp.float32).reshape(
+                plan.n_cgroups, plan.n_sblocks)
+            hi = jnp.asarray(spec.cmax, jnp.float32).reshape(
+                plan.n_cgroups, plan.n_sblocks)
+            return ops.clip_quantize_tiled(
+                x, lo, hi, n_levels=spec.n_levels,
+                channel_axis=plan.channel_axis,
+                channel_group_size=plan.channel_group_size,
+                spatial_block_size=plan.spatial_block_size,
+                interpret=self.interpret)
         if spec.ecsq is not None:
+            if spec.n_levels > MAX_LEVELS:
+                return self._jnp.quantize_dequantize(x, spec)
             return ops.ecsq_quantize(
                 x, jnp.asarray(spec.ecsq.thresholds, jnp.float32),
                 jnp.asarray(spec.ecsq.levels, jnp.float32),
                 cmin=float(spec.cmin), cmax=float(spec.cmax),
                 interpret=self.interpret)
-        if not spec.per_channel:
-            return ops.clip_quantize(x, cmin=float(spec.cmin),
-                                     cmax=float(spec.cmax),
-                                     n_levels=spec.n_levels,
-                                     interpret=self.interpret)
-        axis = spec.channel_axis % x.ndim
-        if x.shape[axis] != np.shape(spec.cmin)[0]:
-            raise ValueError(
-                f"tensor has {x.shape[axis]} channels on axis {axis}, codec "
-                f"was calibrated for {np.shape(spec.cmin)[0]}")
-        return ops.clip_quantize_channels(
-            x, jnp.asarray(spec.cmin, jnp.float32),
-            jnp.asarray(spec.cmax, jnp.float32),
-            n_levels=spec.n_levels, channel_axis=spec.channel_axis,
-            interpret=self.interpret)
+        return ops.clip_quantize(x, cmin=float(spec.cmin),
+                                 cmax=float(spec.cmax),
+                                 n_levels=spec.n_levels,
+                                 interpret=self.interpret)
 
     def dequantize(self, idx, spec: QuantSpec, dtype=jnp.float32):
         return self._jnp.dequantize(idx, spec, dtype=dtype)
@@ -195,6 +281,12 @@ class KernelBackend:
             return self._jnp.histogram(idx, n_levels)
         return ops.index_histogram(idx, n_levels=n_levels,
                                    interpret=self.interpret)
+
+    def pack_indices(self, idx, bits: int):
+        from ..kernels import ops
+        if bits not in (1, 2, 4):
+            return self._jnp.pack_indices(idx, bits)
+        return ops.pack_indices(idx, bits=bits, interpret=self.interpret)
 
 
 _BACKENDS: dict[str, Any] = {}

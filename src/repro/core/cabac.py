@@ -268,6 +268,39 @@ def encode_indices(idx: np.ndarray, n_levels: int, mode: str = "auto") -> bytes:
     raise ValueError(f"unknown coder mode {mode!r}")
 
 
+def encode_indices_batch(segments: list[np.ndarray], n_levels: int,
+                         mode: str = "auto") -> list[bytes]:
+    """Encode many independent index segments with shared dispatch.
+
+    Payload-compatible with per-segment :func:`encode_indices` calls (each
+    blob starts with its own coder-id byte and decodes in isolation), but
+    all segments that land on the vectorized coder share one batched rANS
+    step loop (:func:`repro.core.rans.encode_planes_batch`) -- the
+    chunked-stream encoder's per-chunk python dispatch collapses to one
+    loop per batch.  ``auto`` keeps the serial coder for small segments;
+    the thread-sharded coder is not used here (batching already amortizes
+    the dispatch the pool would target).
+    """
+    from .binarization import index_to_context_bits, total_tu_bits
+    segments = [np.asarray(s).ravel() for s in segments]
+    out: list[bytes | None] = [None] * len(segments)
+    rans_ids = []
+    for i, seg in enumerate(segments):
+        m = mode
+        if m == "auto":
+            m = "serial" if total_tu_bits(seg, n_levels) \
+                < _SERIAL_CUTOFF_BITS else "rans"
+        if m == "rans":
+            rans_ids.append(i)
+        else:
+            out[i] = encode_indices(seg, n_levels, mode=m)
+    blobs = rans.encode_planes_batch(
+        [index_to_context_bits(segments[i], n_levels) for i in rans_ids])
+    for i, blob in zip(rans_ids, blobs):
+        out[i] = bytes([_CODER_RANS]) + blob
+    return out
+
+
 def decode_indices(data: bytes, n_elems: int, n_levels: int) -> np.ndarray:
     """Inverse of :func:`encode_indices` (reads the coder-id byte)."""
     if len(data) == 0:

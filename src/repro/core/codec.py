@@ -16,17 +16,23 @@ All quantization primitives route through a :mod:`repro.core.backend`
 ``QuantBackend``: the fused Pallas kernels on TPU, the jnp reference path
 on CPU -- one code path for in-graph, host, and kernel execution.
 
-Granularity (companion-paper tiling, arXiv 2105.06002): per-tensor mode
-uses one (c_min, c_max); per-channel mode calibrates a range per channel
-group along ``channel_axis`` and records the group table in the bitstream
-header, so heterogeneous channels (BN-biased / differently-scaled feature
-maps) neither waste levels nor blow up the coded rate.
+Granularity is a :class:`~repro.core.tiling.TilePlan` (companion-paper
+channel mosaic, arXiv 2105.06002, plus the spatial structure of
+arXiv 1804.09963): per-tensor mode uses one (c_min, c_max); "channel" and
+"tile" granularities calibrate a range -- and optionally an ECSQ table --
+per (channel-group x spatial-block) tile and record the tile geometry +
+tables in a v3 self-describing header, so heterogeneous channels and
+spatially drifting feature maps neither waste levels nor blow up the
+coded rate.  Tiled streams serialize indices in tile-major (channel-
+major) order so consecutive coded symbols share a tile and streaming
+chunk boundaries align to tiles.
 
 Side information (header): c_min, c_max, N, flags, element count --
 16 bytes for classification-style payloads, matching the paper's
 accounting.  Flags extend the header with the ECSQ reconstruction table
-and/or the per-channel table (tensor dims + group ranges) so a receiver
-decodes with *no* shared calibration state; see DESIGN.md for the layout.
+and/or the tile extension (geometry + per-tile range/level tables) so a
+receiver decodes with *no* shared calibration state; see DESIGN.md for
+the layout.  Legacy v2 per-channel and v1 seed streams still decode.
 """
 
 from __future__ import annotations
@@ -44,17 +50,30 @@ from .distributions import FeatureModel
 from .ecsq import ECSQQuantizer, design_ecsq
 from .rate_model import estimated_bits_from_hist
 from .stats import RunningStats
+from .tiling import TileECSQ, TilePlan, plan_from_config
 
 ClipMode = Literal["model", "empirical", "aciq", "manual", "minmax"]
-Granularity = Literal["tensor", "channel"]
+Granularity = Literal["tensor", "channel", "tile"]
 
 _HEADER_FMT = "<ffHHI"  # cmin, cmax, n_levels, flags, n_elems  (16 bytes)
 _CHANNEL_EXT_FMT = "<BBHH"  # ndim, channel_axis, group_size, n_groups
+# v3 tile ext: ndim, channel_axis, tile flags, pad, channel_group_size,
+# n_cgroups, spatial_block_size, n_sblocks (then dims + range tables)
+_TILE_EXT_FMT = "<BBBBHHII"
 _STREAM_META_FMT = "<IIB"  # chunk_elems, n_chunks, ndim (then ndim u32 dims)
 
-FLAG_ECSQ = 1      # ECSQ quantizer; v2 streams append the level table
-FLAG_CHANNEL = 2   # per-channel granularity; header carries the group table
+FLAG_ECSQ = 1      # per-tensor ECSQ; v2 streams append the level table
+FLAG_CHANNEL = 2   # legacy v2 per-channel granularity (decode-only)
 FLAG_V2 = 4        # payload starts with a coder-id byte (serial | rans)
+FLAG_TILE = 8      # v3 tile extension (geometry + per-tile tables)
+
+TFLAG_ECSQ = 1     # tile ext carries per-tile ECSQ level tables
+
+# chunk payloads of one streamed tensor are entropy-coded in batches of
+# this many: big enough to amortize the per-chunk python dispatch through
+# the batched rANS loop, small enough to keep the encode->wire pipeline
+# fine-grained (first frame on the socket after one batch, not the tensor)
+STREAM_CHUNK_BATCH = 8
 
 
 @dataclasses.dataclass
@@ -72,7 +91,10 @@ class CodecConfig:
     granularity: Granularity = "tensor"
     channel_axis: int = -1
     channel_group_size: int = 1
-    backend: str | None = None  # None = auto (kernel on TPU, jnp on CPU)
+    # 'tile' granularity: elements per spatial block of the channel-major
+    # (C, M) view; 0 = one block spanning M (pure per-channel tiling)
+    spatial_block_size: int = 0
+    backend: str | None = None   # None = auto (kernel on TPU, jnp on CPU)
 
 
 @dataclasses.dataclass
@@ -86,7 +108,9 @@ class ParsedHeader:
     n_elems: int
     levels: np.ndarray | None = None   # ECSQ reconstruction table (v2)
     dims: tuple[int, ...] | None = None
-    spec: QuantSpec | None = None      # per-channel dequant spec
+    spec: QuantSpec | None = None      # per-channel / per-tile dequant spec
+    plan: TilePlan | None = None       # v3 tile geometry
+    tile_levels: np.ndarray | None = None  # (n_tiles, N) per-tile ECSQ
     payload_off: int = 0               # byte offset of the entropy payload
 
 
@@ -102,7 +126,35 @@ def parse_header(data: bytes) -> ParsedHeader:
         off += 4 * n_levels
     dims = None
     spec = None
-    if flags & FLAG_CHANNEL:
+    plan = None
+    tile_levels = None
+    if flags & FLAG_TILE:
+        ndim, axis, tflags, _, gsize, ngroups, sblock, nsblocks = \
+            struct.unpack_from(_TILE_EXT_FMT, data, off)
+        off += struct.calcsize(_TILE_EXT_FMT)
+        dims = tuple(int(d) for d in np.frombuffer(data, "<u4", ndim, off))
+        off += 4 * ndim
+        c = dims[axis]
+        m = int(np.prod(dims)) // max(c, 1)
+        plan = TilePlan(channel_axis=axis, channel_group_size=gsize,
+                        spatial_block_size=sblock, n_channels=c,
+                        spatial_extent=m if sblock else None)
+        if (plan.n_cgroups, plan.n_sblocks) != (ngroups, nsblocks):
+            raise ValueError("tile header geometry is inconsistent")
+        n_tiles = ngroups * nsblocks
+        table = np.frombuffer(data, "<f4", 2 * n_tiles, off) \
+            .reshape(ngroups, nsblocks, 2)
+        off += 8 * n_tiles
+        ecsq = None
+        if tflags & TFLAG_ECSQ:
+            tile_levels = np.frombuffer(
+                data, "<f4", n_tiles * n_levels, off) \
+                .reshape(n_tiles, n_levels)
+            off += 4 * n_tiles * n_levels
+        spec = QuantSpec(np.ascontiguousarray(table[..., 0]),
+                         np.ascontiguousarray(table[..., 1]),
+                         int(n_levels), int(axis), ecsq, plan)
+    elif flags & FLAG_CHANNEL:  # legacy v2 per-channel stream
         ndim, axis, gsize, ngroups = struct.unpack_from(
             _CHANNEL_EXT_FMT, data, off)
         off += struct.calcsize(_CHANNEL_EXT_FMT)
@@ -117,7 +169,8 @@ def parse_header(data: bytes) -> ParsedHeader:
     return ParsedHeader(cmin=float(cmin), cmax=float(cmax),
                         n_levels=int(n_levels), flags=int(flags),
                         n_elems=int(n_elems), levels=levels, dims=dims,
-                        spec=spec, payload_off=off)
+                        spec=spec, plan=plan, tile_levels=tile_levels,
+                        payload_off=off)
 
 
 def reconstruct_indices(idx: np.ndarray, hdr: ParsedHeader, *,
@@ -128,10 +181,20 @@ def reconstruct_indices(idx: np.ndarray, hdr: ParsedHeader, *,
     The single reconstruction path shared by :meth:`FeatureCodec.decode`
     and the chunked/stream decoders, so both are bit-exact by
     construction.  ``backend``/``ecsq`` default to the auto backend and no
-    legacy-ECSQ fallback (a self-describing v2 stream needs neither).
+    legacy-ECSQ fallback (a self-describing v2/v3 stream needs neither).
+    v3 tiled payloads arrive in tile-major coded order and are restored to
+    the tensor layout here.
     """
     backend = backend if backend is not None else get_backend(None)
-    if hdr.levels is not None:
+    if hdr.plan is not None:
+        idx_full = hdr.plan.from_coded_order(idx.reshape(-1), hdr.dims)
+        if hdr.tile_levels is not None:
+            tid = hdr.plan.tile_ids(hdr.dims)
+            out = hdr.tile_levels.astype(np.float32)[tid, idx_full]
+        else:
+            out = np.asarray(backend.dequantize(
+                jnp.asarray(idx_full), hdr.spec))
+    elif hdr.levels is not None:
         out = hdr.levels[idx].astype(np.float32)
     elif hdr.flags & FLAG_ECSQ:  # legacy ECSQ stream without a level table
         if ecsq is None:
@@ -205,10 +268,12 @@ class ChunkStreamDecoder:
 class FeatureCodec:
     """Calibrated codec instance.  Build with :func:`calibrate`.
 
-    Per-tensor mode: ``cmin``/``cmax`` are floats.  Per-channel mode:
-    they are (n_groups,) float32 vectors (group g covers channels
-    ``g*group_size .. (g+1)*group_size-1`` along ``config.channel_axis``)
-    and ``n_channels`` records the calibrated channel count.
+    Per-tensor mode: ``cmin``/``cmax`` are floats.  Tiled modes carry a
+    :class:`TilePlan` in ``plan`` and per-tile range tables in
+    ``cmin``/``cmax``: a (n_cgroups,) float32 vector for "channel"
+    granularity (one spatial block) or a (n_cgroups, n_sblocks) table for
+    "tile"; ``n_channels`` records the calibrated channel count and
+    ``tile_ecsq`` the optional per-tile quantizer tables.
     """
 
     config: CodecConfig
@@ -217,6 +282,8 @@ class FeatureCodec:
     model: FeatureModel | None = None
     ecsq: ECSQQuantizer | None = None
     n_channels: int | None = None
+    plan: TilePlan | None = None
+    tile_ecsq: TileECSQ | None = None
 
     # -- backend routing --------------------------------------------------------
 
@@ -228,23 +295,35 @@ class FeatureCodec:
     def per_channel(self) -> bool:
         return self.n_channels is not None
 
+    def tile_tables(self) -> tuple[np.ndarray, np.ndarray]:
+        """Per-tile (lo, hi) range tables, (n_cgroups, n_sblocks)."""
+        if self.plan is None:
+            raise ValueError("per-tensor codec has no tile tables")
+        shape = (self.plan.n_cgroups, self.plan.n_sblocks)
+        return (np.asarray(self.cmin, np.float32).reshape(shape),
+                np.asarray(self.cmax, np.float32).reshape(shape))
+
     def channel_ranges(self) -> tuple[np.ndarray, np.ndarray]:
-        """Per-channel (cmin, cmax) vectors, group table expanded."""
-        if not self.per_channel:
-            raise ValueError("per-tensor codec has no channel table")
+        """Per-channel (cmin, cmax) vectors, group table expanded
+        ("channel" granularity -- one spatial block -- only)."""
+        if self.plan is None or self.plan.n_sblocks != 1:
+            raise ValueError("codec has no per-channel range vectors")
         gs = max(1, self.config.channel_group_size)
-        lo = np.repeat(np.asarray(self.cmin, np.float32), gs)[:self.n_channels]
-        hi = np.repeat(np.asarray(self.cmax, np.float32), gs)[:self.n_channels]
+        lo = np.repeat(np.asarray(self.cmin, np.float32).ravel(),
+                       gs)[:self.n_channels]
+        hi = np.repeat(np.asarray(self.cmax, np.float32).ravel(),
+                       gs)[:self.n_channels]
         return lo, hi
 
     def spec(self) -> QuantSpec:
         """The backend-facing view of this codec's quantizer."""
-        if not self.per_channel:
+        if self.plan is None:
             return spec_from_numpy(self.cmin, self.cmax,
                                    self.config.n_levels, None, self.ecsq)
-        lo, hi = self.channel_ranges()
-        return spec_from_numpy(lo, hi, self.config.n_levels,
-                               self.config.channel_axis, None)
+        lo, hi = self.tile_tables()
+        return QuantSpec(lo, hi, self.config.n_levels,
+                         self.config.channel_axis, self.tile_ecsq,
+                         self.plan)
 
     # -- in-graph ops ---------------------------------------------------------
 
@@ -290,22 +369,15 @@ class FeatureCodec:
         return max(1, int(np.ceil(np.log2(n))))
 
     def pack(self, idx):
-        """Pack int32 indices into uint8 lanes (2x4b or 8x1b per byte).
-
-        Sizes that do not fill the last byte are zero-padded; ``unpack``
-        truncates back to the element count.
+        """Pack int32 indices into uint8 lanes (4x2b / 2x4b / 8x1b per
+        byte), backend-dispatched: the in-graph Pallas pack kernel on the
+        kernel backend (fuses with clip+quant, only wire-width bytes leave
+        the device), the jnp host fallback elsewhere -- both share one bit
+        layout (little-end-first lanes), so packed streams are
+        backend-portable.  Sizes that do not fill the last byte are
+        zero-padded; ``unpack`` truncates back to the element count.
         """
-        bits = self.bits_per_index()
-        per = 8 // bits if bits in (1, 2, 4) else 1
-        if per == 1:
-            return idx.astype(jnp.uint8)
-        flat = idx.reshape(-1)
-        pad = (-flat.shape[0]) % per
-        if pad:
-            flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
-        flat = flat.reshape(-1, per).astype(jnp.uint8)
-        shifts = jnp.arange(per, dtype=jnp.uint8) * bits
-        return jnp.sum(flat << shifts, axis=-1).astype(jnp.uint8)
+        return self.backend.pack_indices(idx, self.bits_per_index())
 
     def unpack(self, packed, n_elems: int):
         bits = self.bits_per_index()
@@ -320,39 +392,53 @@ class FeatureCodec:
     # -- host bitstream ---------------------------------------------------------
 
     def _header(self, x: np.ndarray) -> tuple[bytes, int]:
-        """Self-describing header for ``x``; returns (bytes, flags)."""
+        """Self-describing header for ``x``; returns (bytes, flags).
+
+        Tiled codecs write the v3 tile extension (geometry, per-tile
+        ranges, optional per-tile ECSQ level tables); per-tensor codecs
+        keep the seed's 16-byte accounting (plus the v2 ECSQ table).
+        """
         flags = FLAG_V2
         ext = b""
-        if self.ecsq is not None:
+        if self.plan is not None:
+            flags |= FLAG_TILE
+            axis, _, _ = self.plan.resolve(x.shape)
+            lo, hi = self.tile_tables()
+            tflags = TFLAG_ECSQ if self.tile_ecsq is not None else 0
+            ext += struct.pack(_TILE_EXT_FMT, x.ndim, axis, tflags, 0,
+                               self.plan.channel_group_size,
+                               self.plan.n_cgroups,
+                               self.plan.spatial_block_size,
+                               self.plan.n_sblocks)
+            ext += np.asarray(x.shape, "<u4").tobytes()
+            ext += np.stack([lo, hi], axis=-1).astype("<f4").tobytes()
+            if self.tile_ecsq is not None:
+                ext += np.asarray(self.tile_ecsq.levels, "<f4").tobytes()
+            head_lo, head_hi = float(lo.min()), float(hi.max())
+        elif self.ecsq is not None:
             flags |= FLAG_ECSQ
             ext += np.asarray(self.ecsq.levels, "<f4").tobytes()
-        if self.per_channel:
-            flags |= FLAG_CHANNEL
-            axis = self.config.channel_axis % x.ndim
-            if x.shape[axis] != self.n_channels:
-                raise ValueError(
-                    f"axis {axis} has {x.shape[axis]} channels, codec was "
-                    f"calibrated for {self.n_channels}")
-            lo = np.asarray(self.cmin, "<f4")
-            hi = np.asarray(self.cmax, "<f4")
-            ext += struct.pack(_CHANNEL_EXT_FMT, x.ndim, axis,
-                               max(1, self.config.channel_group_size),
-                               lo.size)
-            ext += np.asarray(x.shape, "<u4").tobytes()
-            ext += np.stack([lo, hi], axis=-1).tobytes()
-            head_lo, head_hi = float(lo.min()), float(hi.max())
+            head_lo, head_hi = float(self.cmin), float(self.cmax)
         else:
             head_lo, head_hi = float(self.cmin), float(self.cmax)
         base = struct.pack(_HEADER_FMT, head_lo, head_hi,
                            self.config.n_levels, flags, int(np.prod(x.shape)))
         return base + ext, flags
 
+    def _coded_indices(self, x: np.ndarray) -> np.ndarray:
+        """Quantize ``x`` and ravel the indices in coded order (tile-major
+        for tiled codecs -- consecutive coded symbols share a tile)."""
+        idx = np.asarray(self.quantize(jnp.asarray(x)))
+        if self.plan is not None:
+            return self.plan.to_coded_order(idx)
+        return idx.ravel()
+
     def encode(self, x: np.ndarray, coder_mode: str = "auto") -> bytes:
         """Full host encode: clip+quantize+TU+entropy coding with header."""
         x = np.asarray(x, np.float32)
-        idx = np.asarray(self.quantize(jnp.asarray(x)))
         header, _ = self._header(x)
-        payload = cabac.encode_indices(idx.ravel(), self.config.n_levels,
+        payload = cabac.encode_indices(self._coded_indices(x),
+                                       self.config.n_levels,
                                        mode=coder_mode)
         return header + payload
 
@@ -382,36 +468,51 @@ class FeatureCodec:
     # -- chunked (streaming) bitstream ------------------------------------------
 
     def encode_stream(self, x: np.ndarray, chunk_elems: int = 1 << 18,
-                      coder_mode: str = "auto"):
+                      coder_mode: str = "auto",
+                      chunk_batch: int = STREAM_CHUNK_BATCH):
         """Chunked encode: yields the header payload, then chunk payloads.
 
         The first payload is the stream header: ``<II>`` (chunk_elems,
         n_chunks) followed by the same self-describing tensor header
         :meth:`encode` writes.  Every following payload is ``<I>``
         (chunk id) + an independently flushed :func:`cabac.encode_indices`
-        stream over that chunk's flat indices, so a receiver entropy-decodes
-        each chunk the moment it arrives and only the final dequantize
-        waits for the last chunk.  Reconstruction is bit-exact with the
-        one-shot path (same quantize, same dequantize -- asserted in
-        tests/test_transport.py).  Framing for the wire (session ids, CRC,
-        end-of-tensor) lives in :mod:`repro.transport.framing`.
+        stream over that chunk's coded-order indices, so a receiver
+        entropy-decodes each chunk the moment it arrives and only the
+        final dequantize waits for the last chunk.  Reconstruction is
+        bit-exact with the one-shot path (same quantize, same coded order,
+        same dequantize -- asserted in tests/test_transport.py).
+
+        Tiled codecs round ``chunk_elems`` up so chunk boundaries align to
+        tile runs in coded order (:meth:`TilePlan.align_chunk_elems`) --
+        no chunk splits a tile's contiguous segment, and each chunk's
+        chunk-static entropy probabilities see tile-homogeneous index
+        statistics.  Chunks are entropy-coded ``chunk_batch`` at a time
+        through the batched rANS loop (one python step loop per batch, not
+        per chunk); framing for the wire (session ids, CRC, end-of-tensor)
+        lives in :mod:`repro.transport.framing`.
         """
         if chunk_elems <= 0:
             raise ValueError("chunk_elems must be positive")
         x = np.asarray(x, np.float32)
-        idx = np.asarray(self.quantize(jnp.asarray(x))).ravel()
+        if self.plan is not None:
+            chunk_elems = self.plan.align_chunk_elems(chunk_elems, x.shape)
+        idx = self._coded_indices(x)
         header, _ = self._header(x)
         n_chunks = max(1, -(-idx.size // chunk_elems))
         # the stream meta carries the tensor shape (the one-shot header only
-        # does for per-channel streams): a cloud receiver reshapes before
+        # does for tiled streams): a cloud receiver reshapes before
         # running the tail network
         meta = struct.pack(_STREAM_META_FMT, chunk_elems, n_chunks, x.ndim)
         meta += np.asarray(x.shape, "<u4").tobytes()
         yield meta + header
-        for c in range(n_chunks):
-            seg = idx[c * chunk_elems:(c + 1) * chunk_elems]
-            yield struct.pack("<I", c) + cabac.encode_indices(
-                seg, self.config.n_levels, mode=coder_mode)
+        batch = max(1, chunk_batch)
+        for c0 in range(0, n_chunks, batch):
+            ids = range(c0, min(c0 + batch, n_chunks))
+            blobs = cabac.encode_indices_batch(
+                [idx[c * chunk_elems:(c + 1) * chunk_elems] for c in ids],
+                self.config.n_levels, mode=coder_mode)
+            for c, blob in zip(ids, blobs):
+                yield struct.pack("<I", c) + blob
 
     def decode_stream(self, payloads, shape=None) -> np.ndarray:
         """Inverse of :meth:`encode_stream` over an iterable of payloads."""
@@ -493,32 +594,48 @@ def calibrate(config: CodecConfig,
     columns; ``minmax`` uses the sample extremes; ECSQ additionally runs
     Algorithm 1 on the samples.
 
-    Per-channel granularity calibrates every channel group independently
-    (``samples`` must then carry the channel axis) and returns group
-    vectors in ``cmin``/``cmax``.
+    "channel" / "tile" granularities calibrate every tile of the
+    :class:`TilePlan` independently (``samples`` must then carry the
+    channel axis; "tile" additionally pins the spatial extent) and return
+    per-tile range tables in ``cmin``/``cmax``.  ``use_ecsq`` with a
+    tiled granularity designs one quantizer *per tile* (per-channel /
+    per-group ECSQ is the one-spatial-block case).
     """
     cfg = config
-    if cfg.granularity == "channel":
-        if cfg.use_ecsq:
-            raise ValueError("ECSQ design is per-tensor only; use "
-                             "granularity='tensor'")
+    if cfg.granularity in ("channel", "tile"):
         if samples is None:
-            raise ValueError("channel granularity needs calibration samples "
-                             "with the channel axis present")
+            raise ValueError(f"{cfg.granularity} granularity needs "
+                             "calibration samples with the channel axis "
+                             "present")
         arr = np.asarray(samples)
+        plan = plan_from_config(cfg, arr.shape)
         axis = cfg.channel_axis % arr.ndim
         n_channels = arr.shape[axis]
         per_ch = np.moveaxis(arr, axis, 0).reshape(n_channels, -1)
-        gs = max(1, cfg.channel_group_size)
-        lo, hi = [], []
-        for g in range(0, n_channels, gs):
-            cmin_g, cmax_g, _ = _calibrate_range(cfg, per_ch[g:g + gs].ravel())
-            lo.append(cmin_g)
-            hi.append(cmax_g)
-        return FeatureCodec(config=cfg,
-                            cmin=np.asarray(lo, np.float32),
-                            cmax=np.asarray(hi, np.float32),
-                            n_channels=n_channels)
+        lo = np.empty((plan.n_cgroups, plan.n_sblocks), np.float32)
+        hi = np.empty_like(lo)
+        tile_q = None
+        if cfg.use_ecsq:
+            tile_q = (np.empty((plan.n_tiles, cfg.n_levels), np.float32),
+                      np.empty((plan.n_tiles, cfg.n_levels - 1), np.float32))
+        for t, cs, ss in plan.tile_slices(n_channels, per_ch.shape[1]):
+            seg = per_ch[cs, ss].ravel()
+            cmin_t, cmax_t, _ = _calibrate_range(cfg, seg)
+            lo[t // plan.n_sblocks, t % plan.n_sblocks] = cmin_t
+            hi[t // plan.n_sblocks, t % plan.n_sblocks] = cmax_t
+            if tile_q is not None:
+                q = design_ecsq(seg, cfg.n_levels, cfg.ecsq_lagrangian,
+                                cmin_t, cmax_t,
+                                pin_boundaries=cfg.ecsq_pin_boundaries)
+                tile_q[0][t] = q.levels
+                tile_q[1][t] = q.thresholds
+        tile_ecsq = TileECSQ(*tile_q) if tile_q is not None else None
+        # "channel" keeps the historical 1-D group-vector storage
+        table_lo = lo.ravel() if plan.n_sblocks == 1 else lo
+        table_hi = hi.ravel() if plan.n_sblocks == 1 else hi
+        return FeatureCodec(config=cfg, cmin=table_lo, cmax=table_hi,
+                            n_channels=n_channels, plan=plan,
+                            tile_ecsq=tile_ecsq)
 
     cmin, cmax, model = _calibrate_range(cfg, samples, stats,
                                          sample_mean, sample_var)

@@ -119,14 +119,13 @@ def _chunk_freqs(bits: np.ndarray, chunk_bits: int) -> np.ndarray:
     return np.clip(f1, 1, _M - 1).astype(np.uint32)
 
 
-def encode_planes(planes: list[np.ndarray]) -> bytes:
-    """Encode TU bit planes (uint8 0/1 arrays) into one rANS stream."""
-    planes = [np.asarray(p, dtype=np.uint8).ravel() for p in planes]
-    total_bits = int(sum(p.size for p in planes))
-    if total_bits == 0:
-        return struct.pack(_HEADER_FMT, 0, 0)
-    lanes = lane_count(total_bits)
+def _plane_setup(planes: list[np.ndarray], lanes: int):
+    """Pad/stack TU planes for a ``lanes``-wide coder.
 
+    Returns (bits2d (n_steps, lanes) uint8, f1_steps (n_steps,) uint32,
+    ftab uint16) -- the stream-independent setup shared by the serial and
+    batched encode loops.
+    """
     ftab = []          # per-chunk scaled probabilities, plane-major
     step_rows = []     # (steps_i, lanes) padded bit matrices
     step_f1 = []       # per-step probability (uint32)
@@ -142,10 +141,27 @@ def encode_planes(planes: list[np.ndarray]) -> bytes:
             p = np.concatenate([p, np.full(pad, mps, np.uint8)])
         step_rows.append(p.reshape(steps, lanes))
         step_f1.append(np.repeat(f1c, _CHUNK_STEPS)[:steps])
+    return (np.concatenate(step_rows, axis=0),
+            np.concatenate(step_f1),
+            np.concatenate(ftab))
 
-    bits2d = np.concatenate(step_rows, axis=0)
-    f1_steps = np.concatenate(step_f1)
-    ftab = np.concatenate(ftab)
+
+def _blob(lanes: int, ftab: np.ndarray, x: np.ndarray,
+          words: np.ndarray) -> bytes:
+    return (struct.pack(_HEADER_FMT, lanes, ftab.size)
+            + ftab.astype("<u2").tobytes()
+            + x.astype("<u4").tobytes()
+            + words.astype("<u2").tobytes())
+
+
+def encode_planes(planes: list[np.ndarray]) -> bytes:
+    """Encode TU bit planes (uint8 0/1 arrays) into one rANS stream."""
+    planes = [np.asarray(p, dtype=np.uint8).ravel() for p in planes]
+    total_bits = int(sum(p.size for p in planes))
+    if total_bits == 0:
+        return struct.pack(_HEADER_FMT, 0, 0)
+    lanes = lane_count(total_bits)
+    bits2d, f1_steps, ftab = _plane_setup(planes, lanes)
     n_steps = bits2d.shape[0]
 
     x = np.full(lanes, _STATE_LO, dtype=np.uint64)
@@ -168,10 +184,94 @@ def encode_planes(planes: list[np.ndarray]) -> bytes:
         words = np.concatenate(emitted)[::-1]
     else:
         words = np.empty(0, dtype=np.uint16)
-    return (struct.pack(_HEADER_FMT, lanes, ftab.size)
-            + ftab.astype("<u2").tobytes()
-            + x.astype("<u4").tobytes()
-            + words.astype("<u2").tobytes())
+    return _blob(lanes, ftab, x, words)
+
+
+def _encode_group(lanes: int, setups: list) -> list[bytes]:
+    """One batched step loop over S independent equal-lane-count streams.
+
+    The streams are stacked on a leading axis, so every per-step state
+    update runs as one (S, lanes) numpy op instead of S separate
+    dispatches -- the per-step python cost no longer scales with the
+    number of chunks.  Streams shorter than the longest are masked
+    inactive for the leading (reverse-order) steps.  Output bytes are
+    identical to :func:`encode_planes` per stream (asserted in tests).
+    """
+    s_count = len(setups)
+    steps = np.array([b.shape[0] for b, _, _ in setups], dtype=np.int64)
+    t_max = int(steps.max())
+    bits = np.zeros((s_count, t_max, lanes), np.uint8)
+    f1_all = np.ones((s_count, t_max), np.uint64)
+    for s, (b2d, f1s, _) in enumerate(setups):
+        bits[s, :b2d.shape[0]] = b2d
+        f1_all[s, :f1s.size] = f1s.astype(np.uint64)
+
+    x = np.full((s_count, lanes), _STATE_LO, dtype=np.uint64)
+    em_words, em_stream, em_step, em_lane = [], [], [], []
+    zero = np.uint64(0)
+    m64 = np.uint64(_M)
+    for t in range(t_max - 1, -1, -1):
+        active = steps > t                      # (S,)
+        f1 = f1_all[:, t][:, None]
+        f0 = m64 - f1
+        ones = bits[:, t, :] == 1
+        f = np.where(ones, f1, f0)
+        c = np.where(ones, f0, zero)
+        over = (x >= (f << _EMIT_SHIFT)) & active[:, None]
+        if over.any():
+            sidx, lidx = np.nonzero(over)
+            em_words.append((x[over] & _MASK_W).astype(np.uint16))
+            em_stream.append(sidx)
+            em_lane.append(lidx)
+            em_step.append(np.full(sidx.size, t, np.int64))
+            x[over] >>= _U16
+        q = x // f
+        x = np.where(active[:, None], (q << _S64) + (x - q * f) + c, x)
+
+    # per-stream word order matching the serial coder: steps ascending,
+    # lanes ascending within a step
+    if em_words:
+        w = np.concatenate(em_words)
+        st = np.concatenate(em_stream)
+        tt = np.concatenate(em_step)
+        ln = np.concatenate(em_lane)
+        order = np.lexsort((ln, tt, st))
+        w, st = w[order], st[order]
+        counts = np.bincount(st, minlength=s_count)
+        offs = np.concatenate([[0], np.cumsum(counts)])
+    else:
+        w = np.empty(0, np.uint16)
+        offs = np.zeros(s_count + 1, np.int64)
+    return [_blob(lanes, setups[s][2], x[s], w[offs[s]:offs[s + 1]])
+            for s in range(s_count)]
+
+
+def encode_planes_batch(streams: list[list[np.ndarray]]) -> list[bytes]:
+    """Encode many *independent* plane lists; one stream of bytes each.
+
+    Byte-identical to ``[encode_planes(p) for p in streams]``, but
+    streams with equal lane counts share one batched step loop --
+    :meth:`FeatureCodec.encode_stream` uses this to cut the per-chunk
+    python dispatch that otherwise dominates chunked encodes.
+    """
+    out: list[bytes | None] = [None] * len(streams)
+    groups: dict[int, list] = {}
+    for i, planes in enumerate(streams):
+        planes = [np.asarray(p, dtype=np.uint8).ravel() for p in planes]
+        total = int(sum(p.size for p in planes))
+        if total == 0:
+            out[i] = struct.pack(_HEADER_FMT, 0, 0)
+            continue
+        groups.setdefault(lane_count(total), []).append((i, planes))
+    for lanes, members in groups.items():
+        if len(members) == 1:
+            i, planes = members[0]
+            out[i] = encode_planes(planes)
+            continue
+        setups = [_plane_setup(planes, lanes) for _, planes in members]
+        for (i, _), blob in zip(members, _encode_group(lanes, setups)):
+            out[i] = blob
+    return out
 
 
 class PlaneStreamDecoder:

@@ -1,0 +1,195 @@
+"""TilePlan: one geometry object for every codec granularity.
+
+A *tile* is a (channel-group x spatial-block) region of the feature
+tensor: channels along ``channel_axis`` are grouped ``channel_group_size``
+at a time, and the remaining (flattened, channel-major) spatial extent is
+cut into contiguous blocks of ``spatial_block_size`` elements.  Every tile
+carries its own clipping range (and optionally its own ECSQ table), so the
+paper's per-tensor mode, the companion paper's per-channel mosaic
+(arXiv 2105.06002) and full channel x spatial tiling (the spatial
+redundancy of arXiv 1804.09963) are all the *same* code path at different
+plan settings:
+
+    per-tensor   1 tile            (no plan; scalar fast path)
+    per-channel  plan(gc=g, bs=0)  n_sblocks == 1, spatial extent free
+    tiled        plan(gc=g, bs=b)  channel groups x spatial blocks
+
+``spatial_block_size == 0`` means "one spatial block spanning everything";
+only then may ``spatial_extent`` stay ``None`` (the plan accepts tensors
+of any spatial size, like the old per-channel mode).  With ``bs > 0`` the
+spatial extent is fixed at calibration time: tile ranges are positional.
+
+Coded order: tiled bitstreams serialize indices in *tile-major* (channel-
+major) order -- ``moveaxis(channel -> 0).reshape(C, M).ravel()`` -- so
+consecutive coded symbols share a tile (aligned index distributions for
+the chunk-static entropy stage) and chunk boundaries can align to whole
+channel rows (see :meth:`align_chunk_elems`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TilePlan:
+    """Tile geometry for one calibrated codec.
+
+    ``channel_axis`` is kept as configured (may be negative) and
+    normalized per tensor; ``n_channels`` is the calibrated channel count;
+    ``spatial_extent`` is the calibrated flattened spatial size (``None``
+    only when ``spatial_block_size == 0``).
+    """
+
+    channel_axis: int
+    channel_group_size: int
+    spatial_block_size: int
+    n_channels: int
+    spatial_extent: int | None = None
+
+    def __post_init__(self):
+        if self.channel_group_size < 1:
+            raise ValueError("channel_group_size must be >= 1")
+        if self.spatial_block_size < 0:
+            raise ValueError("spatial_block_size must be >= 0")
+        if self.spatial_block_size > 0 and self.spatial_extent is None:
+            raise ValueError("spatial tiling needs a fixed spatial_extent")
+
+    # -- derived geometry -----------------------------------------------------
+
+    @property
+    def n_cgroups(self) -> int:
+        return -(-self.n_channels // self.channel_group_size)
+
+    @property
+    def n_sblocks(self) -> int:
+        if self.spatial_block_size == 0:
+            return 1
+        return -(-self.spatial_extent // self.spatial_block_size)
+
+    @property
+    def n_tiles(self) -> int:
+        return self.n_cgroups * self.n_sblocks
+
+    def block_extent(self, spatial_extent: int) -> int:
+        """Elements per spatial block (the whole extent when bs == 0)."""
+        return self.spatial_block_size or spatial_extent
+
+    # -- per-tensor validation ------------------------------------------------
+
+    def resolve(self, shape: tuple[int, ...]) -> tuple[int, int, int]:
+        """Validate ``shape`` against the plan; returns (axis, C, M)."""
+        axis = self.channel_axis % len(shape)
+        c = shape[axis]
+        if c != self.n_channels:
+            raise ValueError(
+                f"axis {axis} has {c} channels, plan was calibrated "
+                f"for {self.n_channels}")
+        m = 1
+        for d, s in enumerate(shape):
+            if d != axis:
+                m *= s
+        if self.spatial_extent is not None and m != self.spatial_extent:
+            raise ValueError(
+                f"tensor has spatial extent {m}, plan was calibrated "
+                f"for {self.spatial_extent}")
+        return axis, c, m
+
+    # -- element <-> tile maps (host/numpy; jit-constant under trace) ----------
+
+    def cgroup_ids(self) -> np.ndarray:
+        """(C,) int32: channel -> channel-group id."""
+        return (np.arange(self.n_channels, dtype=np.int32)
+                // self.channel_group_size)
+
+    def sblock_ids(self, spatial_extent: int) -> np.ndarray:
+        """(M,) int32: flattened spatial position -> spatial-block id."""
+        return (np.arange(spatial_extent, dtype=np.int32)
+                // self.block_extent(spatial_extent))
+
+    def tile_ids_2d(self, spatial_extent: int) -> np.ndarray:
+        """(C, M) int32 channel-major view of element -> flat tile id
+        (cgroup-major, sblock-minor -- the header's table order)."""
+        return (self.cgroup_ids()[:, None] * self.n_sblocks
+                + self.sblock_ids(spatial_extent)[None, :])
+
+    def tile_ids(self, shape: tuple[int, ...]) -> np.ndarray:
+        """int32 array of ``shape``: element -> flat tile id."""
+        axis, c, m = self.resolve(shape)
+        tid = self.tile_ids_2d(m)                             # (C, M)
+        moved = [shape[axis]] + [s for d, s in enumerate(shape) if d != axis]
+        return np.moveaxis(tid.reshape(moved), 0, axis)
+
+    def tile_slices(self, c: int, m: int):
+        """Yield (tile_id, channel slice, spatial slice) over the
+        channel-major (C, M) view -- the calibration iteration order."""
+        gc, bs = self.channel_group_size, self.block_extent(m)
+        for g in range(self.n_cgroups):
+            for s in range(self.n_sblocks):
+                yield (g * self.n_sblocks + s,
+                       slice(g * gc, min((g + 1) * gc, c)),
+                       slice(s * bs, min((s + 1) * bs, m)))
+
+    # -- coded order ----------------------------------------------------------
+
+    def to_coded_order(self, arr: np.ndarray) -> np.ndarray:
+        """Tensor (original layout) -> flat tile-major coded order."""
+        axis, c, _ = self.resolve(arr.shape)
+        return np.moveaxis(np.asarray(arr), axis, 0).reshape(-1)
+
+    def from_coded_order(self, flat: np.ndarray,
+                         shape: tuple[int, ...]) -> np.ndarray:
+        """Inverse of :meth:`to_coded_order` for a known tensor shape."""
+        axis, c, m = self.resolve(shape)
+        moved = [shape[axis]] + [s for d, s in enumerate(shape) if d != axis]
+        return np.moveaxis(np.asarray(flat).reshape(moved), 0, axis)
+
+    def align_chunk_elems(self, chunk_elems: int, shape: tuple[int, ...]
+                          ) -> int:
+        """Round a streaming chunk size up so chunk boundaries never split
+        a tile's contiguous run in coded order.
+
+        In tile-major order, flat position ``c*M + m`` changes tile at
+        every spatial-block boundary and at every row (channel) end, so a
+        boundary-safe chunk period is ``bs`` when the rows tile exactly
+        (``M % bs == 0``) and a whole row ``M`` otherwise.
+        """
+        _, _, m = self.resolve(shape)
+        bs = self.block_extent(m)
+        run = bs if m % bs == 0 else m
+        return max(run, -(-chunk_elems // run) * run)
+
+
+@dataclasses.dataclass(frozen=True)
+class TileECSQ:
+    """Per-tile non-uniform quantizer tables (row t = flat tile id t).
+
+    The header ships only ``levels``; ``thresholds`` exist sender-side
+    (rebuilt per tile via ``ECSQQuantizer.from_levels`` when a receiver
+    wants to re-encode).
+    """
+
+    levels: np.ndarray       # (n_tiles, N) float32, rows ascending
+    thresholds: np.ndarray   # (n_tiles, N-1) float32
+
+    @property
+    def n_levels(self) -> int:
+        return self.levels.shape[1]
+
+
+def plan_from_config(cfg, shape: tuple[int, ...]) -> TilePlan:
+    """Build the plan a :class:`~repro.core.codec.CodecConfig` describes
+    for calibration tensors of ``shape`` (granularity 'channel'|'tile')."""
+    axis = cfg.channel_axis % len(shape)
+    c = shape[axis]
+    m = 1
+    for d, s in enumerate(shape):
+        if d != axis:
+            m *= s
+    bs = cfg.spatial_block_size if cfg.granularity == "tile" else 0
+    return TilePlan(channel_axis=cfg.channel_axis,
+                    channel_group_size=max(1, cfg.channel_group_size),
+                    spatial_block_size=bs, n_channels=c,
+                    spatial_extent=m if bs else None)

@@ -3,11 +3,13 @@
 Deploy-time counterpart of Algorithm 1: given the designed decision
 thresholds t_1..t_{N-1} and reconstruction levels x_0..x_{N-1}, map each
 activation to its bin (index = #{t_i < x}) and its reconstruction value.
-N is small (<= 16), so the comparison/select loops are fully unrolled in
-VMEM -- no gather is needed (TPU-friendly: selects instead of dynamic
-indexing).
+The comparison/select passes run as ``lax.fori_loop`` bodies over the
+threshold/level block (one iota-masked scalar extraction per step -- no
+dynamic lane indexing), so N scales to 64 without unrolling the kernel
+body and no gather over the data block is needed (TPU-friendly:
+broadcast compare/select per level).
 
-Thresholds/levels arrive as a (1, 16)-padded VMEM block shared by every
+Thresholds/levels arrive as a (1, 64)-padded VMEM block shared by every
 grid step.
 """
 
@@ -20,19 +22,33 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 DEFAULT_BLOCK = (256, 512)
-MAX_LEVELS = 16
+MAX_LEVELS = 64
 
 
 def _kernel(x_ref, thr_ref, lvl_ref, idx_ref, deq_ref, *, n_levels: int,
             cmin: float, cmax: float):
     x = jnp.clip(x_ref[...].astype(jnp.float32), cmin, cmax)
-    idx = jnp.zeros(x.shape, jnp.int32)
-    for i in range(n_levels - 1):        # unrolled: N <= 16
+    thr = thr_ref[...]
+    lvl = lvl_ref[...]
+    # iota-masked scalar extraction: the loop index appears only in the
+    # select values, never as a ref/array index, so the bodies stay free
+    # of dynamic lane addressing (which Mosaic may refuse to lower)
+    lane = jax.lax.broadcasted_iota(jnp.int32, thr.shape, 1)
+
+    def thr_body(i, acc):
+        t_i = jnp.sum(jnp.where(lane == i, thr, 0.0))
         # >= matches searchsorted(side='right'): ties go to the upper bin
-        idx += (x >= thr_ref[0, i]).astype(jnp.int32)
-    deq = jnp.full(x.shape, lvl_ref[0, 0], jnp.float32)
-    for i in range(1, n_levels):
-        deq = jnp.where(idx == i, lvl_ref[0, i], deq)
+        return acc + (x >= t_i).astype(jnp.int32)
+
+    idx = jax.lax.fori_loop(0, n_levels - 1, thr_body,
+                            jnp.zeros(x.shape, jnp.int32))
+
+    def lvl_body(i, deq):
+        l_i = jnp.sum(jnp.where(lane == i, lvl, 0.0))
+        return jnp.where(idx == i, l_i, deq)
+
+    deq = jax.lax.fori_loop(1, n_levels, lvl_body,
+                            jnp.full(x.shape, lvl[0, 0], jnp.float32))
     idx_ref[...] = idx
     deq_ref[...] = deq.astype(deq_ref.dtype)
 

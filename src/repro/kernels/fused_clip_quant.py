@@ -52,14 +52,18 @@ def clip_quant_2d(x, cmin: float, cmax: float, n_levels: int,
     )(x)
 
 
-def _kernel_rows(x_ref, cmin_ref, cmax_ref, idx_ref, deq_ref, *,
-                 n_levels: int):
-    """Per-row clipping ranges: row r of the block uses (cmin[r], cmax[r]).
+def _kernel_tiles(x_ref, cmin_ref, cmax_ref, idx_ref, deq_ref, *,
+                  n_levels: int):
+    """Per-tile clipping ranges: row r of the (br, bc) data block uses the
+    (cmin[r], cmax[r]) column the grid mapped for this column block.
 
-    Used for the codec's per-channel granularity with the tensor laid out
-    channel-major; the (br, 1) range columns broadcast against the
-    (br, bc) data block on the VPU, so the fused pass stays a single
-    HBM read like the scalar-range kernel.
+    This is the codec's TilePlan hot path: the tensor is laid out
+    channel-major with spatial blocks padded to whole column blocks, so
+    every (row, column-block) cell of the grid is covered by exactly one
+    tile and the (br, 1) range columns broadcast against the data block on
+    the VPU -- the fused pass stays a single HBM read like the
+    scalar-range kernel.  Per-row ranges (per-channel granularity) are the
+    one-spatial-block special case.
     """
     x = x_ref[...].astype(jnp.float32)
     cmin = cmin_ref[...].astype(jnp.float32)        # (br, 1)
@@ -72,21 +76,47 @@ def _kernel_rows(x_ref, cmin_ref, cmax_ref, idx_ref, deq_ref, *,
     deq_ref[...] = (cmin + q * (span / (n_levels - 1))).astype(deq_ref.dtype)
 
 
-def clip_quant_rows_2d(x, cmin, cmax, n_levels: int, block=DEFAULT_BLOCK,
-                       interpret: bool = False):
-    """x: (R, C) block-aligned; cmin/cmax: (R, 1) float32 per-row ranges."""
+def clip_quant_tiles_2d(x, cmin, cmax, n_levels: int, sblock_cols: int,
+                        block=DEFAULT_BLOCK, interpret: bool = False):
+    """Blocked per-tile clip+quant+dequant.
+
+    x: (R, C) block-aligned, channel-major, spatial blocks padded to
+    ``sblock_cols`` columns each (so C == n_sblocks * sblock_cols);
+    cmin/cmax: (R, n_sblocks) float32 per-(row, spatial-block) ranges.
+    The kernel's column block size divides ``sblock_cols``, so the range
+    column for grid step (i, j) is simply ``j * bc // sblock_cols``.
+    """
     r, c = x.shape
-    br, bc = min(block[0], r), min(block[1], c)
+    if c % sblock_cols:
+        raise ValueError(f"C {c} not a multiple of sblock_cols {sblock_cols}")
+    br = min(block[0], r)
+    bc = min(block[1], c, sblock_cols)
+    while sblock_cols % bc:        # largest lane-multiple divisor <= block[1]
+        bc -= 128
     grid = (r // br, c // bc)
     return pl.pallas_call(
-        functools.partial(_kernel_rows, n_levels=n_levels),
+        functools.partial(_kernel_tiles, n_levels=n_levels),
         grid=grid,
         in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j)),
-                  pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
-                  pl.BlockSpec((br, 1), lambda i, j: (i, 0))],
+                  pl.BlockSpec((br, 1), lambda i, j: (i, j * bc
+                                                      // sblock_cols)),
+                  pl.BlockSpec((br, 1), lambda i, j: (i, j * bc
+                                                      // sblock_cols))],
         out_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j)),
                    pl.BlockSpec((br, bc), lambda i, j: (i, j))],
         out_shape=[jax.ShapeDtypeStruct((r, c), jnp.int32),
                    jax.ShapeDtypeStruct((r, c), x.dtype)],
         interpret=interpret,
     )(x, cmin, cmax)
+
+
+def clip_quant_rows_2d(x, cmin, cmax, n_levels: int, block=DEFAULT_BLOCK,
+                       interpret: bool = False):
+    """x: (R, C) block-aligned; cmin/cmax: (R, 1) float32 per-row ranges.
+
+    The one-spatial-block case of :func:`clip_quant_tiles_2d`, kept as the
+    named per-channel entry point.
+    """
+    return clip_quant_tiles_2d(x, cmin, cmax, n_levels,
+                               sblock_cols=x.shape[1], block=block,
+                               interpret=interpret)

@@ -16,11 +16,22 @@ import numpy as np
 
 from . import ref
 from .ecsq_assign import ecsq_assign_2d
-from .fused_clip_quant import clip_quant_2d, clip_quant_rows_2d
+from .fused_clip_quant import (clip_quant_2d, clip_quant_rows_2d,
+                               clip_quant_tiles_2d)
+from .pack_bits import pack_rows_2d
 from .rate_hist import index_histogram_2d
 
 _LANE = 128
 _ROW = 8
+
+
+def _pad_lane(n: int, big: int = 512) -> int:
+    """Round ``n`` up to a lane multiple; large sizes to a ``big`` multiple
+    so the default column block tiles exactly."""
+    cols = max(_LANE, ((n + _LANE - 1) // _LANE) * _LANE)
+    if cols > big:
+        cols = ((cols + big - 1) // big) * big
+    return cols
 
 
 def _on_cpu() -> bool:
@@ -63,16 +74,23 @@ def clip_quantize(x, *, cmin: float, cmax: float, n_levels: int,
 
 
 @functools.partial(jax.jit, static_argnames=("n_levels", "channel_axis",
+                                             "channel_group_size",
+                                             "spatial_block_size",
                                              "interpret"))
-def clip_quantize_channels(x, cmin, cmax, *, n_levels: int,
-                           channel_axis: int = -1,
-                           interpret: bool | None = None):
-    """Per-channel fused clip+quantize+dequantize (tiled granularity).
+def clip_quantize_tiled(x, lo, hi, *, n_levels: int, channel_axis: int = -1,
+                        channel_group_size: int = 1,
+                        spatial_block_size: int = 0,
+                        interpret: bool | None = None):
+    """TilePlan fused clip+quantize+dequantize (channel x spatial tiling).
 
-    ``cmin``/``cmax`` are (C,) vectors for axis ``channel_axis`` of ``x``.
-    The tensor is viewed channel-major as (C, M); each row is coded with
-    its own range by the per-row kernel.  Rows pad to the sublane multiple
-    with a dummy [0, 1] range, columns to the 128-lane multiple.
+    ``lo``/``hi`` are (n_cgroups, n_sblocks) range tables: channel group
+    ``c // channel_group_size`` x spatial block ``m // spatial_block_size``
+    of the channel-major (C, M) view (``spatial_block_size == 0`` = one
+    block spanning M).  The view is laid out with each spatial block
+    padded to a whole lane-aligned column block, so the blocked per-tile
+    kernel reads one range cell per grid step; rows pad to the sublane
+    multiple with a dummy [0, 1] range.  Per-channel granularity is the
+    one-spatial-block case.
     """
     interpret = _on_cpu() if interpret is None else interpret
     axis = channel_axis % x.ndim
@@ -81,25 +99,50 @@ def clip_quantize_channels(x, cmin, cmax, *, n_levels: int,
     ch = moved_shape[0]
     x2 = xm.reshape(ch, -1)
     m = x2.shape[1]
+    n_cgroups, n_sblocks = lo.shape
+    bs = spatial_block_size or m
 
-    cols = max(_LANE, ((m + _LANE - 1) // _LANE) * _LANE)
-    if cols > 512:
-        cols = ((cols + 511) // 512) * 512
+    sb_cols = _pad_lane(bs)
+    cols = n_sblocks * sb_cols
     align = _ROW if ch <= 256 else 256
     rows = ((ch + align - 1) // align) * align
 
-    xp = jnp.zeros((rows, cols), x.dtype).at[:ch, :m].set(x2)
-    lo = jnp.zeros((rows, 1), jnp.float32) \
-        .at[:ch, 0].set(cmin.astype(jnp.float32))
-    hi = jnp.ones((rows, 1), jnp.float32) \
-        .at[:ch, 0].set(cmax.astype(jnp.float32))
+    # scatter each spatial block into its padded column band
+    mp = n_sblocks * bs
+    if mp != m:
+        x2 = jnp.concatenate(
+            [x2, jnp.zeros((ch, mp - m), x.dtype)], axis=1)
+    x3 = jnp.zeros((ch, n_sblocks, sb_cols), x.dtype) \
+        .at[:, :, :bs].set(x2.reshape(ch, n_sblocks, bs))
+    xp = jnp.zeros((rows, cols), x.dtype).at[:ch].set(x3.reshape(ch, cols))
+
+    # expand the group-level tables to per-row (channel) range columns
+    cg = np.arange(ch) // max(1, channel_group_size)
+    lo_r = jnp.zeros((rows, n_sblocks), jnp.float32) \
+        .at[:ch].set(lo.astype(jnp.float32)[cg])
+    hi_r = jnp.ones((rows, n_sblocks), jnp.float32) \
+        .at[:ch].set(hi.astype(jnp.float32)[cg])
     br = min(256, rows)
-    idx, deq = clip_quant_rows_2d(xp, lo, hi, n_levels,
-                                  block=(br, min(512, cols)),
-                                  interpret=interpret)
-    idx = jnp.moveaxis(idx[:ch, :m].reshape(moved_shape), 0, axis)
-    deq = jnp.moveaxis(deq[:ch, :m].reshape(moved_shape), 0, axis)
-    return idx, deq
+    idx, deq = clip_quant_tiles_2d(xp, lo_r, hi_r, n_levels, sb_cols,
+                                   block=(br, min(512, cols)),
+                                   interpret=interpret)
+
+    def unpad(a):
+        a = a[:ch].reshape(ch, n_sblocks, sb_cols)[:, :, :bs]
+        return jnp.moveaxis(a.reshape(ch, mp)[:, :m].reshape(moved_shape),
+                            0, axis)
+    return unpad(idx), unpad(deq)
+
+
+def clip_quantize_channels(x, cmin, cmax, *, n_levels: int,
+                           channel_axis: int = -1,
+                           interpret: bool | None = None):
+    """Per-channel fused clip+quantize+dequantize: the one-spatial-block
+    case of :func:`clip_quantize_tiled` (kept as a named entry point)."""
+    return clip_quantize_tiled(x, cmin.reshape(-1, 1), cmax.reshape(-1, 1),
+                               n_levels=n_levels, channel_axis=channel_axis,
+                               channel_group_size=1, spatial_block_size=0,
+                               interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("cmin", "cmax", "interpret"))
@@ -115,6 +158,31 @@ def ecsq_quantize(x, thresholds, levels, *, cmin: float, cmax: float,
     shape = x.shape
     return (idx.reshape(-1)[:n].reshape(shape),
             deq.reshape(-1)[:n].reshape(shape))
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def pack_indices(idx, *, bits: int, interpret: bool | None = None):
+    """Pack int32 indices to ``bits``-wide uint8 lanes on device.
+
+    Same byte layout as the jnp host fallback (see ``pack_bits.py``);
+    ``bits`` must be 1, 2 or 4 (wire widths where a byte holds several
+    indices).  Returns a flat uint8 array of ``ceil(n / (8 // bits))``
+    bytes, zero-padded in the last byte.
+    """
+    if bits not in (1, 2, 4):
+        raise ValueError(f"packable bit widths are 1/2/4, got {bits}")
+    interpret = _on_cpu() if interpret is None else interpret
+    per = 8 // bits
+    flat = idx.reshape(-1).astype(jnp.int32)
+    n_out = -(-flat.shape[0] // per)
+    cols = _pad_lane(n_out, big=1024)
+    lanes = jnp.zeros((cols * per,), jnp.int32).at[:flat.shape[0]].set(flat)
+    # lane-view: row j holds the j-th index of every output byte
+    lanes = lanes.reshape(cols, per).T                       # (per, cols)
+    rows = jnp.zeros((8, cols), jnp.int32).at[:per].set(lanes)
+    packed = pack_rows_2d(rows, bits, block_cols=min(1024, cols),
+                          interpret=interpret)
+    return packed.reshape(-1)[:n_out].astype(jnp.uint8)
 
 
 @functools.partial(jax.jit, static_argnames=("n_levels", "interpret"))

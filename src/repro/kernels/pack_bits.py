@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: pack quantizer indices to the wire bit-width.
+
+The packed split-runtime transport crosses ``ceil(log2 N)``-bit indices
+over the inter-pod links as uint8 lanes (8/bits indices per byte).  With
+this kernel the pack runs on device, so it fuses into the same pass as
+the clip+quant output instead of round-tripping full-width int32 indices
+through the host, and only wire-width bytes cross the interconnect.
+
+Bit layout (shared with the jnp host fallback in
+:meth:`repro.core.backend.JnpBackend.pack_indices`): byte ``k`` holds
+indices ``k*per + j`` for ``j`` in ``[0, per)`` at bit offset
+``j * bits`` -- little-end-first lanes.  The wrapper hands the kernel a
+(8, n_bytes) view whose row ``j`` is lane ``j`` of every output byte
+(rows past ``per`` are zero padding to the int32 sublane tile), so the
+combine is ``per`` row-wise shift+adds on the VPU -- no lane-dimension
+gathers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_SUBLANES = 8          # int32 sublane tile; also the max lanes-per-byte
+DEFAULT_BLOCK_COLS = 1024
+
+
+def _kernel(idx_ref, out_ref, *, per: int, bits: int):
+    acc = idx_ref[0:1, :]
+    for j in range(1, per):               # unrolled: per in (2, 4, 8)
+        acc = acc + (idx_ref[j:j + 1, :] << (j * bits))
+    out_ref[...] = acc.astype(jnp.int32)
+
+
+def pack_rows_2d(x, bits: int, block_cols: int = DEFAULT_BLOCK_COLS,
+                 interpret: bool = False):
+    """x: (8, N) int32 lane-view, N a multiple of ``block_cols``; rows
+    ``per..8`` must be zero.  Returns (1, N) int32 packed bytes (values
+    in [0, 255]; the caller casts to uint8 for the wire)."""
+    per = 8 // bits
+    r, n = x.shape
+    if r != _SUBLANES:
+        raise ValueError(f"lane view must have {_SUBLANES} rows, got {r}")
+    bc = min(block_cols, n)
+    grid = (n // bc,)
+    return pl.pallas_call(
+        functools.partial(_kernel, per=per, bits=bits),
+        grid=grid,
+        in_specs=[pl.BlockSpec((_SUBLANES, bc), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((1, bc), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.int32),
+        interpret=interpret,
+    )(x)

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 DEFAULT_BLOCK = (256, 512)
-MAX_LEVELS = 16
+MAX_LEVELS = 64
 
 
 def _kernel(idx_ref, hist_ref, *, n_levels: int):
@@ -27,8 +27,17 @@ def _kernel(idx_ref, hist_ref, *, n_levels: int):
         hist_ref[...] = jnp.zeros_like(hist_ref)
 
     idx = idx_ref[...]
-    for n in range(n_levels):            # unrolled: N <= 16
-        hist_ref[0, n] += jnp.sum((idx == n).astype(jnp.int32))
+    # one-hot accumulate against a lane iota: the loop index appears only
+    # in *values* (the select), never as a ref index, so the body stays
+    # free of dynamic lane addressing (which Mosaic may refuse to lower)
+    lane = jax.lax.broadcasted_iota(jnp.int32, hist_ref.shape, 1)
+
+    def body(n, carry):                  # blocked: N scales to 64
+        cnt = jnp.sum((idx == n).astype(jnp.int32))
+        hist_ref[...] += jnp.where(lane == n, cnt, 0)
+        return carry
+
+    jax.lax.fori_loop(0, n_levels, body, 0)
 
 
 def index_histogram_2d(idx, n_levels: int, block=DEFAULT_BLOCK,

@@ -7,7 +7,10 @@ measured split-link rate, and per-request latency.
 The codec is calibrated from a *warm-up batch of real split-layer
 activations* (``--clip-mode model|empirical|minmax|aciq``, the paper's
 calibration modes) instead of a hardcoded manual range; ``--clip-mode
-manual`` keeps the old [-8, 8] behavior.
+manual`` keeps the old [-8, 8] behavior.  ``--granularity channel``
+(with ``--channel-group``) calibrates a TilePlan codec -- one clipping
+range per group of d_model channels, shipped in the v3 self-describing
+stream header.
 
 ``--transport loopback`` wires the split boundary through a real socket
 pair: a CloudServer thread on localhost receives the streamed, framed
@@ -25,16 +28,29 @@ import numpy as np
 
 
 def _calibrate_warmup(cfg, params, args):
-    """Calibrate the codec on a warm-up batch of split-layer activations."""
+    """Calibrate the codec on a warm-up batch of split-layer activations.
+
+    Tiled granularities keep the d_model channel axis in the calibration
+    samples (reshaped to (tokens, d_model)), so per-channel-group /
+    per-tile ranges come from real per-feature statistics.
+    """
     import jax
 
     from ..core import CodecConfig, calibrate
     from ..data import DataConfig, stream
     from ..models import forward
 
+    # "tile" (fixed spatial extent) is not offered here: serving tensors
+    # change spatial size between prefill and decode steps, so only the
+    # extent-free granularities calibrate from a warm-up pass
     ccfg = CodecConfig(n_levels=args.codec_levels, clip_mode=args.clip_mode,
-                       constrain_cmin_zero=False)
+                       constrain_cmin_zero=False,
+                       granularity=args.granularity, channel_axis=-1,
+                       channel_group_size=args.channel_group)
     if args.clip_mode == "manual":
+        if args.granularity != "tensor":
+            raise SystemExit("--clip-mode manual implies per-tensor "
+                             "granularity")
         return calibrate(CodecConfig(n_levels=args.codec_levels,
                                      clip_mode="manual", manual_cmin=-8.0,
                                      manual_cmax=8.0))
@@ -50,11 +66,17 @@ def _calibrate_warmup(cfg, params, args):
     for _, batch in zip(range(args.warmup_batches), stream(dcfg)):
         forward(cfg, params, jax.numpy.asarray(batch["tokens"]),
                 codec_fn=probe_fn)
-        chunks.append(np.asarray(probe["x"], np.float32).reshape(-1))
-    samples = np.concatenate(chunks)
+        chunks.append(np.asarray(probe["x"], np.float32)
+                      .reshape(-1, cfg.d_model))
+    samples = np.concatenate(chunks, axis=0)
+    if args.granularity == "tensor":
+        samples = samples.reshape(-1)
     codec = calibrate(ccfg, samples=samples)
+    grain = args.granularity if args.granularity == "tensor" else \
+        f"{args.granularity}(g={args.channel_group})"
     print(f"calibrated codec on {samples.size} warm-up activations: "
-          f"clip_mode={args.clip_mode} range=[{float(np.min(codec.cmin)):.3f},"
+          f"clip_mode={args.clip_mode} granularity={grain} "
+          f"range=[{float(np.min(codec.cmin)):.3f},"
           f" {float(np.max(codec.cmax)):.3f}]")
     return codec
 
@@ -122,6 +144,14 @@ def main():
                     help="codec calibration mode (warm-up activations; "
                          "'manual' keeps the legacy [-8, 8] range)")
     ap.add_argument("--warmup-batches", type=int, default=4)
+    ap.add_argument("--granularity", default="tensor",
+                    choices=["tensor", "channel"],
+                    help="codec granularity at the split boundary: "
+                         "'channel' calibrates one range per d_model "
+                         "channel group (TilePlan, v3 streams)")
+    ap.add_argument("--channel-group", type=int, default=1,
+                    help="channels per range group for "
+                         "--granularity channel")
     ap.add_argument("--transport", default="none",
                     choices=["none", "loopback"],
                     help="'loopback' streams every split tensor through "

@@ -20,7 +20,7 @@ from .framing import (FT_CHUNK, FT_END, FT_ERROR, FT_FEEDBACK, FT_HEADER,
                       FT_RESULT, Frame, FrameReader, FramingError,
                       encode_frame, pack_arrays, unpack_arrays)
 from .rate_control import (DEFAULT_LADDER, CodecBank, RateControlConfig,
-                           RateController)
+                           RateController, Rung, as_rung, rung_of_codec)
 from .server import CloudServer
 from .stream_codec import (DEFAULT_CHUNK_ELEMS, Feedback, TensorAssembler,
                            tensor_to_frames)
@@ -32,6 +32,7 @@ __all__ = [
     "FT_HEADER", "FT_CHUNK", "FT_END", "FT_RESULT", "FT_FEEDBACK",
     "FT_ERROR",
     "CodecBank", "RateControlConfig", "RateController", "DEFAULT_LADDER",
+    "Rung", "as_rung", "rung_of_codec",
     "CloudServer", "TensorAssembler", "tensor_to_frames", "Feedback",
     "DEFAULT_CHUNK_ELEMS",
 ]

@@ -30,7 +30,7 @@ import numpy as np
 from ..core.codec import FeatureCodec
 from .framing import (FT_ERROR, FT_FEEDBACK, FT_RESULT, FrameReader,
                       unpack_arrays)
-from .rate_control import CodecBank, RateController
+from .rate_control import CodecBank, RateController, rung_of_codec
 from .stream_codec import DEFAULT_CHUNK_ELEMS, Feedback, tensor_to_frames
 
 
@@ -145,14 +145,14 @@ class EdgeClient:
 
     # -- send path ------------------------------------------------------------
 
-    def _pick_codec(self) -> tuple[FeatureCodec, int]:
+    def _pick_codec(self) -> tuple[FeatureCodec, object]:
         if self.rate_controller is not None:
-            n = self.rate_controller.next_levels()
-            return self.codec_bank.get(n), n
+            rung = self.rate_controller.next_rung()
+            return self.codec_bank.get(rung), rung
         if self.codec is not None:
             return self.codec, self.codec.config.n_levels
-        n = max(self.codec_bank.ladder)
-        return self.codec_bank.get(n), n
+        rung = max(self.codec_bank.ladder)
+        return self.codec_bank.get(rung), rung
 
     async def submit(self, x: np.ndarray,
                      codec: FeatureCodec | None = None) -> SubmitResult:
@@ -162,9 +162,16 @@ class EdgeClient:
         if self._dead is not None:
             raise TransportError(f"connection failed: {self._dead}")
         if codec is None:
-            codec, n_levels = self._pick_codec()
+            codec, rung = self._pick_codec()
         else:
-            n_levels = codec.config.n_levels
+            # attribute the measurement to the codec's actual operating
+            # point: the exact ladder rung when the codec came from the
+            # bank (so 'base'-granularity rungs don't fragment into a
+            # second EWMA key), else the codec's own config
+            rung = (self.codec_bank.rung_for(codec)
+                    if self.codec_bank is not None else None) \
+                or rung_of_codec(codec)
+        n_levels = codec.config.n_levels
         session = self._next_session
         self._next_session += 1
         fut = asyncio.get_running_loop().create_future()
@@ -194,7 +201,7 @@ class EdgeClient:
         total_s = time.perf_counter() - t0
         fb = self._feedback.pop(session, None)
         if self.rate_controller is not None:
-            self.rate_controller.on_tensor(n_levels, coded, x.size,
+            self.rate_controller.on_tensor(rung, coded, x.size,
                                            send_seconds=send_s)
         return SubmitResult(arrays=arrays, n_levels=n_levels,
                             coded_bytes=coded, n_elems=int(x.size),

@@ -2,8 +2,8 @@
 
 The self-describing bitstream header makes every tensor independently
 decodable, so the edge is free to re-pick the quantizer *per request*.
-:class:`RateController` chooses the ``n_levels`` rung of a calibrated
-codec ladder (:class:`CodecBank`) so that
+:class:`RateController` chooses a :class:`Rung` of a calibrated codec
+ladder (:class:`CodecBank`) so that
 
   * the *running average* bits/element tracks a target budget (a leaky
     bucket over coded bits: if the stream has been running hot the next
@@ -14,6 +14,13 @@ codec ladder (:class:`CodecBank`) so that
     throughput falling below what the current rate needs) steps the rung
     down ahead of the bucket, so a bandwidth drop degrades quantization
     instead of stalling the pipeline.
+
+A rung is no longer just ``n_levels``: it spans ``(n_levels,
+granularity, channel_group_size, spatial_block_size)``, so the ladder can
+trade level count against tile granularity -- e.g. step from per-tensor
+N=8 to per-channel N=4 (similar rate, lower MSE on channel-biased
+features) before dropping to per-tensor N=4.  Plain ints in a ladder are
+accepted and mean per-tensor rungs, so existing configs keep working.
 
 Per-rung bits/element is learned online from the actual coded sizes
 (EWMA per rung, log2-scaled estimates for unvisited rungs), so the
@@ -27,13 +34,55 @@ import math
 
 import numpy as np
 
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Rung:
+    """One codec operating point on the rate-control ladder.
+
+    ``granularity="base"`` (what a bare int normalizes to) means "inherit
+    the CodecBank's base config" -- only ``n_levels`` is overridden, so
+    int ladders keep their pre-Rung semantics whatever granularity the
+    bank was built with.
+    """
+
+    n_levels: int
+    granularity: str = "base"
+    channel_group_size: int = 1
+    spatial_block_size: int = 0
+
+    def __str__(self) -> str:
+        if self.granularity in ("base", "tensor"):
+            return f"N{self.n_levels}"
+        tag = f"N{self.n_levels}/{self.granularity}" \
+              f"@g{self.channel_group_size}"
+        if self.spatial_block_size:
+            tag += f"s{self.spatial_block_size}"
+        return tag
+
+
+def as_rung(r) -> Rung:
+    """Normalize a ladder entry: ints are base-granularity rungs."""
+    if isinstance(r, Rung):
+        return r
+    return Rung(n_levels=int(r))
+
+
+def rung_of_codec(codec) -> Rung:
+    """The rung a calibrated codec actually operates at (for attributing
+    measured rates to the right ladder entry)."""
+    cfg = codec.config
+    return Rung(n_levels=cfg.n_levels, granularity=cfg.granularity,
+                channel_group_size=max(1, cfg.channel_group_size),
+                spatial_block_size=cfg.spatial_block_size)
+
+
 DEFAULT_LADDER = (2, 3, 4, 6, 8, 12, 16, 24, 32)
 
 
 @dataclasses.dataclass
 class RateControlConfig:
     target_bpe: float                     # budget, bits per element on the wire
-    ladder: tuple[int, ...] = DEFAULT_LADDER
+    ladder: tuple = DEFAULT_LADDER        # ints and/or Rungs
     ewma: float = 0.4                     # per-rung bpe measurement smoothing
     window_elems: int = 1 << 22           # leaky-bucket horizon (elements)
     queue_high: int = 8                   # frames queued => link pressure
@@ -45,26 +94,45 @@ class RateController:
         if cfg.target_bpe <= 0:
             raise ValueError("target_bpe must be positive")
         self.cfg = cfg
-        self.ladder = tuple(sorted(set(cfg.ladder)))
-        self._bpe = {}                    # rung -> EWMA measured bits/elem
+        self.ladder = tuple(sorted(set(as_rung(r) for r in cfg.ladder)))
+        self._bpe = {}                    # Rung -> EWMA measured bits/elem
         self._bucket_bits = 0.0           # leaky bucket: coded bits
         self._bucket_elems = 0.0
         self._queue_depth = 0
         self._throughput = None           # EWMA bytes/s of the link
-        self._last_levels = None
+        self._last_rung: Rung | None = None
         self.history: list[dict] = []
+
+    def _resolve(self, rung) -> Rung:
+        """Accept a Rung or a bare n_levels int (legacy callers).
+
+        Int resolution mirrors :meth:`CodecBank._resolve` exactly
+        (base/tensor rung first, then ladder order): a legacy
+        ``next_levels() -> bank.get(n) -> on_tensor(n)`` loop therefore
+        attributes its measurement to the same rung whose codec the bank
+        actually handed out, even on a mixed-granularity ladder.
+        """
+        if isinstance(rung, Rung):
+            return rung
+        matches = [r for r in self.ladder if r.n_levels == rung]
+        if matches:
+            plain = [r for r in matches
+                     if r.granularity in ("base", "tensor")]
+            return plain[0] if plain else matches[0]
+        return Rung(n_levels=int(rung))
 
     # -- measurements ---------------------------------------------------------
 
-    def on_tensor(self, n_levels: int, coded_bytes: int, n_elems: int,
+    def on_tensor(self, rung, coded_bytes: int, n_elems: int,
                   send_seconds: float | None = None) -> None:
         """Record one coded tensor (and optionally its send time)."""
         if n_elems <= 0:
             return
+        rung = self._resolve(rung)
         bpe = 8.0 * coded_bytes / n_elems
-        prev = self._bpe.get(n_levels)
+        prev = self._bpe.get(rung)
         a = self.cfg.ewma
-        self._bpe[n_levels] = bpe if prev is None else a * bpe + (1 - a) * prev
+        self._bpe[rung] = bpe if prev is None else a * bpe + (1 - a) * prev
         self._bucket_bits += 8.0 * coded_bytes
         self._bucket_elems += n_elems
         # leak so that only ~window_elems of history steers the bucket
@@ -77,8 +145,8 @@ class RateController:
             t = self.cfg.throughput_ewma
             self._throughput = tput if self._throughput is None \
                 else t * tput + (1 - t) * self._throughput
-        self.history.append({"n_levels": n_levels, "bpe": bpe,
-                             "cum_bpe": self.measured_bpe,
+        self.history.append({"rung": str(rung), "n_levels": rung.n_levels,
+                             "bpe": bpe, "cum_bpe": self.measured_bpe,
                              "queue_depth": self._queue_depth})
 
     def on_queue_depth(self, depth: int) -> None:
@@ -104,62 +172,113 @@ class RateController:
     def link_bytes_per_s(self) -> float | None:
         return self._throughput
 
-    def estimate_bpe(self, n_levels: int) -> float:
+    def estimate_bpe(self, rung) -> float:
         """Expected coded bits/element at a rung: measured EWMA when the
         rung has been used, else scaled from the nearest measured rung by
         the log2(N) ratio (exact for uniform indices, adequate to order
         the ladder), else the TU-coded upper bound log2(N)."""
-        if n_levels in self._bpe:
-            return self._bpe[n_levels]
+        rung = self._resolve(rung)
+        if rung in self._bpe:
+            return self._bpe[rung]
+        n_levels = rung.n_levels
         if self._bpe:
-            ref = min(self._bpe, key=lambda n: abs(math.log2(n / n_levels)))
-            return self._bpe[ref] * math.log2(n_levels) / math.log2(ref)
+            ref = min(self._bpe,
+                      key=lambda r: abs(math.log2(r.n_levels / n_levels)))
+            return self._bpe[ref] * math.log2(n_levels) \
+                / math.log2(ref.n_levels)
         return math.log2(n_levels)
 
-    def next_levels(self) -> int:
-        """Rung for the next tensor against the budget + link state."""
+    def next_rung(self) -> Rung:
+        """Rung for the next tensor against the budget + link state.
+
+        The ladder is walked in ascending *estimated-rate* order (not
+        n_levels order: a per-channel rung often codes cheaper than a
+        per-tensor rung one level count up), taking the most expensive
+        rung still under the bucket's desired rate.
+        """
         # leaky bucket: aim the next tensor at 2*target - running average,
         # so rate errors are actively paid back instead of persisting
         desired = 2 * self.cfg.target_bpe - self.measured_bpe \
             if self._bucket_elems > 0 else self.cfg.target_bpe
         desired = float(np.clip(desired, 0.25 * self.cfg.target_bpe,
                                 2.0 * self.cfg.target_bpe))
-        choice = self.ladder[0]
-        for n in self.ladder:
-            if self.estimate_bpe(n) <= desired:
-                choice = n
+        by_rate = sorted(self.ladder, key=self.estimate_bpe)
+        choice = by_rate[0]
+        for r in by_rate:
+            if self.estimate_bpe(r) <= desired:
+                choice = r
         if self._queue_depth >= self.cfg.queue_high \
-                and self._last_levels is not None:
+                and self._last_rung is not None:
             # sustained backpressure: step below the last rung regardless
-            below = [n for n in self.ladder if n < self._last_levels]
+            last = self.estimate_bpe(self._last_rung)
+            below = [r for r in by_rate if self.estimate_bpe(r) < last]
             if below:
-                choice = min(choice, below[-1])
-        self._last_levels = choice
+                cheaper = min(choice, below[-1],
+                              key=self.estimate_bpe)
+                choice = cheaper
+        self._last_rung = choice
         return choice
+
+    def next_levels(self) -> int:
+        """Legacy view of :meth:`next_rung` (the chosen level count)."""
+        return self.next_rung().n_levels
 
 
 class CodecBank:
     """Calibrated codecs at every ladder rung, sharing one sample set.
 
     Calibration is per-rung because the optimal clipping range depends on
-    N (coarser quantizers clip tighter); codecs are built lazily and
-    cached, so switching rungs mid-stream costs nothing after first use.
+    N and on the tile granularity (coarser quantizers clip tighter);
+    codecs are built lazily and cached, so switching rungs mid-stream
+    costs nothing after first use.  Tiled rungs need ``samples`` to carry
+    the channel axis (pass the calibration activations un-flattened).
     """
 
     def __init__(self, base_config, samples: np.ndarray,
-                 ladder: tuple[int, ...] = DEFAULT_LADDER) -> None:
+                 ladder: tuple = DEFAULT_LADDER) -> None:
         from ..core.codec import calibrate
         self._calibrate = calibrate
         self.base_config = base_config
         self.samples = np.asarray(samples, np.float32)
-        self.ladder = tuple(sorted(set(ladder)))
+        self.ladder = tuple(sorted(set(as_rung(r) for r in ladder)))
         self._codecs = {}
 
-    def get(self, n_levels: int):
-        if n_levels not in self.ladder:
-            raise KeyError(f"{n_levels} not in ladder {self.ladder}")
-        if n_levels not in self._codecs:
-            cfg = dataclasses.replace(self.base_config, n_levels=n_levels)
-            self._codecs[n_levels] = self._calibrate(cfg,
-                                                     samples=self.samples)
-        return self._codecs[n_levels]
+    def _resolve(self, rung) -> Rung:
+        if isinstance(rung, Rung):
+            if rung not in self.ladder:
+                raise KeyError(f"{rung} not in ladder {self.ladder}")
+            return rung
+        matches = [r for r in self.ladder if r.n_levels == rung]
+        if not matches:
+            raise KeyError(f"{rung} not in ladder {self.ladder}")
+        # legacy int lookups prefer the base-config rung over explicitly
+        # tiled rungs at the same level count
+        plain = [r for r in matches if r.granularity in ("base", "tensor")]
+        return plain[0] if plain else matches[0]
+
+    def rung_for(self, codec) -> Rung | None:
+        """The ladder rung whose cached codec *is* ``codec`` (identity),
+        else None.  Lets a caller that was handed a bank codec attribute
+        its rate measurements to the exact ladder key -- including
+        'base'-granularity rungs, which :func:`rung_of_codec` cannot name
+        (it only sees the codec's resolved config)."""
+        for r, c in self._codecs.items():
+            if c is codec:
+                return r
+        return None
+
+    def get(self, rung):
+        """Codec for a :class:`Rung` (or a bare n_levels int)."""
+        rung = self._resolve(rung)
+        if rung not in self._codecs:
+            if rung.granularity == "base":
+                cfg = dataclasses.replace(self.base_config,
+                                          n_levels=rung.n_levels)
+            else:
+                cfg = dataclasses.replace(
+                    self.base_config, n_levels=rung.n_levels,
+                    granularity=rung.granularity,
+                    channel_group_size=rung.channel_group_size,
+                    spatial_block_size=rung.spatial_block_size)
+            self._codecs[rung] = self._calibrate(cfg, samples=self.samples)
+        return self._codecs[rung]

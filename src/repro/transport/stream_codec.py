@@ -24,10 +24,16 @@ from .framing import (FT_CHUNK, FT_END, FT_FEEDBACK, FT_HEADER, Frame,
 
 # Chunk size balances pipeline granularity against per-chunk coder cost:
 # the vectorized coder's python step loop runs ~bits/lanes iterations with
-# lanes capped by payload size, so many small chunks multiply loop overhead
-# (19 x 64Ki-elem chunks cost ~7x one 1.2M-elem encode).  256Ki elements
-# keeps chunk overhead ~2x while still giving a multi-MB tensor a
-# several-stage pipeline.
+# lanes capped by payload size, so many small chunks multiply loop
+# overhead -- though the batched chunk encoder (one rANS step loop per
+# STREAM_CHUNK_BATCH chunks, see core/rans.encode_planes_batch) now
+# amortizes most of it.  256Ki elements still gives a multi-MB tensor a
+# several-stage pipeline at near-one-shot encode cost.  Tiled codecs
+# round the chunk size up to the tile run length in coded order
+# (TilePlan.align_chunk_elems), so chunk boundaries align to tiles and
+# each chunk's chunk-static entropy probabilities see tile-homogeneous
+# statistics; ChunkStreamDecoder stays bit-exact and out-of-order
+# tolerant either way (chunks address element ranges, not tiles).
 DEFAULT_CHUNK_ELEMS = 1 << 18
 
 _END_FMT = "<I"            # n_chunks sent (completeness check)

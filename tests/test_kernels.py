@@ -70,7 +70,7 @@ class TestClipQuant:
 
 
 class TestECSQAssign:
-    @pytest.mark.parametrize("n_levels", [2, 3, 4, 8, 16])
+    @pytest.mark.parametrize("n_levels", [2, 3, 4, 8, 16, 24, 48, 64])
     def test_matches_ref(self, samples, n_levels):
         q = design_ecsq(samples[:20000], n_levels, 0.05, 0.0, 9.0)
         x = jnp.asarray(samples[:4096])
@@ -91,7 +91,7 @@ class TestECSQAssign:
 
 class TestRateHist:
     @pytest.mark.parametrize("shape", SHAPES)
-    @pytest.mark.parametrize("n_levels", [2, 4, 8])
+    @pytest.mark.parametrize("n_levels", [2, 4, 8, 64])
     def test_matches_ref(self, shape, n_levels):
         rng = np.random.default_rng(7)
         idx = jnp.asarray(rng.integers(0, n_levels, size=shape).astype(np.int32))
@@ -99,6 +99,16 @@ class TestRateHist:
         rh = ref.index_histogram_ref(idx, n_levels)
         np.testing.assert_array_equal(np.asarray(kh), np.asarray(rh))
         assert int(kh.sum()) == idx.size
+
+    @pytest.mark.parametrize("n_levels", [17, 33, 64])
+    def test_past_legacy_16_cap(self, n_levels):
+        """The lifted fori_loop kernels agree with numpy above N=16."""
+        rng = np.random.default_rng(n_levels)
+        idx = rng.integers(0, n_levels, size=40_000).astype(np.int32)
+        kh = ops.index_histogram(jnp.asarray(idx), n_levels=n_levels,
+                                 interpret=True)
+        np.testing.assert_array_equal(np.asarray(kh),
+                                      np.bincount(idx, minlength=n_levels))
 
     def test_rate_estimate_matches_host(self, samples):
         idx, _ = ops.clip_quantize(jnp.asarray(samples[:32768]), cmin=0.0,

@@ -1,0 +1,369 @@
+"""TilePlan codec tests: v3 self-describing tiled streams, per-tile ECSQ,
+backend bit-exactness, streamed-vs-one-shot parity, tile-aware rate
+control, batched chunk entropy coding, and the in-graph pack kernel."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CodecConfig, TilePlan, calibrate
+from repro.core import cabac
+from repro.core.backend import JnpBackend, QuantSpec, get_backend
+from repro.core.codec import FLAG_TILE, parse_header
+from repro.core.rans import encode_planes, encode_planes_batch
+
+try:  # hypothesis is optional: only the property sweeps need it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _features(shape, axis, seed=0, constant_tiles=False):
+    """Channel-biased + spatially drifting features; optionally with the
+    leading channel held constant (degenerate tiles)."""
+    rng = np.random.default_rng(seed)
+    axis = axis % len(shape)
+    c = shape[axis]
+    rest = tuple(s for d, s in enumerate(shape) if d != axis)
+    mu = np.linspace(0.0, 8.0, c).astype(np.float32)
+    x = rng.exponential(1.0, shape).astype(np.float32)
+    x += np.moveaxis(np.broadcast_to(
+        mu[:, None], (c, x.size // c)).reshape((c,) + rest), 0, axis)
+    if constant_tiles:
+        xm = np.moveaxis(x, axis, 0)
+        xm[0] = 3.25                    # whole channel constant
+        x = np.moveaxis(xm, 0, axis)
+    return np.ascontiguousarray(x)
+
+
+def _tiled_codec(x, axis, gc, bs, n_levels=4, use_ecsq=False):
+    return calibrate(CodecConfig(n_levels=n_levels, clip_mode="minmax",
+                                 constrain_cmin_zero=False,
+                                 granularity="tile", channel_axis=axis,
+                                 channel_group_size=gc,
+                                 spatial_block_size=bs,
+                                 use_ecsq=use_ecsq),
+                     samples=x)
+
+
+GEOMETRIES = [
+    # (shape, axis, channel_group, spatial_block): non-multiples on purpose
+    ((300, 12), -1, 1, 64),
+    ((300, 12), -1, 5, 100),
+    ((7, 33, 10), 1, 4, 17),
+    ((12, 250), 0, 3, 0),           # pure channel grouping, channel-major
+    ((1, 130, 6), -1, 6, 130),      # single channel group, single block
+]
+
+
+class TestTilePlanGeometry:
+    def test_counts_and_ids(self):
+        plan = TilePlan(channel_axis=-1, channel_group_size=5,
+                        spatial_block_size=100, n_channels=12,
+                        spatial_extent=300)
+        assert (plan.n_cgroups, plan.n_sblocks, plan.n_tiles) == (3, 3, 9)
+        tid = plan.tile_ids((300, 12))
+        assert tid.shape == (300, 12)
+        assert tid.min() == 0 and tid.max() == 8
+        # element (row 299, channel 11) -> cgroup 2, sblock 2
+        assert tid[299, 11] == 8
+
+    def test_coded_order_roundtrip(self):
+        plan = TilePlan(channel_axis=1, channel_group_size=2,
+                        spatial_block_size=7, n_channels=6,
+                        spatial_extent=40)
+        x = np.arange(240).reshape(8, 6, 5)
+        back = plan.from_coded_order(plan.to_coded_order(x), x.shape)
+        np.testing.assert_array_equal(back, x)
+
+    def test_align_chunk_elems(self):
+        plan = TilePlan(channel_axis=-1, channel_group_size=1,
+                        spatial_block_size=64, n_channels=4,
+                        spatial_extent=256)
+        # M % bs == 0: align to the spatial block
+        assert plan.align_chunk_elems(100, (256, 4)) == 128
+        ragged = TilePlan(channel_axis=-1, channel_group_size=1,
+                          spatial_block_size=100, n_channels=4,
+                          spatial_extent=250)
+        # ragged rows: align to whole channel rows
+        assert ragged.align_chunk_elems(100, (250, 4)) == 250
+
+    def test_mismatched_shape_rejected(self):
+        x = _features((300, 12), -1)
+        codec = _tiled_codec(x, -1, 4, 64)
+        with pytest.raises(ValueError):
+            codec.encode(x[:200])      # different spatial extent
+        with pytest.raises(ValueError):
+            codec.encode(x[:, :8])     # different channel count
+
+
+class TestTiledRoundTrip:
+    @pytest.mark.parametrize("shape,axis,gc,bs", GEOMETRIES)
+    def test_fresh_receiver_and_streamed_decode(self, shape, axis, gc, bs):
+        x = _features(shape, axis)
+        codec = _tiled_codec(x, axis, gc, bs)
+        blob = codec.encode(x)
+        hdr = parse_header(blob)
+        assert hdr.flags & FLAG_TILE and hdr.plan is not None
+
+        receiver = calibrate(CodecConfig(n_levels=2, clip_mode="manual"))
+        one_shot = receiver.decode(blob)
+        fake = np.asarray(codec.apply(jnp.asarray(x)))
+        assert one_shot.shape == x.shape
+        np.testing.assert_allclose(one_shot, fake, atol=1e-5)
+
+        streamed = receiver.decode_stream(
+            list(codec.encode_stream(x, chunk_elems=97)))
+        np.testing.assert_array_equal(streamed, one_shot)
+
+    @pytest.mark.parametrize("shape,axis,gc,bs", GEOMETRIES[:3])
+    def test_out_of_order_chunks(self, shape, axis, gc, bs):
+        from repro.core import ChunkStreamDecoder
+        x = _features(shape, axis, seed=3)
+        codec = _tiled_codec(x, axis, gc, bs)
+        payloads = list(codec.encode_stream(x, chunk_elems=64))
+        dec = ChunkStreamDecoder(payloads[0])
+        for p in reversed(payloads[1:]):
+            dec.add_chunk(p)
+        np.testing.assert_array_equal(dec.finish(),
+                                      codec.decode(codec.encode(x)))
+
+    def test_degenerate_constant_tiles(self):
+        x = _features((120, 8), -1, constant_tiles=True)
+        codec = _tiled_codec(x, -1, 1, 30)
+        recon = codec.decode(codec.encode(x))
+        # the constant channel reconstructs to (nearly) its constant value
+        np.testing.assert_allclose(recon[:, 0], x[:, 0], atol=1e-5)
+        streamed = codec.decode_stream(
+            list(codec.encode_stream(x, chunk_elems=50)))
+        np.testing.assert_array_equal(streamed, recon)
+
+    def test_per_tile_ecsq_roundtrip(self):
+        x = _features((400, 6), -1, seed=5)
+        codec = _tiled_codec(x, -1, 2, 128, use_ecsq=True)
+        assert codec.tile_ecsq is not None
+        assert codec.tile_ecsq.levels.shape == (3 * 4, 4)
+        receiver = calibrate(CodecConfig(n_levels=2, clip_mode="manual"))
+        blob = codec.encode(x)
+        decoded = receiver.decode(blob)
+        fake = np.asarray(codec.apply(jnp.asarray(x)))
+        np.testing.assert_allclose(decoded, fake, atol=1e-5)
+        streamed = receiver.decode_stream(
+            list(codec.encode_stream(x, chunk_elems=77)))
+        np.testing.assert_array_equal(streamed, decoded)
+
+    def test_tiled_beats_tensor_on_biased_channels(self):
+        rng = np.random.default_rng(11)
+        mu = np.linspace(0.0, 10.0, 16).astype(np.float32)
+        x = (mu[None, :]
+             + rng.exponential(1.0, (4096, 16))).astype(np.float32)
+        common = dict(n_levels=4, clip_mode="minmax",
+                      constrain_cmin_zero=False)
+        tn = calibrate(CodecConfig(**common), samples=x)
+        tl = calibrate(CodecConfig(granularity="tile", channel_axis=-1,
+                                   channel_group_size=2,
+                                   spatial_block_size=512, **common),
+                       samples=x)
+        xj = jnp.asarray(x)
+        mse_tl = float(np.mean((np.asarray(tl.apply(xj)) - x) ** 2))
+        mse_tn = float(np.mean((np.asarray(tn.apply(xj)) - x) ** 2))
+        assert mse_tl < mse_tn
+        assert tl.compressed_bits_per_element(x) <= \
+            tn.compressed_bits_per_element(x)
+
+
+class TestBackendBitExact:
+    @pytest.mark.parametrize("shape,axis,gc,bs", GEOMETRIES)
+    def test_jnp_vs_kernel_interpret(self, shape, axis, gc, bs):
+        x = _features(shape, axis, seed=7)
+        codec = _tiled_codec(x, axis, gc, bs)
+        spec = codec.spec()
+        xj = jnp.asarray(x)
+        ji, jd = JnpBackend().quantize_dequantize(xj, spec)
+        ki, kd = get_backend("kernel_interpret").quantize_dequantize(xj, spec)
+        np.testing.assert_array_equal(np.asarray(ki), np.asarray(ji))
+        np.testing.assert_allclose(np.asarray(kd), np.asarray(jd),
+                                   atol=1e-6)
+
+    if HAVE_HYPOTHESIS:
+        @settings(max_examples=25, deadline=None)
+        @given(st.integers(2, 20), st.integers(2, 40), st.integers(1, 6),
+               st.integers(0, 50), st.integers(2, 8), st.integers(0, 2 ** 31))
+        def test_random_geometry_property(self, c, m, gc, bs, n_levels,
+                                          seed):
+            rng = np.random.default_rng(seed)
+            x = rng.normal(2.0, 3.0, size=(m, c)).astype(np.float32)
+            n_sb = 1 if bs == 0 else -(-m // bs)
+            lo = rng.uniform(-2, 0, (-(-c // gc), n_sb)).astype(np.float32)
+            hi = lo + rng.uniform(0.0, 4.0, lo.shape).astype(np.float32)
+            plan = TilePlan(channel_axis=-1, channel_group_size=gc,
+                            spatial_block_size=bs, n_channels=c,
+                            spatial_extent=m if bs else None)
+            spec = QuantSpec(lo, hi, n_levels, -1, None, plan)
+            xj = jnp.asarray(x)
+            ji = JnpBackend().quantize(xj, spec)
+            ki = get_backend("kernel_interpret").quantize(xj, spec)
+            np.testing.assert_array_equal(np.asarray(ki), np.asarray(ji))
+
+
+class TestPackKernel:
+    @pytest.mark.parametrize("n_levels", [2, 4, 16])
+    @pytest.mark.parametrize("n", [1, 7, 255, 1001, 5000])
+    def test_kernel_matches_host_layout(self, n_levels, n):
+        from repro.kernels import ops
+        rng = np.random.default_rng(n)
+        idx = jnp.asarray(rng.integers(0, n_levels, n).astype(np.int32))
+        codec = calibrate(CodecConfig(n_levels=n_levels, clip_mode="manual",
+                                      manual_cmax=1.0))
+        host = JnpBackend().pack_indices(idx, codec.bits_per_index())
+        dev = ops.pack_indices(idx, bits=codec.bits_per_index(),
+                               interpret=True)
+        np.testing.assert_array_equal(np.asarray(dev), np.asarray(host))
+        back = codec.unpack(jnp.asarray(np.asarray(dev)), n)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(idx))
+
+    def test_codec_pack_backend_dispatch(self):
+        idx = jnp.asarray(np.arange(100, dtype=np.int32) % 4)
+        jc = calibrate(CodecConfig(n_levels=4, clip_mode="manual",
+                                   manual_cmax=1.0, backend="jnp"))
+        kc = calibrate(CodecConfig(n_levels=4, clip_mode="manual",
+                                   manual_cmax=1.0,
+                                   backend="kernel_interpret"))
+        np.testing.assert_array_equal(np.asarray(jc.pack(idx)),
+                                      np.asarray(kc.pack(idx)))
+
+
+class TestBatchedChunkCoding:
+    def test_batch_byte_identical_to_serial(self):
+        rng = np.random.default_rng(1)
+        segs = [rng.choice(4, size=n, p=[.5, .25, .15, .1]).astype(np.int32)
+                for n in (70_000, 70_000, 70_000, 200, 0, 40_000)]
+        one_by_one = [cabac.encode_indices(s, 4, mode="auto") for s in segs]
+        batched = cabac.encode_indices_batch(segs, 4, mode="auto")
+        assert one_by_one == batched
+        for s, blob in zip(segs, batched):
+            np.testing.assert_array_equal(
+                cabac.decode_indices(blob, s.size, 4), s)
+
+    def test_planes_batch_identical(self):
+        rng = np.random.default_rng(2)
+        streams = [[rng.integers(0, 2, n).astype(np.uint8)
+                    for n in (5000, 3000)] for _ in range(5)]
+        ref = [encode_planes(p) for p in streams]
+        assert encode_planes_batch(streams) == ref
+
+    def test_stream_chunk_batching_matches_unbatched(self):
+        x = _features((600, 8), -1, seed=9)
+        codec = _tiled_codec(x, -1, 2, 100)
+        batched = list(codec.encode_stream(x, chunk_elems=50))
+        serial = list(codec.encode_stream(x, chunk_elems=50,
+                                          chunk_batch=1))
+        assert batched == serial
+
+
+class TestTileAwareRateControl:
+    def test_mixed_granularity_ladder(self):
+        from repro.transport import (CodecBank, RateControlConfig,
+                                     RateController, Rung)
+        x = _features((1024, 16), -1, seed=13)
+        ladder = (Rung(2, "tensor"), Rung(4, "tensor"),
+                  Rung(4, "channel"), Rung(8, "tensor"),
+                  Rung(8, "tile", 4, 256))
+        bank = CodecBank(CodecConfig(n_levels=8, clip_mode="minmax",
+                                     constrain_cmin_zero=False,
+                                     channel_axis=-1), x, ladder=ladder)
+        for rung in ladder:
+            codec = bank.get(rung)
+            assert codec.config.n_levels == rung.n_levels
+            assert codec.config.granularity == rung.granularity
+            blob = codec.encode(x)
+            np.testing.assert_allclose(
+                codec.decode(blob, shape=x.shape),
+                np.asarray(codec.apply(jnp.asarray(x))), atol=1e-5)
+        rc = RateController(RateControlConfig(target_bpe=2.0,
+                                              ladder=ladder))
+        bits = elems = 0
+        rng = np.random.default_rng(0)
+        for _ in range(25):
+            xt = x + rng.normal(0, 0.01, x.shape).astype(np.float32)
+            rung = rc.next_rung()
+            blob = bank.get(rung).encode(xt)
+            rc.on_tensor(rung, len(blob), xt.size)
+            bits += 8 * len(blob)
+            elems += xt.size
+        assert abs(bits / elems - 2.0) <= 0.4
+        # granularity rungs actually got exercised by the controller
+        assert len({h["rung"] for h in rc.history}) >= 2
+
+    def test_per_tensor_ecsq_with_plan_rejected(self):
+        """plan + per-tensor ECSQQuantizer would be silently ignored;
+        backends reject the combination instead."""
+        from repro.core.ecsq import design_ecsq
+        rng = np.random.default_rng(1)
+        xs = rng.exponential(1.0, 5000).astype(np.float32)
+        q = design_ecsq(xs, 4, 0.05, 0.0, 6.0)
+        plan = TilePlan(channel_axis=-1, channel_group_size=1,
+                        spatial_block_size=0, n_channels=4)
+        spec = QuantSpec(np.zeros((4, 1), np.float32),
+                         np.ones((4, 1), np.float32), 4, -1, q, plan)
+        with pytest.raises(ValueError):
+            JnpBackend().quantize(jnp.zeros((8, 4)), spec)
+
+    def test_legacy_int_flow_consistent_on_mixed_ladder(self):
+        """next_levels() -> bank.get(n) -> on_tensor(n) attributes the
+        measurement to the rung whose codec the bank handed out."""
+        from repro.transport import (CodecBank, RateControlConfig,
+                                     RateController, Rung)
+        x = _features((512, 8), -1)
+        ladder = (Rung(4, "channel"), Rung(4, "tensor"))
+        bank = CodecBank(CodecConfig(n_levels=8, clip_mode="minmax",
+                                     constrain_cmin_zero=False,
+                                     channel_axis=-1), x, ladder=ladder)
+        rc = RateController(RateControlConfig(target_bpe=2.0,
+                                              ladder=ladder))
+        n = rc.next_levels()
+        codec = bank.get(n)
+        rc.on_tensor(n, 1000, 4000)
+        recorded = rc.history[-1]["rung"]
+        assert recorded == str(Rung(4, "tensor"))
+        assert codec.config.granularity == "tensor"
+
+    def test_int_lookup_prefers_plain_rung_on_mixed_ladder(self):
+        from repro.transport import CodecBank, Rung
+        x = _features((256, 8), -1)
+        ladder = (Rung(4, "channel"), Rung(4, "tensor"))
+        bank = CodecBank(CodecConfig(n_levels=8, clip_mode="minmax",
+                                     constrain_cmin_zero=False,
+                                     channel_axis=-1), x, ladder=ladder)
+        assert bank.get(4).config.granularity == "tensor"
+
+    def test_int_ladder_inherits_base_granularity(self):
+        """Legacy int ladders keep pre-Rung semantics: only n_levels is
+        overridden, the bank's base granularity is preserved."""
+        from repro.transport import CodecBank, rung_of_codec
+        x = _features((256, 8), -1)
+        bank = CodecBank(CodecConfig(n_levels=8, clip_mode="minmax",
+                                     constrain_cmin_zero=False,
+                                     granularity="channel",
+                                     channel_axis=-1), x, ladder=(2, 4))
+        codec = bank.get(4)
+        assert codec.config.granularity == "channel"
+        assert codec.config.n_levels == 4
+        assert rung_of_codec(codec).granularity == "channel"
+
+    def test_int_ladder_still_works(self):
+        from repro.transport import (CodecBank, RateControlConfig,
+                                     RateController)
+        x = _features((256, 8), -1).ravel()
+        bank = CodecBank(CodecConfig(n_levels=8, clip_mode="minmax"),
+                         x, ladder=(2, 4))
+        assert bank.get(4) is bank.get(4)
+        rc = RateController(RateControlConfig(target_bpe=1.5,
+                                              ladder=(2, 4)))
+        n = rc.next_levels()
+        assert n in (2, 4)
+        rc.on_tensor(n, 1000, 4000)
+        assert rc.next_levels() in (2, 4)
