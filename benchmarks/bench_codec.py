@@ -1,23 +1,34 @@
-"""Host-codec throughput micro-benchmark (the ISSUE-1/ISSUE-3 gates).
+"""Host-codec throughput micro-benchmark (the ISSUE-1/3/4 gates).
 
 Measures, on a 1M-element float32 activation tensor drawn from the
 ResNet-50 layer-21 model:
 
   * seed bit-serial CABAC encode/decode (``encode_indices_serial``),
-  * vectorized rANS encode/decode (``mode="rans"``),
-  * the resulting speedups (acceptance: encode >= 20x),
-  * compressed bits/element of both coders (rate parity check),
+  * vectorized rANS entropy encode/decode (``mode="rans"``) and the
+    resulting speedups + Melem/s (acceptance: encode >= 20 Melem/s and
+    >= 20x serial on both encode and decode),
+  * the *fused* end-to-end encode path (``codec.encode`` -- one fused
+    quantize pass feeding the entropy stage) vs the unfused reference
+    path, asserted byte-identical,
+  * a fused-vs-unfused kernel micro-bench (interpret mode): the encode
+    megakernel's one pass against separate clip+quant / pack / histogram
+    dispatches, with indices asserted bit-identical,
+  * compressed bits/element of both coders (the measured rate cost of
+    the speed-tuned lane count),
   * per-channel vs per-tensor bits/element at equal N on channel-biased
     benchmark activations (acceptance: channel <= tensor),
   * the tiled-RD sweep: per-tensor vs TilePlan (channel-group x
     spatial-block, v3 streams) measured bits/element *and* MSE at equal N
     (acceptance: tiled MSE below per-tensor at equal-or-lower measured
     bpe for >= 2 level counts),
-  * chunked stream encode with per-chunk dispatch vs the batched rANS
-    chunk loop (``encode_planes_batch``).
+  * chunked stream encode *and decode* with per-chunk dispatch vs the
+    batched rANS loops (``encode_planes_batch`` / ``decode_indices_batch``).
 
-Writes ``BENCH_codec.json`` next to the repo root and prints the CSV rows
-used by ``benchmarks/run.py``.
+Timing takes the best of ``_REPS`` runs (standard micro-bench practice;
+the committed numbers must not depend on scheduler noise).  Writes
+``BENCH_codec.json`` next to the repo root and prints the CSV rows used
+by ``benchmarks/run.py``; ``benchmarks/check_perf_regression.py``
+compares the JSON against the committed baseline in CI.
 
     PYTHONPATH=src python -m benchmarks.bench_codec [--quick]
 """
@@ -36,6 +47,18 @@ from repro.core import cabac
 from repro.core.distributions import resnet50_layer21_model
 from repro.core.rate_model import estimated_bits_np
 
+_REPS = 3
+
+
+def _best(fn, reps: int = _REPS) -> float:
+    """Best-of-``reps`` wall time of ``fn`` (first call included)."""
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
 
 def _biased_channel_features(n_rows: int = 16384, n_channels: int = 64,
                              seed: int = 1) -> np.ndarray:
@@ -47,6 +70,44 @@ def _biased_channel_features(n_rows: int = 16384, n_channels: int = 64,
             + rng.exponential(1.0, (n_rows, n_channels))).astype(np.float32)
 
 
+def _bench_fused_kernel_micro() -> dict:
+    """Megakernel (one pass) vs separate clip+quant / pack / histogram
+    dispatches, in interpret mode on a small tensor; asserts the fused
+    coded indices match the unfused kernel path bit-exactly."""
+    import jax.numpy as jnp
+    from repro.core.backend import get_backend, QuantSpec
+
+    kb = get_backend("kernel_interpret")
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(2, 3, (1 << 16,)).astype(np.float32))
+    spec = QuantSpec(0.0, 9.0, 4)
+
+    def fused():
+        coded, hists = kb.encode_fused(x, spec, 2, want_hist=True)
+        return coded, hists
+
+    def unfused():
+        idx = kb.quantize(x, spec)
+        packed = np.asarray(kb.pack_indices(idx, 2))
+        hist = np.asarray(kb.histogram(idx, 4))
+        return np.asarray(idx), packed, hist
+
+    t_fused = _best(lambda: fused())
+    t_unfused = _best(lambda: unfused())
+    coded, hists = fused()
+    idx, _, hist = unfused()
+    if not np.array_equal(coded, idx.ravel()):
+        raise RuntimeError("fused megakernel indices != unfused kernel path")
+    if not np.array_equal(hists.ravel(), hist):
+        raise RuntimeError("fused megakernel histogram != histogram kernel")
+    return {
+        "kernel_fused_s": t_fused,
+        "kernel_unfused_s": t_unfused,
+        "kernel_fused_vs_unfused": t_unfused / t_fused,
+        "kernel_fused_identical": True,
+    }
+
+
 def bench_codec(quick: bool = False) -> list[str]:
     n = 1 << 18 if quick else 1_000_000
     m = resnet50_layer21_model()
@@ -55,21 +116,31 @@ def bench_codec(quick: bool = False) -> list[str]:
                       samples=feats[:100_000])
     idx = np.asarray(codec.quantize(feats))
 
-    t0 = time.perf_counter()
+    t_enc_serial = _best(
+        lambda: cabac.encode_indices_serial(idx, 4), reps=1)
     blob_serial = cabac.encode_indices_serial(idx, 4)
-    t_enc_serial = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    back = cabac.decode_indices_serial(blob_serial, idx.size, 4)
-    t_dec_serial = time.perf_counter() - t0
-    assert (back == idx).all()
+    t_dec_serial = _best(
+        lambda: cabac.decode_indices_serial(blob_serial, idx.size, 4),
+        reps=1)
+    assert (cabac.decode_indices_serial(blob_serial, idx.size, 4)
+            == idx).all()
 
-    t0 = time.perf_counter()
+    t_enc_rans = _best(lambda: cabac.encode_indices(idx, 4, mode="rans"))
     blob_rans = cabac.encode_indices(idx, 4, mode="rans")
-    t_enc_rans = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    back = cabac.decode_indices(blob_rans, idx.size, 4)
-    t_dec_rans = time.perf_counter() - t0
-    assert (back == idx).all()
+    t_dec_rans = _best(
+        lambda: cabac.decode_indices(blob_rans, idx.size, 4))
+    assert (cabac.decode_indices(blob_rans, idx.size, 4) == idx).all()
+
+    # fused end-to-end encode (x -> wire bytes, one fused quantize pass)
+    # vs the unfused reference path -- byte-identical by construction
+    t_enc_fused = _best(lambda: codec.encode(feats))
+    t_enc_unfused = _best(lambda: codec.encode(feats, fused=False))
+    blob_fused = codec.encode(feats)
+    fused_identical = blob_fused == codec.encode(feats, fused=False)
+    if not fused_identical:
+        raise RuntimeError("fused encode is not byte-identical to the "
+                           "unfused reference path")
+    t_dec_e2e = _best(lambda: codec.decode(blob_fused, shape=feats.shape))
 
     # thread-sharded rANS (REPRO_RANS_THREADS): independent element-range
     # shards coded on a pool.  Reported honestly: on GIL-bound numpy builds
@@ -78,22 +149,38 @@ def bench_codec(quick: bool = False) -> list[str]:
     os.environ["REPRO_RANS_THREADS"] = str(n_threads)
     try:
         cabac.encode_indices(idx[:1000], 4, mode="rans_sharded")  # warm pool
-        t0 = time.perf_counter()
+        t_enc_shard = _best(
+            lambda: cabac.encode_indices(idx, 4, mode="rans_sharded"))
         blob_shard = cabac.encode_indices(idx, 4, mode="rans_sharded")
-        t_enc_shard = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        back = cabac.decode_indices(blob_shard, idx.size, 4)
-        t_dec_shard = time.perf_counter() - t0
-        assert (back == idx).all()
+        t_dec_shard = _best(
+            lambda: cabac.decode_indices(blob_shard, idx.size, 4))
+        assert (cabac.decode_indices(blob_shard, idx.size, 4) == idx).all()
     finally:
         del os.environ["REPRO_RANS_THREADS"]
     bpe_shard = 8 * len(blob_shard) / idx.size
+
+    # process-sharded rANS (coder id 3): real cores, opt-in; the fork +
+    # pickle cost only pays off for multi-MB payloads
+    n_procs = min(2, os.cpu_count() or 1)
+    os.environ["REPRO_RANS_PROCS"] = str(n_procs)
+    try:
+        cabac.encode_indices(idx[:1000], 4, mode="rans_proc")  # warm pool
+        t_enc_proc = _best(
+            lambda: cabac.encode_indices(idx, 4, mode="rans_proc"))
+        blob_proc = cabac.encode_indices(idx, 4, mode="rans_proc")
+        t_dec_proc = _best(
+            lambda: cabac.decode_indices(blob_proc, idx.size, 4))
+        assert (cabac.decode_indices(blob_proc, idx.size, 4) == idx).all()
+    finally:
+        del os.environ["REPRO_RANS_PROCS"]
 
     enc_speedup = t_enc_serial / t_enc_rans
     dec_speedup = t_dec_serial / t_dec_rans
     bpe_serial = 8 * len(blob_serial) / idx.size
     bpe_rans = 8 * len(blob_rans) / idx.size
     bpe_entropy = estimated_bits_np(idx, 4) / idx.size
+
+    micro = _bench_fused_kernel_micro()
 
     # per-channel vs per-tensor rate at equal N on biased-channel features
     xc = _biased_channel_features()
@@ -134,24 +221,34 @@ def bench_codec(quick: bool = False) -> list[str]:
                   if v["tile_bpe"] <= v["tensor_bpe"]
                   and v["tile_mse"] < v["tensor_mse"])
 
-    # chunked stream encode: per-chunk dispatch vs batched rANS chunk loop
+    # chunked stream encode + decode: per-chunk dispatch vs the batched
+    # rANS loops on both sides
     stream_codec = calibrate(CodecConfig(n_levels=4, clip_mode="model"),
                              samples=feats[:100_000])
     # 2^16-element chunks keep every chunk above the serial-coder cutoff
-    # (so the batched rANS loop is what gets measured) in --quick too
+    # (so the batched rANS loops are what gets measured) in --quick too
     chunk = 1 << 16
-    for _ in range(2):  # warm + measure
-        t0 = time.perf_counter()
-        n_payloads = sum(1 for _ in stream_codec.encode_stream(
-            feats, chunk_elems=chunk, chunk_batch=1))
-        t_stream_serial = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        n_batched = sum(1 for _ in stream_codec.encode_stream(
-            feats, chunk_elems=chunk))
-        t_stream_batch = time.perf_counter() - t0
-        if n_batched != n_payloads:
-            raise RuntimeError("batched stream produced a different "
-                               "payload count")
+    n_payloads = sum(1 for _ in stream_codec.encode_stream(
+        feats, chunk_elems=chunk))
+    t_stream_serial = _best(lambda: sum(1 for _ in stream_codec.encode_stream(
+        feats, chunk_elems=chunk, chunk_batch=1)))
+    t_stream_batch = _best(lambda: sum(1 for _ in stream_codec.encode_stream(
+        feats, chunk_elems=chunk)))
+    payloads = list(stream_codec.encode_stream(feats, chunk_elems=chunk))
+
+    from repro.core import ChunkStreamDecoder
+
+    def decode_stream_with(batch: int) -> np.ndarray:
+        dec = ChunkStreamDecoder(payloads[0], chunk_batch=batch)
+        for p in payloads[1:]:
+            dec.add_chunk(p)
+        return dec.finish()
+
+    t_sdec_perchunk = _best(lambda: decode_stream_with(1))
+    t_sdec_batch = _best(lambda: decode_stream_with(
+        len(payloads)))  # fully batched: one loop per TU round
+    np.testing.assert_array_equal(decode_stream_with(1),
+                                  decode_stream_with(len(payloads)))
 
     result = {
         "n_elements": int(idx.size),
@@ -159,20 +256,32 @@ def bench_codec(quick: bool = False) -> list[str]:
         "decode_serial_s": t_dec_serial,
         "encode_rans_s": t_enc_rans,
         "decode_rans_s": t_dec_rans,
+        "encode_fused_s": t_enc_fused,
+        "encode_unfused_s": t_enc_unfused,
+        "decode_e2e_s": t_dec_e2e,
+        "fused_identical": fused_identical,
         "rans_shard_threads": n_threads,
         "encode_rans_sharded_s": t_enc_shard,
         "decode_rans_sharded_s": t_dec_shard,
         "bits_per_elem_rans_sharded": bpe_shard,
+        "rans_shard_procs": n_procs,
+        "encode_rans_proc_s": t_enc_proc,
+        "decode_rans_proc_s": t_dec_proc,
         "encode_speedup": enc_speedup,
         "decode_speedup": dec_speedup,
+        "encode_speedup_ge_20x": enc_speedup >= 20.0,
+        "decode_speedup_ge_20x": dec_speedup >= 20.0,
         "encode_Melem_per_s": idx.size / t_enc_rans / 1e6,
+        "decode_Melem_per_s": idx.size / t_dec_rans / 1e6,
+        "fused_encode_Melem_per_s": feats.size / t_enc_fused / 1e6,
+        "e2e_decode_Melem_per_s": feats.size / t_dec_e2e / 1e6,
         "bits_per_elem_serial": bpe_serial,
         "bits_per_elem_rans": bpe_rans,
         "bits_per_elem_entropy_bound": bpe_entropy,
+        **micro,
         "granularity_bits_per_elem": grain_bpe,
         "channel_le_tensor": all(v["channel"] <= v["tensor"]
                                  for v in grain_bpe.values()),
-        "encode_speedup_ge_20x": enc_speedup >= 20.0,
         "tiled_rd": tiled_rd,
         "tiled_rd_wins": rd_wins,
         "tiled_beats_tensor_ge_2_levels": rd_wins >= 2,
@@ -180,6 +289,9 @@ def bench_codec(quick: bool = False) -> list[str]:
         "stream_encode_perchunk_s": t_stream_serial,
         "stream_encode_batched_s": t_stream_batch,
         "stream_batch_speedup": t_stream_serial / t_stream_batch,
+        "stream_decode_perchunk_s": t_sdec_perchunk,
+        "stream_decode_batched_s": t_sdec_batch,
+        "stream_decode_batch_speedup": t_sdec_perchunk / t_sdec_batch,
     }
     with open("BENCH_codec.json", "w") as f:
         json.dump(result, f, indent=2)
@@ -191,10 +303,17 @@ def bench_codec(quick: bool = False) -> list[str]:
         f"Melem_s={idx.size/t_enc_rans/1e6:.1f},bpe={bpe_rans:.3f},"
         f"speedup={enc_speedup:.1f}x",
         f"codec_decode_rans,{t_dec_rans*1e6:.0f},"
-        f"speedup={dec_speedup:.1f}x",
+        f"Melem_s={idx.size/t_dec_rans/1e6:.1f},speedup={dec_speedup:.1f}x",
+        f"codec_encode_fused_e2e,{t_enc_fused*1e6:.0f},"
+        f"Melem_s={feats.size/t_enc_fused/1e6:.1f},"
+        f"vs_unfused={t_enc_unfused/t_enc_fused:.2f}x,identical=True",
+        f"codec_kernel_fused_micro,{micro['kernel_fused_s']*1e6:.0f},"
+        f"vs_separate={micro['kernel_fused_vs_unfused']:.2f}x",
         f"codec_encode_rans_sharded,{t_enc_shard*1e6:.0f},"
         f"threads={n_threads},vs_rans={t_enc_rans/t_enc_shard:.2f}x,"
         f"bpe={bpe_shard:.3f}",
+        f"codec_encode_rans_proc,{t_enc_proc*1e6:.0f},"
+        f"procs={n_procs},vs_rans={t_enc_rans/t_enc_proc:.2f}x",
     ]
     for n_levels, v in grain_bpe.items():
         rows.append(f"codec_granularity_N{n_levels},0,"
@@ -209,6 +328,9 @@ def bench_codec(quick: bool = False) -> list[str]:
     rows.append(f"codec_stream_encode_batched,{t_stream_batch*1e6:.0f},"
                 f"chunks={n_payloads - 1},"
                 f"vs_perchunk={t_stream_serial/t_stream_batch:.2f}x")
+    rows.append(f"codec_stream_decode_batched,{t_sdec_batch*1e6:.0f},"
+                f"chunks={n_payloads - 1},"
+                f"vs_perchunk={t_sdec_perchunk/t_sdec_batch:.2f}x")
     return rows
 
 

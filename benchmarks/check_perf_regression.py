@@ -1,0 +1,104 @@
+"""Perf-regression gate over ``BENCH_codec.json`` (CI).
+
+Compares a freshly measured benchmark JSON against the committed
+baseline (``benchmarks/BENCH_codec.baseline.json``) and fails when the
+codec hot path regressed:
+
+  * hardware-normalized ratios (``encode_speedup``, ``decode_speedup``)
+    may not drop more than ``--tolerance`` (default 20%) -- these divide
+    out the runner's absolute speed, so they gate real code regressions;
+  * absolute throughputs (``encode_Melem_per_s``, ``decode_Melem_per_s``,
+    ``fused_encode_Melem_per_s``) and the small, chunk-count-noisy
+    stream batch ratios may not drop more than ``--abs-tolerance``
+    (default 50%; CI runner hardware varies run to run, so this bucket
+    only catches catastrophic slowdowns);
+  * boolean gates (``encode_speedup_ge_20x``, ``decode_speedup_ge_20x``,
+    ``fused_identical``, ``channel_le_tensor``,
+    ``tiled_beats_tensor_ge_2_levels``) must hold outright.
+
+Baselines measured at a different ``n_elements`` (e.g. a --quick run
+against a full-run baseline) only check the ratio and boolean gates.
+
+    python -m benchmarks.check_perf_regression BENCH_codec.json \
+        [--baseline benchmarks/BENCH_codec.baseline.json] \
+        [--tolerance 0.2] [--abs-tolerance 0.5]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+RATIO_KEYS = ("encode_speedup", "decode_speedup")
+# stream batch ratios are small (1.1-1.6x) and chunk-count noisy, so they
+# sit in the loose bucket with the absolute throughputs
+ABS_KEYS = ("encode_Melem_per_s", "decode_Melem_per_s",
+            "fused_encode_Melem_per_s", "stream_batch_speedup",
+            "stream_decode_batch_speedup")
+BOOL_KEYS = ("encode_speedup_ge_20x", "decode_speedup_ge_20x",
+             "fused_identical", "channel_le_tensor",
+             "tiled_beats_tensor_ge_2_levels")
+
+
+def check(current: dict, baseline: dict, tolerance: float,
+          abs_tolerance: float) -> list[str]:
+    failures = []
+    same_size = current.get("n_elements") == baseline.get("n_elements")
+    for key in BOOL_KEYS:
+        if key not in current:
+            failures.append(f"{key} missing from current benchmark")
+        elif not current[key]:
+            failures.append(f"{key} is {current[key]} (must hold)")
+    checks = list(RATIO_KEYS) + (list(ABS_KEYS) if same_size else [])
+    if not same_size:
+        print(f"note: n_elements {current.get('n_elements')} != baseline "
+              f"{baseline.get('n_elements')}; absolute throughput keys "
+              "skipped")
+    for key in checks:
+        tol = tolerance if key in RATIO_KEYS else abs_tolerance
+        base = baseline.get(key)
+        cur = current.get(key)
+        if base is None:
+            print(f"note: {key} missing from baseline, skipped")
+            continue
+        if cur is None:
+            failures.append(f"{key} missing from current benchmark")
+            continue
+        floor = base * (1.0 - tol)
+        status = "ok" if cur >= floor else "FAIL"
+        print(f"{key}: {cur:.2f} vs baseline {base:.2f} "
+              f"(floor {floor:.2f}) {status}")
+        if cur < floor:
+            failures.append(
+                f"{key} dropped {100 * (1 - cur / base):.0f}% "
+                f"({cur:.2f} < floor {floor:.2f})")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="fresh BENCH_codec.json to check")
+    ap.add_argument("--baseline",
+                    default="benchmarks/BENCH_codec.baseline.json")
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="max fractional drop for ratio metrics")
+    ap.add_argument("--abs-tolerance", type=float, default=0.5,
+                    help="max fractional drop for absolute Melem/s")
+    args = ap.parse_args()
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = check(current, baseline, args.tolerance, args.abs_tolerance)
+    if failures:
+        print("\nPERF REGRESSION:", file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    print("\nperf gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,13 +7,24 @@ above it: split runtime, serving engine, examples) now routes through a
 backend object so the hot path picks the fused Pallas kernels on TPU and
 the plain-jnp reference everywhere else, from a single code path.
 
-Backends implement five primitives over a :class:`QuantSpec`:
+Backends implement seven primitives over a :class:`QuantSpec`:
 
     quantize(x, spec)             -> int32 indices
     dequantize(idx, spec, dtype)  -> reconstructed values
     quantize_dequantize(x, spec)  -> (indices, reconstruction)  [fused]
     histogram(idx, n_levels)      -> (n_levels,) int32 counts
+    tile_histogram(idx, spec)     -> (n_cgroups, n_sblocks, N) counts
     pack_indices(idx, bits)       -> uint8 wire bytes (in-graph pack)
+    encode_fused(x, spec, bits)   -> (coded-order indices, per-tile hists)
+
+``encode_fused`` is the host encode path's single-pass contract: on the
+kernel backend one fused megakernel pass (clip -> quantize -> bit-pack ->
+per-tile histogram) produces wire-width packed bytes plus tile index
+counts, so exactly one device->host transfer feeds the entropy stage --
+no int32 index tensor ever crosses.  The jnp backend fulfils the same
+contract with its vectorized formulas (on CPU there is no transfer to
+save).  Both return bit-identical coded-order indices, which keeps the
+entropy payload byte-identical to the unfused reference path.
 
 Selection: ``get_backend()`` picks "kernel" when JAX's default backend is
 TPU and "jnp" otherwise; override per-codec via ``CodecConfig.backend`` or
@@ -118,6 +129,31 @@ def _tile_tables(x_ndim_shape, spec: QuantSpec):
     return axis, c, m, lo[cg][:, sb], hi[cg][:, sb]
 
 
+def _coded_order(idx: np.ndarray, spec: QuantSpec) -> np.ndarray:
+    """Flat coded-order view of quantizer indices (tile-major for plans)."""
+    if spec.plan is not None:
+        return spec.plan.to_coded_order(idx)
+    return np.asarray(idx).ravel()
+
+
+def _tile_hists_np(coded: np.ndarray, spec: QuantSpec) -> np.ndarray:
+    """Host per-tile histograms from coded-order indices:
+    (n_cgroups, n_sblocks, N); (1, 1, N) for per-tensor specs."""
+    n = spec.n_levels
+    if spec.plan is None:
+        return np.bincount(coded, minlength=n).reshape(1, 1, n) \
+            .astype(np.int32)
+    plan = spec.plan
+    c = plan.n_channels
+    m = coded.size // max(c, 1)
+    arr = coded.reshape(c, m)
+    out = np.zeros((plan.n_cgroups, plan.n_sblocks, n), np.int32)
+    for t, cs, ss in plan.tile_slices(c, m):
+        out[t // plan.n_sblocks, t % plan.n_sblocks] = \
+            np.bincount(arr[cs, ss].ravel(), minlength=n)
+    return out
+
+
 class JnpBackend:
     """Pure-jnp reference path (CPU default; numerics identical to seed)."""
 
@@ -206,6 +242,28 @@ class JnpBackend:
         from .rate_model import index_histogram
         return index_histogram(idx, n_levels)
 
+    def tile_histogram(self, idx, spec: QuantSpec):
+        """(n_cgroups, n_sblocks, N) in-graph per-tile index counts."""
+        spec = _normalize(spec)
+        if spec.plan is None:
+            return self.histogram(idx, spec.n_levels).reshape(1, 1, -1)
+        plan = spec.plan
+        axis, c, m = plan.resolve(idx.shape)
+        im = jnp.moveaxis(idx, axis, 0).reshape(c, m)
+        tid = plan.tile_ids_2d(m)
+        hist = jnp.zeros((plan.n_tiles, spec.n_levels), jnp.int32) \
+            .at[tid, im].add(1)
+        return hist.reshape(plan.n_cgroups, plan.n_sblocks, spec.n_levels)
+
+    def encode_fused(self, x, spec: QuantSpec, bits: int,
+                     want_hist: bool = False):
+        """Fused-encode contract on the reference path: coded-order
+        indices plus (optionally) host per-tile histograms."""
+        spec = _normalize(spec)
+        coded = _coded_order(np.asarray(self.quantize(x, spec)), spec)
+        hists = _tile_hists_np(coded, spec) if want_hist else None
+        return coded, hists
+
     def pack_indices(self, idx, bits: int):
         """Host/jnp bit-pack (the wire layout every backend shares)."""
         per = 8 // bits if bits in (1, 2, 4) else 1
@@ -245,7 +303,23 @@ class KernelBackend:
         spec = _normalize(spec)
         if spec.plan is not None:
             if isinstance(spec.ecsq, TileECSQ):
-                return self._jnp.quantize_dequantize(x, spec)
+                if spec.n_levels > MAX_LEVELS:
+                    return self._jnp.quantize_dequantize(x, spec)
+                plan = spec.plan
+                plan.resolve(x.shape)
+                lo = jnp.asarray(spec.cmin, jnp.float32).reshape(
+                    plan.n_cgroups, plan.n_sblocks)
+                hi = jnp.asarray(spec.cmax, jnp.float32).reshape(
+                    plan.n_cgroups, plan.n_sblocks)
+                return ops.ecsq_quantize_tiled(
+                    x, lo, hi,
+                    jnp.asarray(spec.ecsq.thresholds, jnp.float32),
+                    jnp.asarray(spec.ecsq.levels, jnp.float32),
+                    n_levels=spec.n_levels,
+                    channel_axis=plan.channel_axis,
+                    channel_group_size=plan.channel_group_size,
+                    spatial_block_size=plan.spatial_block_size,
+                    interpret=self.interpret)
             plan = spec.plan
             plan.resolve(x.shape)
             lo = jnp.asarray(spec.cmin, jnp.float32).reshape(
@@ -281,6 +355,61 @@ class KernelBackend:
             return self._jnp.histogram(idx, n_levels)
         return ops.index_histogram(idx, n_levels=n_levels,
                                    interpret=self.interpret)
+
+    def tile_histogram(self, idx, spec: QuantSpec):
+        from ..kernels import ops
+        from ..kernels.rate_hist import MAX_LEVELS
+        spec = _normalize(spec)
+        if spec.plan is None:
+            return self.histogram(idx, spec.n_levels).reshape(1, 1, -1)
+        if spec.n_levels > MAX_LEVELS:
+            return self._jnp.tile_histogram(idx, spec)
+        plan = spec.plan
+        plan.resolve(idx.shape)
+        return ops.index_histogram_tiled(
+            idx, n_levels=spec.n_levels, channel_axis=plan.channel_axis,
+            channel_group_size=plan.channel_group_size,
+            n_sblocks=plan.n_sblocks,
+            spatial_block_size=plan.spatial_block_size,
+            interpret=self.interpret)
+
+    def encode_fused(self, x, spec: QuantSpec, bits: int,
+                     want_hist: bool = False):
+        """One megakernel pass -> (packed bytes + tile hists) on device;
+        the np.asarray fetches here are the path's single transfer, and
+        the host only unpacks wire-width bytes back to indices."""
+        from ..kernels import ops
+        from ..kernels.fused_clip_quant import HIST_WIDTH
+        spec = _normalize(spec)
+        if spec.ecsq is not None or spec.n_levels > HIST_WIDTH:
+            # no fused kernel for designed quantizers / wide histograms:
+            # kernel-quantize, then the host fallback of the contract
+            coded = _coded_order(np.asarray(self.quantize(x, spec)), spec)
+            return coded, (_tile_hists_np(coded, spec) if want_hist
+                           else None)
+        if spec.plan is None:
+            packed, hist, lay = ops.encode_fused(
+                x, float(spec.cmin), float(spec.cmax),
+                n_levels=spec.n_levels, bits=bits,
+                interpret=self.interpret)
+        else:
+            plan = spec.plan
+            plan.resolve(x.shape)
+            lo = np.asarray(spec.cmin, np.float32).reshape(
+                plan.n_cgroups, plan.n_sblocks)
+            hi = np.asarray(spec.cmax, np.float32).reshape(
+                plan.n_cgroups, plan.n_sblocks)
+            packed, hist, lay = ops.encode_fused(
+                x, lo, hi, n_levels=spec.n_levels, bits=bits,
+                channel_axis=plan.channel_axis,
+                channel_group_size=plan.channel_group_size,
+                spatial_block_size=plan.spatial_block_size,
+                interpret=self.interpret)
+        coded = lay.unpack_indices(ops.unpack_bytes(np.asarray(packed),
+                                                    bits))
+        hists = lay.group_hists(np.asarray(hist), spec.n_levels,
+                                HIST_WIDTH) if want_hist else None
+        return coded, hists
 
     def pack_indices(self, idx, bits: int):
         from ..kernels import ops

@@ -37,11 +37,16 @@ def index_to_context_bits(idx: np.ndarray, n_levels: int) -> list[np.ndarray]:
     element whose codeword reaches position j (i.e. idx >= j), in element
     order.  Bit value is 1 iff idx > j.
     """
-    idx = np.asarray(idx).ravel()
+    cur = np.asarray(idx).ravel()
     planes = []
     for j in range(n_levels - 1):
-        alive = idx >= j
-        planes.append((idx[alive] > j).astype(np.uint8))
+        # iteratively compact the survivors: plane j+1's alive set is
+        # exactly plane j's one-bits, so each selection runs over the
+        # shrinking alive array instead of the full tensor
+        bits = cur > j
+        planes.append(bits.view(np.uint8))
+        if j < n_levels - 2:
+            cur = cur[bits]
     return planes
 
 

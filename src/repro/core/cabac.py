@@ -145,12 +145,13 @@ class BinaryArithmeticDecoder:
 _CODER_SERIAL = 0
 _CODER_RANS = 1
 _CODER_RANS_SHARDED = 2
+_CODER_RANS_PROC = 3    # same shard layout as 2, coded on a process pool
 # Below this many TU bits the serial coder's 4-byte flush undercuts the
 # vectorized coder's per-lane state overhead, and the python loop is cheap.
 _SERIAL_CUTOFF_BITS = 1 << 16
 # Above this many TU bits "auto" shards the payload across the rANS thread
-# pool (multi-MB activation tensors); below it the per-shard state/table
-# duplication and pool dispatch are not worth it.
+# or process pool (multi-MB activation tensors); below it the per-shard
+# state/table duplication and pool dispatch are not worth it.
 _SHARD_MIN_BITS = 1 << 21
 
 
@@ -171,19 +172,26 @@ def decode_indices_serial(data: bytes, n_elems: int,
                           n_elems, n_levels)
 
 
+def _as_bool(bits: np.ndarray) -> np.ndarray:
+    return bits.view(np.bool_) if bits.dtype == np.uint8 \
+        else bits.astype(bool)
+
+
 def _decode_planes(next_plane, n_elems: int, n_levels: int) -> np.ndarray:
-    """Shared TU plane-to-index reconstruction loop."""
+    """Shared TU plane-to-index reconstruction loop.
+
+    Tracks the alive set as a compacted position array (mirroring the
+    encoder's plane compaction): each round's scatter/gather runs over
+    the shrinking survivor count, not the full tensor.
+    """
     idx = np.zeros(n_elems, dtype=np.int32)
-    alive = np.ones(n_elems, dtype=bool)
+    pos = np.arange(n_elems, dtype=np.int64)
     for j in range(n_levels - 1):
-        n_alive = int(alive.sum())
-        if n_alive == 0:
+        if pos.size == 0:
             break
-        bits = next_plane(n_alive, j)
-        cont = np.zeros(n_elems, dtype=bool)
-        cont[alive] = bits.astype(bool)
-        idx[cont] += 1
-        alive = cont
+        bits = next_plane(pos.size, j)
+        pos = pos[_as_bool(bits)]
+        idx[pos] += 1
     return idx
 
 
@@ -194,26 +202,29 @@ def _shard_bounds(n_elems: int, n_shards: int) -> list[tuple[int, int]]:
             for s in range(n_shards) if s * per < n_elems]
 
 
-def _encode_rans_sharded(idx: np.ndarray, n_levels: int,
-                         n_shards: int) -> bytes:
-    """Shard elements into independent rANS streams coded on the thread
-    pool.  Layout: id byte | <H> n_shards | n_shards x <I> byte length |
-    concatenated shard streams.  Each shard flushes its own coder state,
-    so shards decode independently (and in parallel)."""
+def _encode_shard_worker(args) -> bytes:
+    """Encode one element shard to a standalone rANS stream (module-level
+    so the process pool can pickle it)."""
+    seg, n_levels = args
     from .binarization import index_to_context_bits
-    bounds = _shard_bounds(idx.size, n_shards)
+    return rans.encode_planes(index_to_context_bits(seg, n_levels))
 
-    def enc(seg: np.ndarray) -> bytes:
-        return rans.encode_planes(index_to_context_bits(seg, n_levels))
 
-    blobs = rans.parallel_map(enc, [idx[a:b] for a, b in bounds])
+def _decode_shard_worker(args) -> np.ndarray:
+    """Decode one standalone shard stream (module-level, picklable)."""
+    blob, count, n_levels = args
+    d = rans.PlaneStreamDecoder(blob)
+    return _decode_planes(lambda n, j: d.next_plane(n), count, n_levels)
+
+
+def _shard_header(blobs: list[bytes]) -> bytes:
     head = struct.pack("<H", len(blobs))
     head += struct.pack(f"<{len(blobs)}I", *[len(b) for b in blobs])
-    return bytes([_CODER_RANS_SHARDED]) + head + b"".join(blobs)
+    return head
 
 
-def _decode_rans_sharded(body: bytes, n_elems: int,
-                         n_levels: int) -> np.ndarray:
+def _split_shards(body: bytes, n_elems: int, n_levels: int) -> list:
+    """Parse a sharded body into ``_decode_shard_worker`` jobs."""
     (n_shards,) = struct.unpack_from("<H", body)
     lens = struct.unpack_from(f"<{n_shards}I", body, 2)
     bounds = _shard_bounds(n_elems, n_shards)
@@ -222,39 +233,72 @@ def _decode_rans_sharded(body: bytes, n_elems: int,
     off = 2 + 4 * n_shards
     jobs = []
     for (a, b), ln in zip(bounds, lens):
-        jobs.append((body[off:off + ln], b - a))
+        jobs.append((body[off:off + ln], b - a, n_levels))
         off += ln
+    return jobs
 
-    def dec(job: tuple[bytes, int]) -> np.ndarray:
-        blob, count = job
-        d = rans.PlaneStreamDecoder(blob)
-        return _decode_planes(lambda n, j: d.next_plane(n), count, n_levels)
 
+def _encode_rans_sharded(idx: np.ndarray, n_levels: int, n_shards: int,
+                         coder_id: int = _CODER_RANS_SHARDED) -> bytes:
+    """Shard elements into independent rANS streams coded on the thread
+    (coder id 2) or process (coder id 3) pool.  Layout: id byte |
+    <H> n_shards | n_shards x <I> byte length | concatenated shard
+    streams.  Each shard flushes its own coder state, so shards decode
+    independently (and in parallel); both ids share one byte layout, so
+    the shard bytes are identical whichever pool coded them."""
+    bounds = _shard_bounds(idx.size, n_shards)
+    jobs = [(idx[a:b], n_levels) for a, b in bounds]
+    if coder_id == _CODER_RANS_PROC:
+        blobs = rans.proc_map(_encode_shard_worker, jobs, n_shards)
+    else:
+        blobs = rans.parallel_map(_encode_shard_worker, jobs)
+    return bytes([coder_id]) + _shard_header(blobs) + b"".join(blobs)
+
+
+def _decode_rans_sharded(body: bytes, n_elems: int, n_levels: int,
+                         use_procs: bool = False) -> np.ndarray:
+    jobs = _split_shards(body, n_elems, n_levels)
     if not jobs:
         return np.zeros(n_elems, dtype=np.int32)
-    return np.concatenate(rans.parallel_map(dec, jobs))
+    if use_procs:
+        # a proc-coded stream decodes on the pool when one is configured
+        # (and in-process otherwise: ids are wire format, not policy)
+        n = rans.proc_workers() or 1
+        return np.concatenate(rans.proc_map(_decode_shard_worker, jobs, n))
+    return np.concatenate(rans.parallel_map(_decode_shard_worker, jobs))
 
 
 def encode_indices(idx: np.ndarray, n_levels: int, mode: str = "auto") -> bytes:
     """TU-binarize + entropy-code a flat index array (plane-major order).
 
     ``mode``: "auto" picks the serial coder below the size cutoff, the
-    vectorized coder above it, and the thread-sharded vectorized coder for
-    multi-MB payloads when the pool has more than one worker;
-    "serial" / "rans" / "rans_sharded" force a coder.  The payload starts
-    with a one-byte coder id; :func:`decode_indices` dispatches on it.
+    vectorized coder above it, and -- for multi-MB payloads -- the
+    process-sharded coder when ``REPRO_RANS_PROCS`` configures workers,
+    else the thread-sharded coder when the thread pool has more than one;
+    "serial" / "rans" / "rans_sharded" / "rans_proc" force a coder.  The
+    payload starts with a one-byte coder id; :func:`decode_indices`
+    dispatches on it.
     """
     from .binarization import index_to_context_bits
     idx = np.asarray(idx).ravel()
     if mode == "auto":
-        from .binarization import total_tu_bits
-        total = total_tu_bits(idx, n_levels)
-        if total < _SERIAL_CUTOFF_BITS:
-            mode = "serial"
-        elif total >= _SHARD_MIN_BITS and rans.rans_threads() > 1:
-            mode = "rans_sharded"
-        else:
+        # every element codes at least one TU bit, so the exact bit count
+        # (a full pass over the indices) is only needed when the element
+        # count alone cannot settle the choice
+        pooled = rans.proc_workers() > 1 or rans.rans_threads() > 1
+        if idx.size >= _SERIAL_CUTOFF_BITS and not pooled:
             mode = "rans"
+        else:
+            from .binarization import total_tu_bits
+            total = total_tu_bits(idx, n_levels)
+            if total < _SERIAL_CUTOFF_BITS:
+                mode = "serial"
+            elif total >= _SHARD_MIN_BITS and rans.proc_workers() > 1:
+                mode = "rans_proc"
+            elif total >= _SHARD_MIN_BITS and rans.rans_threads() > 1:
+                mode = "rans_sharded"
+            else:
+                mode = "rans"
     if mode == "serial":
         enc = BinaryArithmeticEncoder(n_contexts=max(n_levels - 1, 1))
         for j, plane in enumerate(index_to_context_bits(idx, n_levels)):
@@ -265,6 +309,10 @@ def encode_indices(idx: np.ndarray, n_levels: int, mode: str = "auto") -> bytes:
             + rans.encode_planes(index_to_context_bits(idx, n_levels))
     if mode == "rans_sharded":
         return _encode_rans_sharded(idx, n_levels, rans.rans_threads())
+    if mode == "rans_proc":
+        return _encode_rans_sharded(idx, n_levels,
+                                    max(2, rans.proc_workers()),
+                                    coder_id=_CODER_RANS_PROC)
     raise ValueError(f"unknown coder mode {mode!r}")
 
 
@@ -288,8 +336,9 @@ def encode_indices_batch(segments: list[np.ndarray], n_levels: int,
     for i, seg in enumerate(segments):
         m = mode
         if m == "auto":
-            m = "serial" if total_tu_bits(seg, n_levels) \
-                < _SERIAL_CUTOFF_BITS else "rans"
+            m = "rans" if seg.size >= _SERIAL_CUTOFF_BITS else \
+                ("serial" if total_tu_bits(seg, n_levels)
+                 < _SERIAL_CUTOFF_BITS else "rans")
         if m == "rans":
             rans_ids.append(i)
         else:
@@ -314,4 +363,51 @@ def decode_indices(data: bytes, n_elems: int, n_levels: int) -> np.ndarray:
                               n_elems, n_levels)
     if coder == _CODER_RANS_SHARDED:
         return _decode_rans_sharded(body, n_elems, n_levels)
+    if coder == _CODER_RANS_PROC:
+        return _decode_rans_sharded(body, n_elems, n_levels, use_procs=True)
     raise ValueError(f"unknown coder id {coder}")
+
+
+def decode_indices_batch(payloads: list[bytes], counts: list[int],
+                         n_levels: int) -> list[np.ndarray]:
+    """Decode many independent payloads with shared dispatch.
+
+    Result-identical to per-payload :func:`decode_indices` calls, but all
+    payloads coded by the vectorized coder with a common lane count share
+    one batched step loop per TU plane round
+    (:class:`repro.core.rans.BatchPlaneDecoder`) -- the receive side's
+    per-chunk python dispatch collapses the same way the batched encoder
+    collapsed the send side's.  Serial and sharded payloads decode
+    individually (they are small or already parallel).
+    """
+    out: list[np.ndarray | None] = [None] * len(payloads)
+    groups: dict[int, list[int]] = {}
+    for i, data in enumerate(payloads):
+        if len(data) and data[0] == _CODER_RANS and len(data) > 1:
+            (lanes,) = struct.unpack_from("<H", data, 1)
+            if lanes:
+                groups.setdefault(lanes, []).append(i)
+                continue
+        out[i] = decode_indices(data, counts[i], n_levels)
+    for lanes, members in groups.items():
+        if len(members) == 1:
+            i = members[0]
+            out[i] = decode_indices(payloads[i], counts[i], n_levels)
+            continue
+        dec = rans.BatchPlaneDecoder([payloads[i][1:] for i in members])
+        n = [counts[i] for i in members]
+        idxs = [np.zeros(c, dtype=np.int32) for c in n]
+        poss = [np.arange(c, dtype=np.int64) for c in n]
+        for _ in range(n_levels - 1):
+            n_alive = [p.size for p in poss]
+            if not any(n_alive):
+                break
+            planes = dec.next_planes(n_alive)
+            for s, bits in enumerate(planes):
+                if n_alive[s] == 0:
+                    continue
+                poss[s] = poss[s][_as_bool(bits)]
+                idxs[s][poss[s]] += 1
+        for i, idx in zip(members, idxs):
+            out[i] = idx
+    return out

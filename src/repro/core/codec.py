@@ -48,7 +48,7 @@ from . import aciq, cabac, clipping
 from .backend import QuantSpec, get_backend, spec_from_numpy
 from .distributions import FeatureModel
 from .ecsq import ECSQQuantizer, design_ecsq
-from .rate_model import estimated_bits_from_hist
+from .rate_model import estimated_bits_from_hist, estimated_bits_from_tile_hists
 from .stats import RunningStats
 from .tiling import TileECSQ, TilePlan, plan_from_config
 
@@ -214,14 +214,20 @@ def reconstruct_indices(idx: np.ndarray, hdr: ParsedHeader, *,
 class ChunkStreamDecoder:
     """Incremental decoder for :meth:`FeatureCodec.encode_stream` payloads.
 
-    Chunks are entropy-decoded the moment they are fed (that is the
-    expensive stage, and what streaming overlaps with the transfer); the
-    final dequantize runs once in :meth:`finish`.  Chunks may arrive in
-    any order -- each payload carries its chunk id.
+    Chunks are entropy-decoded in *batches* of ``chunk_batch`` as they
+    arrive (one batched rANS step loop per batch -- the receive-side
+    mirror of the batched chunk encoder; that is the expensive stage, and
+    what streaming overlaps with the transfer); any remainder decodes in
+    :meth:`finish` together with the one-off dequantize.  Results are
+    bit-exact with per-chunk decoding (``decode_indices_batch`` is
+    result-identical to per-payload ``decode_indices``).  Chunks may
+    arrive in any order -- each payload carries its chunk id --
+    and ``chunk_batch=1`` restores strict decode-on-arrival.
     """
 
     def __init__(self, header_payload: bytes, *, backend=None,
-                 ecsq: ECSQQuantizer | None = None) -> None:
+                 ecsq: ECSQQuantizer | None = None,
+                 chunk_batch: int = STREAM_CHUNK_BATCH) -> None:
         self.chunk_elems, self.n_chunks, ndim = struct.unpack_from(
             _STREAM_META_FMT, header_payload)
         meta = struct.calcsize(_STREAM_META_FMT)
@@ -235,19 +241,44 @@ class ChunkStreamDecoder:
         self._ecsq = ecsq
         self._idx = np.zeros(self.header.n_elems, dtype=np.int32)
         self._seen = np.zeros(self.n_chunks, dtype=bool)
+        self._batch = max(1, chunk_batch)
+        self._pending: list[tuple[int, bytes]] = []
+
+    def _bounds(self, cid: int) -> tuple[int, int]:
+        start = cid * self.chunk_elems
+        return start, min(start + self.chunk_elems, self.header.n_elems)
+
+    def _flush(self) -> None:
+        if not self._pending:
+            return
+        pending, self._pending = self._pending, []
+        bounds = [self._bounds(cid) for cid, _ in pending]
+        try:
+            decoded = cabac.decode_indices_batch(
+                [blob for _, blob in pending],
+                [b - a for a, b in bounds], self.header.n_levels)
+        except Exception:
+            # un-see the whole batch so the caller can re-request the
+            # bad chunk(s) -- a corrupt payload must not poison the
+            # stream (re-feeding a corrected copy is not a duplicate)
+            for cid, _ in pending:
+                self._seen[cid] = False
+            raise
+        for (a, b), arr in zip(bounds, decoded):
+            self._idx[a:b] = arr
 
     def add_chunk(self, payload: bytes) -> int:
-        """Entropy-decode one chunk payload; returns its chunk id."""
+        """Accept one chunk payload (entropy-decoded with its batch);
+        returns its chunk id."""
         (cid,) = struct.unpack_from("<I", payload)
         if cid >= self.n_chunks:
             raise ValueError(f"chunk id {cid} out of range")
         if self._seen[cid]:
             raise ValueError(f"duplicate chunk {cid}")
-        start = cid * self.chunk_elems
-        stop = min(start + self.chunk_elems, self.header.n_elems)
-        self._idx[start:stop] = cabac.decode_indices(
-            payload[4:], stop - start, self.header.n_levels)
         self._seen[cid] = True
+        self._pending.append((cid, payload[4:]))
+        if len(self._pending) >= self._batch:
+            self._flush()
         return cid
 
     @property
@@ -258,6 +289,7 @@ class ChunkStreamDecoder:
         if not self.complete:
             missing = int((~self._seen).sum())
             raise ValueError(f"stream incomplete: {missing} chunks missing")
+        self._flush()
         return reconstruct_indices(self._idx, self.header,
                                    backend=self._backend, ecsq=self._ecsq,
                                    shape=self.shape if shape is None
@@ -348,9 +380,34 @@ class FeatureCodec:
         return self.rate_from_indices(idx, np.shape(x))
 
     def rate_from_indices(self, idx, shape):
-        hist = self.backend.histogram(idx, self.config.n_levels)
+        """Bits/element estimate from indices (in-graph).
+
+        Tiled codecs estimate per tile and sum: the chunked entropy stage
+        codes tile-aligned runs with tile-local statistics, so the sum of
+        per-tile entropies (never above the global-histogram bound, by
+        conditioning) is the tighter model of what it actually spends.
+        """
         n = max(int(np.prod(shape)), 1)
+        if self.plan is not None:
+            hists = self.backend.tile_histogram(idx, self.spec())
+            return estimated_bits_from_tile_hists(
+                hists, self.config.n_levels) / n
+        hist = self.backend.histogram(idx, self.config.n_levels)
         return estimated_bits_from_hist(hist, self.config.n_levels) / n
+
+    def tile_rate_bits(self, x):
+        """(n_cgroups, n_sblocks) per-tile entropy-bits estimates from
+        one quantization pass.  The per-tile view of the same in-graph
+        signal :meth:`estimate_rate` sums (and the controller seeding in
+        ``CodecBank.prime_controller`` consumes); exposed for callers
+        that weigh individual tiles -- e.g. spatially selective rungs or
+        per-tile drop decisions -- without a host round trip."""
+        if self.plan is None:
+            raise ValueError("per-tensor codec has no tile rates")
+        idx = self.quantize(x)
+        hists = self.backend.tile_histogram(idx, self.spec())
+        return estimated_bits_from_tile_hists(
+            hists, self.config.n_levels, per_tile=True)
 
     def apply_with_rate(self, x):
         """(fake-quant x, rate bits/element) from one quantization pass.
@@ -427,18 +484,41 @@ class FeatureCodec:
 
     def _coded_indices(self, x: np.ndarray) -> np.ndarray:
         """Quantize ``x`` and ravel the indices in coded order (tile-major
-        for tiled codecs -- consecutive coded symbols share a tile)."""
+        for tiled codecs -- consecutive coded symbols share a tile).
+
+        The *unfused reference path*: a full int32 index tensor crosses
+        from the device.  :meth:`_fused_indices` is the hot path;
+        ``benchmarks/bench_codec.py`` asserts the two bit-identical.
+        """
         idx = np.asarray(self.quantize(jnp.asarray(x)))
         if self.plan is not None:
             return self.plan.to_coded_order(idx)
         return idx.ravel()
 
-    def encode(self, x: np.ndarray, coder_mode: str = "auto") -> bytes:
-        """Full host encode: clip+quantize+TU+entropy coding with header."""
+    def _fused_indices(self, x: np.ndarray,
+                       want_hist: bool = False):
+        """Coded-order indices (and optionally per-tile histograms) via
+        the backend's single-pass fused encode: on the kernel backend one
+        megakernel pass whose packed bytes + tile histograms are the only
+        device->host transfer."""
+        return self.backend.encode_fused(jnp.asarray(x), self.spec(),
+                                         self.bits_per_index(),
+                                         want_hist=want_hist)
+
+    def encode(self, x: np.ndarray, coder_mode: str = "auto",
+               fused: bool = True) -> bytes:
+        """Full host encode: clip+quantize+TU+entropy coding with header.
+
+        ``fused=True`` (default) runs the single-pass fused device encode;
+        ``fused=False`` forces the unfused reference path.  Both produce
+        byte-identical streams -- the entropy payload is a pure function
+        of the coded-order indices, which the two paths share bit-exactly.
+        """
         x = np.asarray(x, np.float32)
         header, _ = self._header(x)
-        payload = cabac.encode_indices(self._coded_indices(x),
-                                       self.config.n_levels,
+        coded = self._fused_indices(x)[0] if fused \
+            else self._coded_indices(x)
+        payload = cabac.encode_indices(coded, self.config.n_levels,
                                        mode=coder_mode)
         return header + payload
 
@@ -496,7 +576,7 @@ class FeatureCodec:
         x = np.asarray(x, np.float32)
         if self.plan is not None:
             chunk_elems = self.plan.align_chunk_elems(chunk_elems, x.shape)
-        idx = self._coded_indices(x)
+        idx = self._fused_indices(x)[0]
         header, _ = self._header(x)
         n_chunks = max(1, -(-idx.size // chunk_elems))
         # the stream meta carries the tensor shape (the one-shot header only

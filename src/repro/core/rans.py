@@ -29,8 +29,10 @@ Design (see DESIGN.md for the full layout):
     byte-reversed word stream is exactly what the forward decoder
     consumes -- the standard interleaved-rANS construction, batched.
 
-Round trips are exact for any bit content; rates sit within a percent or
-two of the adaptive coder for stationary planes (see bench_codec.py).
+Round trips are exact for any bit content; rates sit within ~5-8% of the
+adaptive coder for stationary planes -- the per-lane state flush at the
+speed-tuned lane count (see :func:`lane_count`) is the deliberate rate
+cost of the >=20 Melem/s host hot path (both measured in bench_codec.py).
 """
 
 from __future__ import annotations
@@ -98,14 +100,81 @@ def parallel_map(fn, items, n_threads: int | None = None) -> list:
     return list(_get_pool(n).map(fn, items))
 
 
+def proc_workers() -> int:
+    """Worker count for process-pool shard coding (``REPRO_RANS_PROCS``).
+
+    Defaults to 0 (off): worker processes pay fork + pickle transfer per
+    shard, which only wins for multi-MB payloads on hosts whose numpy
+    holds the GIL through the step loop (where the thread pool loses to
+    serial -- see ``BENCH_codec.json``).  Opt in with
+    ``REPRO_RANS_PROCS=<n>`` to code shards on ``n`` real cores.
+    """
+    env = os.environ.get("REPRO_RANS_PROCS", "").strip()
+    if env:
+        return max(0, int(env))
+    return 0
+
+
+_PROC_POOL = None
+_PROC_SIZE = 0
+
+
+def _shutdown_proc_pool() -> None:
+    global _PROC_POOL, _PROC_SIZE
+    if _PROC_POOL is not None:
+        _PROC_POOL.shutdown(wait=False)
+    _PROC_POOL, _PROC_SIZE = None, 0
+
+
+def proc_map(fn, items, n_procs: int | None = None) -> list:
+    """Map ``fn`` over ``items`` on the rANS process pool (ordered).
+
+    ``fn`` must be a module-level (picklable) function.  Any pool
+    failure -- a worker crash (BrokenProcessPool), fork/pickle errors --
+    tears the pool down and recomputes *everything* serially in-process,
+    so callers always get correct results: the pool is an optimization,
+    never a correctness dependency.
+    """
+    import multiprocessing
+    from concurrent.futures import ProcessPoolExecutor
+
+    global _PROC_POOL, _PROC_SIZE
+    items = list(items)
+    n = proc_workers() if n_procs is None else n_procs
+    n = min(n, len(items))
+    if n <= 1:
+        return [fn(it) for it in items]
+    try:
+        if _PROC_POOL is None or _PROC_SIZE < n:
+            _shutdown_proc_pool()
+            # spawn, not fork: the parent typically has jax's thread
+            # pools running, and forking a multithreaded process can
+            # deadlock; spawn pays a one-off worker import instead
+            _PROC_POOL = ProcessPoolExecutor(
+                max_workers=n, mp_context=multiprocessing.get_context(
+                    "spawn"))
+            _PROC_SIZE = n
+        return list(_PROC_POOL.map(fn, items))
+    except Exception:
+        _shutdown_proc_pool()
+        return [fn(it) for it in items]
+
+
 def lane_count(total_bits: int) -> int:
     """Lanes used for a stream of ``total_bits`` (both sides derive this).
 
-    ~2048 bits per lane keeps the python step loop short while the fixed
-    per-lane cost (4-byte state flush) stays a tiny fraction of the
-    payload; clipped to [4, 1024].
+    The step loop runs ``total_bits / lanes`` python iterations whose
+    per-step cost is nearly width-independent up to a few thousand lanes,
+    so wall time is inversely proportional to the lane count while the
+    fixed per-lane cost (4-byte state flush) grows linearly: ~640 bits
+    per lane puts the flush at ~5-8% of the TU payload and buys the
+    20 Melem/s encode/decode throughput the fused hot path targets
+    (see BENCH_codec.json, which also reports the measured rate cost);
+    clipped to [4, 4096] -- past a few Mbit the cap amortizes the flush
+    back under 1%.  Encode-side policy only: the blob header records the
+    count, so retuning never breaks old streams.
     """
-    return int(min(1024, max(4, 1 << (total_bits // 2048).bit_length())))
+    return int(min(4096, max(4, 1 << (total_bits // 640).bit_length())))
 
 
 def _chunk_freqs(bits: np.ndarray, chunk_bits: int) -> np.ndarray:
@@ -164,27 +233,32 @@ def encode_planes(planes: list[np.ndarray]) -> bytes:
     bits2d, f1_steps, ftab = _plane_setup(planes, lanes)
     n_steps = bits2d.shape[0]
 
+    # The loop carries only the sequential state update, built from the
+    # step's scalar probabilities with bitwise mixes (f0 ^ (f0^f1)*bit)
+    # rather than per-step np.where.  Word emission is deferred: each
+    # step stores its pre-renorm low words and the emission mask, and
+    # one boolean gather at the end collects the emitted words in
+    # (step asc, lane asc) order -- exactly the order the old per-step
+    # burst bookkeeping produced (bursts appended in reverse step order,
+    # lane-reversed, then globally reversed), so the byte stream is
+    # unchanged.
+    bits_bool = bits2d.view(np.bool_)
     x = np.full(lanes, _STATE_LO, dtype=np.uint64)
-    emitted = []       # encode-order word bursts (reversed lane order)
-    zero = np.uint64(0)
+    over_rows = np.empty((n_steps, lanes), np.bool_)
+    w_rows = np.empty((n_steps, lanes), np.uint16)
+    m64 = np.uint64(_M)
     for t in range(n_steps - 1, -1, -1):
         f1 = np.uint64(f1_steps[t])
-        f0 = np.uint64(_M) - f1
-        ones = bits2d[t] == 1
-        f = np.where(ones, f1, f0)
-        c = np.where(ones, f0, zero)
+        f0 = m64 - f1
+        b = bits_bool[t]
+        f = np.where(b, f1, f0)
         over = x >= (f << _EMIT_SHIFT)
-        if over.any():
-            emitted.append((x[over] & _MASK_W).astype(np.uint16)[::-1])
-            x[over] >>= _U16
-        q = x // f
-        x = (q << _S64) + (x - q * f) + c
-
-    if emitted:
-        words = np.concatenate(emitted)[::-1]
-    else:
-        words = np.empty(0, dtype=np.uint16)
-    return _blob(lanes, ftab, x, words)
+        over_rows[t] = over
+        w_rows[t] = x          # truncating uint16 store == x & 0xFFFF
+        x >>= over * _U16                        # renorm emitting lanes
+        q, r = np.divmod(x, f)
+        x = (q << _S64) + r + f0 * b
+    return _blob(lanes, ftab, x, w_rows[over_rows])
 
 
 def _encode_group(lanes: int, setups: list) -> list[bytes]:
@@ -311,20 +385,119 @@ class PlaneStreamDecoder:
         x = self._x
         words, wpos = self._words, self._wpos
         out = np.empty((steps, lanes), dtype=np.uint8)
-        zero = np.uint64(0)
-        for t in range(steps):
-            f1 = np.uint64(f1c[t // _CHUNK_STEPS])
+        for s0 in range(0, steps, _CHUNK_STEPS):
+            # probabilities are chunk-static: hoist the span's scalars and
+            # select f via a bitwise mix (f0 ^ (f0^f1)*bit) -- cheaper
+            # than per-step np.where at these widths
+            f1 = np.uint64(f1c[s0 // _CHUNK_STEPS])
             f0 = np.uint64(_M) - f1
+            fx = f0 ^ f1
+            for t in range(s0, min(s0 + _CHUNK_STEPS, steps)):
+                xm = x & _MASK_S
+                bit = xm >= f0
+                f = f0 ^ (fx * bit)
+                x = f * (x >> _S64) + (xm - f0 * bit)
+                low = x < _STATE_LO
+                k = int(low.sum())
+                if k:
+                    x[low] = (x[low] << _U16) | words[wpos:wpos + k]
+                    wpos += k
+                out[t] = bit
+        self._x, self._wpos = x, wpos
+        return out.reshape(-1)[:n_bits]
+
+
+class BatchPlaneDecoder:
+    """Forward decoder over S *independent* equal-lane-count streams.
+
+    The decode-side mirror of :func:`_encode_group`: the S coder states
+    are stacked on a leading axis so every per-step update runs as one
+    (S, lanes) numpy op -- the per-stream python dispatch that dominates
+    chunked decodes collapses into one step loop per plane round.
+    Per-stream results are bit-identical to S separate
+    :class:`PlaneStreamDecoder` walks (asserted in tests): streams
+    shorter than the longest are masked inactive for the trailing steps
+    and word refills are gathered per stream in lane order, exactly the
+    serial consumption order.
+    """
+
+    def __init__(self, blobs: list[bytes]) -> None:
+        self.n = len(blobs)
+        lanes = None
+        ftabs, states, words, woff = [], [], [], []
+        for blob in blobs:
+            ln, n_ftab = struct.unpack_from(_HEADER_FMT, blob)
+            if lanes is None:
+                lanes = ln
+            elif ln != lanes:
+                raise ValueError("batched streams must share a lane count")
+            if ln == 0:
+                raise ValueError("empty stream cannot join a batch")
+            off = struct.calcsize(_HEADER_FMT)
+            ftabs.append(np.frombuffer(blob, "<u2", n_ftab, off))
+            off += 2 * n_ftab
+            states.append(np.frombuffer(blob, "<u4", ln, off))
+            off += 4 * ln
+            w = np.frombuffer(blob, "<u2", -1, off)
+            woff.append(sum(x.size for x in words))
+            words.append(w)
+        self.lanes = lanes
+        self._ftabs = ftabs
+        self._fpos = np.zeros(self.n, np.int64)
+        self._x = np.stack(states).astype(np.uint64)       # (S, lanes)
+        self._words = (np.concatenate(words).astype(np.uint64)
+                       if words else np.empty(0, np.uint64))
+        self._wpos = np.asarray(woff, np.int64)            # absolute
+        self._wend = self._wpos + np.asarray(
+            [w.size for w in words], np.int64)
+
+    def next_planes(self, n_bits: list[int]) -> list[np.ndarray]:
+        """Decode one plane from every stream (``n_bits[s]`` may be 0)."""
+        lanes = self.lanes
+        steps = np.asarray([-(-b // lanes) for b in n_bits], np.int64)
+        t_max = int(steps.max()) if steps.size else 0
+        if t_max == 0:
+            return [np.empty(0, np.uint8) for _ in n_bits]
+        f1_all = np.ones((self.n, t_max), np.uint64)
+        for s, nb in enumerate(n_bits):
+            if nb == 0:
+                continue
+            nch = -(-int(steps[s]) // _CHUNK_STEPS)
+            f1c = self._ftabs[s][self._fpos[s]:self._fpos[s] + nch]
+            if f1c.size != nch:
+                raise ValueError("truncated probability table")
+            self._fpos[s] += nch
+            f1_all[s, :steps[s]] = \
+                np.repeat(f1c.astype(np.uint64), _CHUNK_STEPS)[:steps[s]]
+
+        x = self._x
+        words, wpos = self._words, self._wpos.copy()
+        out = np.empty((self.n, t_max, lanes), dtype=np.uint8)
+        m64 = np.uint64(_M)
+        zero = np.uint64(0)
+        for t in range(t_max):
+            active = steps > t                         # (S,)
+            f1 = f1_all[:, t][:, None]
+            f0 = m64 - f1
             xm = x & _MASK_S
             bit = xm >= f0
             f = np.where(bit, f1, f0)
             c = np.where(bit, f0, zero)
-            x = f * (x >> _S64) + xm - c
-            low = x < _STATE_LO
-            k = int(low.sum())
-            if k:
-                x[low] = (x[low] << _U16) | words[wpos:wpos + k]
-                wpos += k
-            out[t] = bit
+            x = np.where(active[:, None], f * (x >> _S64) + xm - c, x)
+            low = (x < _STATE_LO) & active[:, None]
+            if low.any():
+                sidx, _ = np.nonzero(low)              # s asc, lane asc
+                counts = np.bincount(sidx, minlength=self.n)
+                if np.any(wpos + counts > self._wend):
+                    # per-stream bound: a truncated member must raise
+                    # (like the single-stream decoder), never silently
+                    # consume its neighbour's words
+                    raise ValueError("truncated word stream in batch")
+                starts = np.cumsum(counts) - counts
+                rank = np.arange(sidx.size) - starts[sidx]
+                x[low] = (x[low] << _U16) | words[wpos[sidx] + rank]
+                wpos += counts
+            out[:, t, :] = bit
         self._x, self._wpos = x, wpos
-        return out.reshape(-1)[:n_bits]
+        return [out[s, :steps[s]].reshape(-1)[:n_bits[s]]
+                for s in range(self.n)]

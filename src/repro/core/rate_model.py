@@ -44,6 +44,31 @@ def estimated_bits_from_hist(hist, n_levels: int):
     return jnp.sum(jnp.where(ge > 0, bits, 0.0))
 
 
+def estimated_bits_from_tile_hists(hists, n_levels: int,
+                                   per_tile: bool = False):
+    """Entropy-coded size estimate from per-tile index histograms.
+
+    ``hists`` is (..., N) -- e.g. the (n_cgroups, n_sblocks, N) tables a
+    fused encode pass emits.  Each tile's TU planes are modelled with
+    tile-local probabilities (what the tile-aligned chunked coder
+    actually uses), so the total is never above the single-histogram
+    estimate.  Returns the summed bits, or per-tile bits of shape
+    ``hists.shape[:-1]`` when ``per_tile`` is set.  Vectorized over
+    tiles; jit-safe.
+    """
+    h = hists.astype(jnp.float32).reshape(-1, n_levels)
+    rev_cum = jnp.cumsum(h[:, ::-1], axis=1)[:, ::-1]        # ge[t, j]
+    ge = rev_cum[:, : n_levels - 1]
+    gt = jnp.concatenate(
+        [rev_cum[:, 1:], jnp.zeros((h.shape[0], 1), h.dtype)],
+        axis=1)[:, : n_levels - 1]
+    p1 = gt / jnp.maximum(ge, 1)
+    bits = jnp.sum(jnp.where(ge > 0, ge * _binary_entropy(p1), 0.0), axis=1)
+    if per_tile:
+        return bits.reshape(jnp.shape(hists)[:-1])
+    return jnp.sum(bits)
+
+
 def estimated_bits_per_element(idx, n_levels: int):
     hist = index_histogram(idx, n_levels)
     n = jnp.maximum(idx.size, 1)

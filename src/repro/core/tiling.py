@@ -163,6 +163,66 @@ class TilePlan:
 
 
 @dataclasses.dataclass(frozen=True)
+class PaddedLayout:
+    """Geometry of the lane-padded 2-D device view the fused encode pass
+    writes, shared by the kernel wrappers (which build the view in-graph)
+    and the host (which strips it after the single device->host transfer).
+
+    Tiled view: channel-major rows, each spatial block padded to a whole
+    ``sb_cols``-column band (``cols == n_sblocks * sb_cols``), rows padded
+    to a sublane multiple.  Flat (per-tensor) view: ``flat_n`` is set and
+    the data is simply the raveled tensor padded at the tail -- the pad
+    fill is ``cmin`` so padding quantizes to index 0 (the histogram
+    correction relies on this).
+    """
+
+    rows: int                 # padded row count of the device view
+    cols: int                 # padded column count
+    ch: int                   # valid rows (channels)
+    m: int                    # valid flattened spatial extent per channel
+    n_sblocks: int            # spatial bands
+    sb_cols: int              # padded columns per band
+    bs: int                   # valid elements per band
+    channel_group_size: int = 1
+    flat_n: int | None = None  # per-tensor flat view: valid element count
+
+    @property
+    def bs_last(self) -> int:
+        """Valid elements in the last band (its tail may be padding)."""
+        return self.m - (self.n_sblocks - 1) * self.bs
+
+    def unpack_indices(self, idx2d: np.ndarray) -> np.ndarray:
+        """Padded (rows, cols) index view -> flat coded-order indices."""
+        idx2d = np.asarray(idx2d).reshape(self.rows, self.cols)
+        if self.flat_n is not None:
+            return idx2d.reshape(-1)[:self.flat_n]
+        a = idx2d[:self.ch].reshape(self.ch, self.n_sblocks, self.sb_cols)
+        a = a[:, :, :self.bs].reshape(self.ch, -1)[:, :self.m]
+        return a.reshape(-1)
+
+    def group_hists(self, hist_raw: np.ndarray, n_levels: int,
+                    hist_width: int) -> np.ndarray:
+        """Kernel per-(row, band) histogram -> (n_cgroups, n_sblocks, N).
+
+        ``hist_raw`` is the megakernel's (rows, n_sblocks * hist_width)
+        output; padding rows are dropped and channel rows are summed into
+        their groups.  For the flat view all rows collapse into the one
+        tile and the tail padding (which quantized to index 0 by the
+        cmin-fill contract) is subtracted from bin 0.
+        """
+        h = np.asarray(hist_raw).reshape(self.rows, self.n_sblocks,
+                                         hist_width)[..., :n_levels]
+        if self.flat_n is not None:
+            out = h.sum(axis=(0, 1), dtype=np.int64)[None, None]
+            out[0, 0, 0] -= self.rows * self.cols - self.flat_n
+            return out.astype(np.int32)
+        h = h[:self.ch]
+        gs = max(1, self.channel_group_size)
+        starts = np.arange(0, self.ch, gs)
+        return np.add.reduceat(h, starts, axis=0).astype(np.int32)
+
+
+@dataclasses.dataclass(frozen=True)
 class TileECSQ:
     """Per-tile non-uniform quantizer tables (row t = flat tile id t).
 

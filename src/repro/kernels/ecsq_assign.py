@@ -53,6 +53,80 @@ def _kernel(x_ref, thr_ref, lvl_ref, idx_ref, deq_ref, *, n_levels: int,
     deq_ref[...] = deq.astype(deq_ref.dtype)
 
 
+def _kernel_tiles(x_ref, cmin_ref, cmax_ref, thr_ref, lvl_ref, idx_ref,
+                  deq_ref, *, n_levels: int):
+    """Per-tile ECSQ assignment: every row of the (br, bc) data block
+    carries its own threshold/level tables (the (br, MAX_LEVELS) blocks
+    the grid mapped for this band), so per-tile designed quantizers run
+    through the same blocked banded layout as the uniform tile kernel.
+    Same iota-masked per-row scalar extraction as the per-tensor body --
+    the fori_loop index never addresses a lane."""
+    x = x_ref[...].astype(jnp.float32)
+    lo = cmin_ref[...].astype(jnp.float32)          # (br, 1)
+    hi = cmax_ref[...].astype(jnp.float32)
+    xc = jnp.clip(x, lo, hi)
+    thr = thr_ref[...]                              # (br, MAX_LEVELS)
+    lvl = lvl_ref[...]
+    lane = jax.lax.broadcasted_iota(jnp.int32, thr.shape, 1)
+
+    def thr_body(i, acc):
+        t_i = jnp.sum(jnp.where(lane == i, thr, 0.0), axis=1, keepdims=True)
+        # >= matches searchsorted(side='right'): ties go to the upper bin
+        return acc + (xc >= t_i).astype(jnp.int32)
+
+    idx = jax.lax.fori_loop(0, n_levels - 1, thr_body,
+                            jnp.zeros(x.shape, jnp.int32))
+
+    l0 = jnp.sum(jnp.where(lane == 0, lvl, 0.0), axis=1, keepdims=True)
+
+    def lvl_body(i, deq):
+        l_i = jnp.sum(jnp.where(lane == i, lvl, 0.0), axis=1, keepdims=True)
+        return jnp.where(idx == i, l_i, deq)
+
+    deq = jax.lax.fori_loop(1, n_levels, lvl_body,
+                            jnp.broadcast_to(l0, x.shape))
+    idx_ref[...] = idx
+    deq_ref[...] = deq.astype(deq_ref.dtype)
+
+
+def ecsq_assign_tiles_2d(x, cmin, cmax, thresholds, levels, n_levels: int,
+                         sb_cols: int, block=DEFAULT_BLOCK,
+                         interpret: bool = False):
+    """Blocked per-tile ECSQ quantize + dequantize.
+
+    x: (R, C) banded view (C == n_sblocks * sb_cols); cmin/cmax:
+    (R, n_sblocks) per-(row, band) clip ranges; thresholds/levels:
+    (R, n_sblocks * MAX_LEVELS) per-row tables, thresholds padded with
+    +inf and levels zero-padded past ``n_levels``.  Returns
+    (idx int32, deq) of x's shape.
+    """
+    if n_levels > MAX_LEVELS:
+        raise ValueError(f"n_levels {n_levels} > {MAX_LEVELS}")
+    r, c = x.shape
+    if c % sb_cols:
+        raise ValueError(f"C {c} not a multiple of sb_cols {sb_cols}")
+    br = min(block[0], r)
+    bc = min(block[1], c, sb_cols)
+    while sb_cols % bc:
+        bc -= 128
+    grid = (r // br, c // bc)
+    band = lambda i, j: (i, j * bc // sb_cols)  # noqa: E731
+    return pl.pallas_call(
+        functools.partial(_kernel_tiles, n_levels=n_levels),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+                  pl.BlockSpec((br, 1), band),
+                  pl.BlockSpec((br, 1), band),
+                  pl.BlockSpec((br, MAX_LEVELS), band),
+                  pl.BlockSpec((br, MAX_LEVELS), band)],
+        out_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+                   pl.BlockSpec((br, bc), lambda i, j: (i, j))],
+        out_shape=[jax.ShapeDtypeStruct((r, c), jnp.int32),
+                   jax.ShapeDtypeStruct((r, c), x.dtype)],
+        interpret=interpret,
+    )(x, cmin, cmax, thresholds, levels)
+
+
 def ecsq_assign_2d(x, thresholds, levels, cmin: float, cmax: float,
                    block=DEFAULT_BLOCK, interpret: bool = False):
     """x: (R, C) blocked-aligned; thresholds (N-1,), levels (N,)."""

@@ -120,3 +120,115 @@ def clip_quant_rows_2d(x, cmin, cmax, n_levels: int, block=DEFAULT_BLOCK,
     return clip_quant_tiles_2d(x, cmin, cmax, n_levels,
                                sblock_cols=x.shape[1], block=block,
                                interpret=interpret)
+
+
+# -- fused single-pass encode megakernel --------------------------------------
+
+HIST_WIDTH = 64        # lane width of the per-(row, band) histogram output
+
+
+def _kernel_encode(x_ref, cmin_ref, cmax_ref, packed_ref, hist_ref, *,
+                   n_levels: int, bits: int, bc: int, sb_cols: int, bs: int,
+                   bs_last: int, n_sblocks: int):
+    """One fused pass per block: clip -> quantize -> bit-pack -> histogram.
+
+    The encode hot path's whole device side: the feature block is read
+    from HBM once and leaves as wire-width packed bytes plus a
+    per-(row, spatial-band) index histogram -- no int32 index tensor ever
+    reaches HBM or the host.  Ranges are (br, 1) per-row columns exactly
+    as in :func:`_kernel_tiles`; the scalar per-tensor mode is the
+    constant-range one-band case.
+
+    Packing combines ``per = 8 // bits`` adjacent lane values into one
+    byte (same little-end-first layout as ``pack_bits.py`` / the jnp host
+    fallback) via a minor-dim reshape; ``per == 1`` (bit widths 3/5/6)
+    stores one index per byte.  The histogram masks band-column padding
+    (``col_in_band >= bs``) so tiles see only real elements; padded rows
+    are dropped host-side.  Like the rest of the kernel backend this is
+    validated in interpret mode in CI; the TPU lowering of the lane-dim
+    reshape is part of the ROADMAP's TPU-validation follow-up.
+    """
+    per = 8 // bits if bits in (1, 2, 4) else 1
+    j = pl.program_id(1)
+    band_col = (j % (sb_cols // bc)) * bc    # block's column offset in band
+    x = x_ref[...].astype(jnp.float32)
+    cmin = cmin_ref[...].astype(jnp.float32)
+    cmax = cmax_ref[...].astype(jnp.float32)
+    span = jnp.maximum(cmax - cmin, 1e-12)
+    scale = (n_levels - 1) / span
+    q = jnp.floor((jnp.clip(x, cmin, cmax) - cmin) * scale + 0.5) \
+        .astype(jnp.int32)
+
+    if per == 1:
+        packed_ref[...] = q
+    else:
+        q3 = q.reshape(q.shape[0], q.shape[1] // per, per)
+        acc = q3[:, :, 0]
+        for k in range(1, per):                 # unrolled: per in (2, 4, 8)
+            acc = acc + (q3[:, :, k] << (k * bits))
+        packed_ref[...] = acc
+
+    @pl.when(band_col == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    # mask band-column padding; the last band's tail (the flattened
+    # spatial extent rarely fills it) has its own valid count
+    limit = jnp.where(j // (sb_cols // bc) == n_sblocks - 1, bs_last, bs)
+    valid = jax.lax.broadcasted_iota(jnp.int32, q.shape, 1) \
+        + band_col < limit
+    hlane = jax.lax.broadcasted_iota(jnp.int32, hist_ref.shape, 1)
+
+    def body(n, carry):                         # blocked: N scales to 64
+        cnt = jnp.sum(jnp.where(valid & (q == n), 1, 0), axis=1,
+                      keepdims=True)
+        hist_ref[...] += jnp.where(hlane == n, cnt, 0)
+        return carry
+
+    jax.lax.fori_loop(0, n_levels, body, 0)
+
+
+def encode_tiles_2d(x, cmin, cmax, n_levels: int, bits: int, sb_cols: int,
+                    bs: int, bs_last: int | None = None,
+                    block=DEFAULT_BLOCK, interpret: bool = False):
+    """Fused encode over a banded 2-D view (see ``_kernel_encode``).
+
+    x: (R, C) block-aligned with C == n_sblocks * sb_cols; cmin/cmax:
+    (R, n_sblocks) per-(row, band) ranges; ``bs`` is the valid element
+    count per band (<= sb_cols) and ``bs_last`` the last band's (its
+    tail may be padding when the spatial extent is not a block
+    multiple).  Returns (packed (R, C // per) int32 byte values,
+    hist (R, n_sblocks * HIST_WIDTH) int32).
+    """
+    if n_levels > HIST_WIDTH:
+        raise ValueError(f"n_levels {n_levels} > {HIST_WIDTH}")
+    per = 8 // bits if bits in (1, 2, 4) else 1
+    r, c = x.shape
+    if c % sb_cols:
+        raise ValueError(f"C {c} not a multiple of sb_cols {sb_cols}")
+    n_sblocks = c // sb_cols
+    br = min(block[0], r)
+    bc = min(block[1], c, sb_cols)
+    while sb_cols % bc:            # largest lane-multiple divisor <= block[1]
+        bc -= 128
+    grid = (r // br, c // bc)
+    bpb = sb_cols // bc            # column blocks per band
+    return pl.pallas_call(
+        functools.partial(_kernel_encode, n_levels=n_levels, bits=bits,
+                          bc=bc, sb_cols=sb_cols, bs=bs,
+                          bs_last=bs if bs_last is None else bs_last,
+                          n_sblocks=n_sblocks),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+                  pl.BlockSpec((br, 1), lambda i, j: (i, j * bc
+                                                      // sb_cols)),
+                  pl.BlockSpec((br, 1), lambda i, j: (i, j * bc
+                                                      // sb_cols))],
+        out_specs=[pl.BlockSpec((br, bc // per), lambda i, j: (i, j)),
+                   pl.BlockSpec((br, HIST_WIDTH),
+                                lambda i, j, bpb=bpb: (i, j // bpb))],
+        out_shape=[jax.ShapeDtypeStruct((r, c // per), jnp.int32),
+                   jax.ShapeDtypeStruct((r, n_sblocks * HIST_WIDTH),
+                                        jnp.int32)],
+        interpret=interpret,
+    )(x, cmin, cmax)

@@ -14,12 +14,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.tiling import PaddedLayout
 from . import ref
-from .ecsq_assign import ecsq_assign_2d
-from .fused_clip_quant import (clip_quant_2d, clip_quant_rows_2d,
-                               clip_quant_tiles_2d)
+from .ecsq_assign import ecsq_assign_2d, ecsq_assign_tiles_2d
+from .ecsq_assign import MAX_LEVELS as ECSQ_MAX_LEVELS
+from .fused_clip_quant import (HIST_WIDTH, clip_quant_2d, clip_quant_rows_2d,
+                               clip_quant_tiles_2d, encode_tiles_2d)
 from .pack_bits import pack_rows_2d
-from .rate_hist import index_histogram_2d
+from .rate_hist import index_histogram_2d, index_histogram_tiles_2d
 
 _LANE = 128
 _ROW = 8
@@ -38,23 +40,90 @@ def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
 
 
-def _to_2d(x, fill: float):
-    """Flatten + pad to a block-divisible (R, C) view. Returns (x2d, n_valid).
+def flat_layout(n: int) -> PaddedLayout:
+    """Geometry of the flat padded (R, C) view ``_to_2d`` builds.
 
     C is a power-of-two multiple of 128 (<= 1024) and R is rounded up to a
     multiple of min(R, 256), so the (min(256,R), min(512,C)) block grids in
     the wrappers always tile exactly (hypothesis found the n=513 case where
     a 640-wide view left 128 columns outside the grid).
     """
-    flat = x.reshape(-1)
-    n = flat.shape[0]
     k = max(1, (n + _LANE - 1) // _LANE)
     cols = _LANE * min(8, 1 << max(0, (k - 1).bit_length()))
     rows = (n + cols - 1) // cols
     align = _ROW if rows <= 256 else 256
     rows = ((rows + align - 1) // align) * align
-    padded = jnp.full((rows * cols,), fill, x.dtype).at[:n].set(flat)
-    return padded.reshape(rows, cols), n
+    return PaddedLayout(rows=rows, cols=cols, ch=rows, m=cols,
+                        n_sblocks=1, sb_cols=cols, bs=cols, flat_n=n)
+
+
+def _to_2d(x, fill: float):
+    """Flatten + pad to a block-divisible (R, C) view (see
+    :func:`flat_layout`).  Returns (x2d, n_valid)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    lay = flat_layout(n)
+    padded = jnp.full((lay.rows * lay.cols,), fill, x.dtype).at[:n].set(flat)
+    return padded.reshape(lay.rows, lay.cols), n
+
+
+def banded_layout(shape, channel_axis: int, n_sblocks: int,
+                  spatial_block_size: int,
+                  channel_group_size: int = 1) -> PaddedLayout:
+    """Geometry of the channel-major banded view the tiled kernels use:
+    each spatial block padded to a whole lane-aligned column band, rows
+    padded to the sublane multiple."""
+    axis = channel_axis % len(shape)
+    ch = shape[axis]
+    m = 1
+    for d, s in enumerate(shape):
+        if d != axis:
+            m *= s
+    bs = spatial_block_size or m
+    sb_cols = _pad_lane(bs)
+    align = _ROW if ch <= 256 else 256
+    rows = ((ch + align - 1) // align) * align
+    return PaddedLayout(rows=rows, cols=n_sblocks * sb_cols, ch=ch, m=m,
+                        n_sblocks=n_sblocks, sb_cols=sb_cols, bs=bs,
+                        channel_group_size=max(1, channel_group_size))
+
+
+def _banded_view(x, channel_axis: int, lay: PaddedLayout):
+    """Scatter ``x`` into the banded device view ``lay`` describes.
+    Returns (xp (rows, cols), moved_shape) -- padding is zero-filled and
+    masked/stripped downstream."""
+    axis = channel_axis % x.ndim
+    xm = jnp.moveaxis(x, axis, 0)
+    moved_shape = xm.shape
+    x2 = xm.reshape(lay.ch, -1)
+    mp = lay.n_sblocks * lay.bs
+    if mp != lay.m:
+        x2 = jnp.concatenate(
+            [x2, jnp.zeros((lay.ch, mp - lay.m), x.dtype)], axis=1)
+    x3 = jnp.zeros((lay.ch, lay.n_sblocks, lay.sb_cols), x.dtype) \
+        .at[:, :, :lay.bs].set(x2.reshape(lay.ch, lay.n_sblocks, lay.bs))
+    xp = jnp.zeros((lay.rows, lay.cols), x.dtype) \
+        .at[:lay.ch].set(x3.reshape(lay.ch, lay.cols))
+    return xp, moved_shape
+
+
+def _row_ranges(lo, hi, lay: PaddedLayout):
+    """Expand (n_cgroups, n_sblocks) range tables to per-row columns;
+    padding rows get a dummy [0, 1] range."""
+    cg = np.arange(lay.ch) // lay.channel_group_size
+    lo_r = jnp.zeros((lay.rows, lay.n_sblocks), jnp.float32) \
+        .at[:lay.ch].set(lo.astype(jnp.float32)[cg])
+    hi_r = jnp.ones((lay.rows, lay.n_sblocks), jnp.float32) \
+        .at[:lay.ch].set(hi.astype(jnp.float32)[cg])
+    return lo_r, hi_r
+
+
+def _unband(a, lay: PaddedLayout, moved_shape, axis: int):
+    """Inverse of :func:`_banded_view` for a same-shape kernel output."""
+    a = a[:lay.ch].reshape(lay.ch, lay.n_sblocks, lay.sb_cols)[:, :, :lay.bs]
+    mp = lay.n_sblocks * lay.bs
+    return jnp.moveaxis(
+        a.reshape(lay.ch, mp)[:, :lay.m].reshape(moved_shape), 0, axis)
 
 
 @functools.partial(jax.jit, static_argnames=("cmin", "cmax", "n_levels",
@@ -94,44 +163,17 @@ def clip_quantize_tiled(x, lo, hi, *, n_levels: int, channel_axis: int = -1,
     """
     interpret = _on_cpu() if interpret is None else interpret
     axis = channel_axis % x.ndim
-    xm = jnp.moveaxis(x, axis, 0)
-    moved_shape = xm.shape
-    ch = moved_shape[0]
-    x2 = xm.reshape(ch, -1)
-    m = x2.shape[1]
     n_cgroups, n_sblocks = lo.shape
-    bs = spatial_block_size or m
-
-    sb_cols = _pad_lane(bs)
-    cols = n_sblocks * sb_cols
-    align = _ROW if ch <= 256 else 256
-    rows = ((ch + align - 1) // align) * align
-
-    # scatter each spatial block into its padded column band
-    mp = n_sblocks * bs
-    if mp != m:
-        x2 = jnp.concatenate(
-            [x2, jnp.zeros((ch, mp - m), x.dtype)], axis=1)
-    x3 = jnp.zeros((ch, n_sblocks, sb_cols), x.dtype) \
-        .at[:, :, :bs].set(x2.reshape(ch, n_sblocks, bs))
-    xp = jnp.zeros((rows, cols), x.dtype).at[:ch].set(x3.reshape(ch, cols))
-
-    # expand the group-level tables to per-row (channel) range columns
-    cg = np.arange(ch) // max(1, channel_group_size)
-    lo_r = jnp.zeros((rows, n_sblocks), jnp.float32) \
-        .at[:ch].set(lo.astype(jnp.float32)[cg])
-    hi_r = jnp.ones((rows, n_sblocks), jnp.float32) \
-        .at[:ch].set(hi.astype(jnp.float32)[cg])
-    br = min(256, rows)
-    idx, deq = clip_quant_tiles_2d(xp, lo_r, hi_r, n_levels, sb_cols,
-                                   block=(br, min(512, cols)),
+    lay = banded_layout(x.shape, axis, n_sblocks, spatial_block_size,
+                        channel_group_size)
+    xp, moved_shape = _banded_view(x, axis, lay)
+    lo_r, hi_r = _row_ranges(lo, hi, lay)
+    br = min(256, lay.rows)
+    idx, deq = clip_quant_tiles_2d(xp, lo_r, hi_r, n_levels, lay.sb_cols,
+                                   block=(br, min(512, lay.cols)),
                                    interpret=interpret)
-
-    def unpad(a):
-        a = a[:ch].reshape(ch, n_sblocks, sb_cols)[:, :, :bs]
-        return jnp.moveaxis(a.reshape(ch, mp)[:, :m].reshape(moved_shape),
-                            0, axis)
-    return unpad(idx), unpad(deq)
+    return (_unband(idx, lay, moved_shape, axis),
+            _unband(deq, lay, moved_shape, axis))
 
 
 def clip_quantize_channels(x, cmin, cmax, *, n_levels: int,
@@ -158,6 +200,175 @@ def ecsq_quantize(x, thresholds, levels, *, cmin: float, cmax: float,
     shape = x.shape
     return (idx.reshape(-1)[:n].reshape(shape),
             deq.reshape(-1)[:n].reshape(shape))
+
+
+@functools.partial(jax.jit, static_argnames=("cmin", "cmax", "n_levels",
+                                             "bits", "interpret"))
+def _encode_fused_flat(x, *, cmin: float, cmax: float, n_levels: int,
+                       bits: int, interpret: bool):
+    """Jitted flat (per-tensor) megakernel pass.  Pads with ``cmin`` so
+    the tail quantizes to index 0 (the histogram correction contract)."""
+    x2d, _ = _to_2d(x, cmin)
+    r, c = x2d.shape
+    lo_r = jnp.full((r, 1), cmin, jnp.float32)
+    hi_r = jnp.full((r, 1), cmax, jnp.float32)
+    packed, hist = encode_tiles_2d(x2d, lo_r, hi_r, n_levels, bits,
+                                   sb_cols=c, bs=c,
+                                   block=(min(256, r), min(512, c)),
+                                   interpret=interpret)
+    return packed.astype(jnp.uint8), hist
+
+
+@functools.partial(jax.jit, static_argnames=("n_levels", "bits",
+                                             "channel_axis",
+                                             "channel_group_size",
+                                             "spatial_block_size",
+                                             "interpret"))
+def _encode_fused_tiled(x, lo, hi, *, n_levels: int, bits: int,
+                        channel_axis: int, channel_group_size: int,
+                        spatial_block_size: int, interpret: bool):
+    """Jitted tiled megakernel pass over the banded view."""
+    axis = channel_axis % x.ndim
+    lay = banded_layout(x.shape, axis, lo.shape[1], spatial_block_size,
+                        channel_group_size)
+    xp, _ = _banded_view(x, axis, lay)
+    lo_r, hi_r = _row_ranges(lo, hi, lay)
+    packed, hist = encode_tiles_2d(xp, lo_r, hi_r, n_levels, bits,
+                                   sb_cols=lay.sb_cols, bs=lay.bs,
+                                   bs_last=lay.bs_last,
+                                   block=(min(256, lay.rows),
+                                          min(512, lay.cols)),
+                                   interpret=interpret)
+    return packed.astype(jnp.uint8), hist
+
+
+def encode_fused(x, lo, hi, *, n_levels: int, bits: int,
+                 channel_axis: int | None = None,
+                 channel_group_size: int = 1, spatial_block_size: int = 0,
+                 interpret: bool | None = None):
+    """Single-pass fused encode: clip + quantize + bit-pack + histogram.
+
+    One megakernel dispatch per tile block; the only arrays that leave
+    the device are wire-width packed bytes and the per-(row, band)
+    histogram -- the encode path's single device->host transfer.
+    Returns (packed uint8, hist_raw int32, :class:`PaddedLayout`); the
+    host recovers coded-order indices with ``layout.unpack_indices`` and
+    per-tile counts with ``layout.group_hists``.
+
+    ``channel_axis is None`` is the per-tensor mode (``lo``/``hi``
+    floats); otherwise ``lo``/``hi`` are (n_cgroups, n_sblocks) range
+    tables over the TilePlan's banded view.
+    """
+    interpret = _on_cpu() if interpret is None else interpret
+    if channel_axis is None:
+        lay = flat_layout(int(np.prod(np.shape(x))))
+        packed, hist = _encode_fused_flat(x, cmin=float(lo), cmax=float(hi),
+                                          n_levels=n_levels, bits=bits,
+                                          interpret=interpret)
+        return packed, hist, lay
+    lay = banded_layout(np.shape(x), channel_axis, lo.shape[1],
+                        spatial_block_size, channel_group_size)
+    packed, hist = _encode_fused_tiled(
+        x, jnp.asarray(lo, jnp.float32), jnp.asarray(hi, jnp.float32),
+        n_levels=n_levels, bits=bits, channel_axis=channel_axis,
+        channel_group_size=channel_group_size,
+        spatial_block_size=spatial_block_size, interpret=interpret)
+    return packed, hist, lay
+
+
+def unpack_bytes(packed: np.ndarray, bits: int) -> np.ndarray:
+    """Host inverse of the kernel bit-pack: uint8 byte values -> int32
+    indices, ``per = 8 // bits`` per byte (identity for ``per == 1``).
+    Same little-end-first lane layout as ``FeatureCodec.unpack``."""
+    packed = np.asarray(packed, np.uint8)
+    per = 8 // bits if bits in (1, 2, 4) else 1
+    if per == 1:
+        return packed.astype(np.int32)
+    shifts = (np.arange(per, dtype=np.uint8) * bits)[None, :]
+    mask = np.uint8((1 << bits) - 1)
+    vals = (packed.reshape(-1, 1) >> shifts) & mask
+    return vals.reshape(packed.shape[:-1] + (-1,)).astype(np.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_levels", "channel_axis",
+                                             "channel_group_size",
+                                             "n_sblocks",
+                                             "spatial_block_size",
+                                             "interpret"))
+def index_histogram_tiled(idx, *, n_levels: int, channel_axis: int,
+                          channel_group_size: int, n_sblocks: int,
+                          spatial_block_size: int,
+                          interpret: bool | None = None):
+    """Per-tile index histogram, in-graph: (n_cgroups, n_sblocks, N).
+
+    The tile-resolved counterpart of :func:`index_histogram` for
+    tile-aware rate estimation; runs the banded reduction kernel and
+    folds channel rows into their groups in-graph, so per-tile rate
+    choices never need the indices on the host.
+    """
+    interpret = _on_cpu() if interpret is None else interpret
+    axis = channel_axis % idx.ndim
+    lay = banded_layout(idx.shape, axis, n_sblocks, spatial_block_size,
+                        channel_group_size)
+    idx_p, _ = _banded_view(idx.astype(jnp.int32), axis, lay)
+    hist = index_histogram_tiles_2d(idx_p, n_levels, lay.sb_cols, lay.bs,
+                                    bs_last=lay.bs_last,
+                                    block=(min(256, lay.rows),
+                                           min(512, lay.cols)),
+                                    interpret=interpret)
+    from .rate_hist import MAX_LEVELS
+    h = hist.reshape(lay.rows, n_sblocks, MAX_LEVELS)[:lay.ch, :, :n_levels]
+    gs = lay.channel_group_size
+    n_cgroups = -(-lay.ch // gs)
+    pad = n_cgroups * gs - lay.ch
+    if pad:
+        h = jnp.concatenate(
+            [h, jnp.zeros((pad,) + h.shape[1:], h.dtype)], axis=0)
+    return h.reshape(n_cgroups, gs, n_sblocks, n_levels).sum(axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("n_levels", "channel_axis",
+                                             "channel_group_size",
+                                             "spatial_block_size",
+                                             "interpret"))
+def ecsq_quantize_tiled(x, lo, hi, thresholds, levels, *, n_levels: int,
+                        channel_axis: int, channel_group_size: int,
+                        spatial_block_size: int,
+                        interpret: bool | None = None):
+    """Per-tile ECSQ quantize + dequantize through the Pallas kernel.
+
+    ``thresholds`` (n_tiles, N-1) / ``levels`` (n_tiles, N) are the
+    :class:`TileECSQ` tables (flat tile id = cgroup * n_sblocks + sblock);
+    ``lo``/``hi`` the (n_cgroups, n_sblocks) clip ranges.  Bit-exact
+    indices vs the jnp threshold-compare path (same ``xc >= t`` formula).
+    """
+    interpret = _on_cpu() if interpret is None else interpret
+    axis = channel_axis % x.ndim
+    n_sblocks = lo.shape[1]
+    lay = banded_layout(x.shape, axis, n_sblocks, spatial_block_size,
+                        channel_group_size)
+    xp, moved_shape = _banded_view(x, axis, lay)
+    lo_r, hi_r = _row_ranges(lo, hi, lay)
+    # expand the flat-tile tables to per-(row, band) MAX_LEVELS-wide rows:
+    # thresholds pad with +inf (no bin past N), levels zero-pad
+    cg = np.arange(lay.ch) // lay.channel_group_size
+    thr = jnp.asarray(thresholds, jnp.float32) \
+        .reshape(-1, n_sblocks, n_levels - 1)[cg]     # (ch, nb, N-1)
+    lvl = jnp.asarray(levels, jnp.float32) \
+        .reshape(-1, n_sblocks, n_levels)[cg]
+    thr_r = jnp.full((lay.rows, n_sblocks, ECSQ_MAX_LEVELS), jnp.inf,
+                     jnp.float32).at[:lay.ch, :, :n_levels - 1].set(thr)
+    lvl_r = jnp.zeros((lay.rows, n_sblocks, ECSQ_MAX_LEVELS), jnp.float32) \
+        .at[:lay.ch, :, :n_levels].set(lvl)
+    idx, deq = ecsq_assign_tiles_2d(
+        xp, lo_r, hi_r,
+        thr_r.reshape(lay.rows, n_sblocks * ECSQ_MAX_LEVELS),
+        lvl_r.reshape(lay.rows, n_sblocks * ECSQ_MAX_LEVELS),
+        n_levels, lay.sb_cols,
+        block=(min(256, lay.rows), min(512, lay.cols)),
+        interpret=interpret)
+    return (_unband(idx, lay, moved_shape, axis),
+            _unband(deq, lay, moved_shape, axis))
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "interpret"))

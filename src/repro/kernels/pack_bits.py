@@ -6,8 +6,15 @@ this kernel the pack runs on device, so it fuses into the same pass as
 the clip+quant output instead of round-tripping full-width int32 indices
 through the host, and only wire-width bytes cross the interconnect.
 
+This standalone kernel serves the packed split-runtime transport (pack
+an existing index tensor); the host-bitstream encode path instead packs
+*inside* the fused encode megakernel
+(``fused_clip_quant._kernel_encode``), which emits the same byte layout
+directly from the quantize pass so indices never materialize.
+
 Bit layout (shared with the jnp host fallback in
-:meth:`repro.core.backend.JnpBackend.pack_indices`): byte ``k`` holds
+:meth:`repro.core.backend.JnpBackend.pack_indices` and the megakernel):
+byte ``k`` holds
 indices ``k*per + j`` for ``j`` in ``[0, per)`` at bit offset
 ``j * bits`` -- little-end-first lanes.  The wrapper hands the kernel a
 (8, n_bytes) view whose row ``j`` is lane ``j`` of every output byte

@@ -40,6 +40,68 @@ def _kernel(idx_ref, hist_ref, *, n_levels: int):
     jax.lax.fori_loop(0, n_levels, body, 0)
 
 
+def _kernel_tiles(idx_ref, hist_ref, *, n_levels: int, bc: int,
+                  sb_cols: int, bs: int, bs_last: int, n_sblocks: int):
+    """Per-(row, spatial-band) histogram: the tile-resolved variant of
+    :func:`_kernel`, sharing the fused encode megakernel's output layout
+    (see ``fused_clip_quant._kernel_encode``) so tile-aware in-graph rate
+    estimation needs no packed-bytes pass.  Band-column padding
+    (``col_in_band >= bs``, and the last band's shorter ``bs_last``) is
+    masked out; padded rows are dropped host-side."""
+    j = pl.program_id(1)
+    band_col = (j % (sb_cols // bc)) * bc
+
+    @pl.when(band_col == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    idx = idx_ref[...]
+    limit = jnp.where(j // (sb_cols // bc) == n_sblocks - 1, bs_last, bs)
+    valid = jax.lax.broadcasted_iota(jnp.int32, idx.shape, 1) \
+        + band_col < limit
+    hlane = jax.lax.broadcasted_iota(jnp.int32, hist_ref.shape, 1)
+
+    def body(n, carry):
+        cnt = jnp.sum(jnp.where(valid & (idx == n), 1, 0), axis=1,
+                      keepdims=True)
+        hist_ref[...] += jnp.where(hlane == n, cnt, 0)
+        return carry
+
+    jax.lax.fori_loop(0, n_levels, body, 0)
+
+
+def index_histogram_tiles_2d(idx, n_levels: int, sb_cols: int, bs: int,
+                             bs_last: int | None = None,
+                             block=DEFAULT_BLOCK, interpret: bool = False):
+    """idx: (R, C) int32 banded view, C == n_sblocks * sb_cols.  Returns
+    (R, n_sblocks * MAX_LEVELS) int32 per-(row, band) counts."""
+    if n_levels > MAX_LEVELS:
+        raise ValueError(f"n_levels {n_levels} > {MAX_LEVELS}")
+    r, c = idx.shape
+    if c % sb_cols:
+        raise ValueError(f"C {c} not a multiple of sb_cols {sb_cols}")
+    n_sblocks = c // sb_cols
+    br = min(block[0], r)
+    bc = min(block[1], c, sb_cols)
+    while sb_cols % bc:
+        bc -= 128
+    grid = (r // br, c // bc)
+    bpb = sb_cols // bc
+    return pl.pallas_call(
+        functools.partial(_kernel_tiles, n_levels=n_levels, bc=bc,
+                          sb_cols=sb_cols, bs=bs,
+                          bs_last=bs if bs_last is None else bs_last,
+                          n_sblocks=n_sblocks),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((br, MAX_LEVELS),
+                               lambda i, j, bpb=bpb: (i, j // bpb)),
+        out_shape=jax.ShapeDtypeStruct((r, n_sblocks * MAX_LEVELS),
+                                       jnp.int32),
+        interpret=interpret,
+    )(idx)
+
+
 def index_histogram_2d(idx, n_levels: int, block=DEFAULT_BLOCK,
                        interpret: bool = False):
     """idx: (R, C) int32, block-aligned. Returns (n_levels,) int32 counts."""

@@ -96,6 +96,7 @@ class RateController:
         self.cfg = cfg
         self.ladder = tuple(sorted(set(as_rung(r) for r in cfg.ladder)))
         self._bpe = {}                    # Rung -> EWMA measured bits/elem
+        self._seeded = set()              # rungs whose _bpe is an estimate
         self._bucket_bits = 0.0           # leaky bucket: coded bits
         self._bucket_elems = 0.0
         self._queue_depth = 0
@@ -130,7 +131,10 @@ class RateController:
             return
         rung = self._resolve(rung)
         bpe = 8.0 * coded_bytes / n_elems
-        prev = self._bpe.get(rung)
+        # a seeded value is an estimate, not a measurement: the first
+        # real coded size replaces it outright instead of blending
+        prev = None if rung in self._seeded else self._bpe.get(rung)
+        self._seeded.discard(rung)
         a = self.cfg.ewma
         self._bpe[rung] = bpe if prev is None else a * bpe + (1 - a) * prev
         self._bucket_bits += 8.0 * coded_bytes
@@ -148,6 +152,18 @@ class RateController:
         self.history.append({"rung": str(rung), "n_levels": rung.n_levels,
                              "bpe": bpe, "cum_bpe": self.measured_bpe,
                              "queue_depth": self._queue_depth})
+
+    def seed_estimate(self, rung, bpe: float) -> None:
+        """Prime a rung's expected rate with an *estimate* (e.g. the
+        in-graph tile-aware entropy estimate from one fused quantization
+        pass over calibration features).  Only fills rungs with no
+        measurement yet: real coded sizes always win, estimates just let
+        the very first ladder walks order tiled rungs correctly instead
+        of falling back to the log2(N) scaling."""
+        rung = self._resolve(rung)
+        if rung not in self._bpe and bpe > 0:
+            self._bpe[rung] = float(bpe)
+            self._seeded.add(rung)
 
     def on_queue_depth(self, depth: int) -> None:
         self._queue_depth = int(depth)
@@ -282,3 +298,21 @@ class CodecBank:
                     spatial_block_size=rung.spatial_block_size)
             self._codecs[rung] = self._calibrate(cfg, samples=self.samples)
         return self._codecs[rung]
+
+    def prime_controller(self, controller: RateController,
+                         x: np.ndarray | None = None) -> None:
+        """Seed every ladder rung's expected bits/element from the
+        in-graph entropy estimate of one quantization pass over ``x``
+        (default: the calibration samples).
+
+        Tiled rungs estimate per tile and sum (the tile histograms the
+        fused encode pass emits), so a mixed-granularity ladder is
+        rate-ordered correctly from the very first
+        :meth:`RateController.next_rung` call -- no coded tensors, no
+        host round trip, no log2(N) guessing.
+        """
+        feats = self.samples if x is None else np.asarray(x, np.float32)
+        for rung in self.ladder:
+            codec = self.get(rung)
+            controller.seed_estimate(rung,
+                                     float(codec.estimate_rate(feats)))

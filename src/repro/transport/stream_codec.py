@@ -3,8 +3,10 @@
 Maps :meth:`FeatureCodec.encode_stream` payloads onto wire frames
 (HEADER, CHUNK..., END) for one session, and reassembles/decodes the
 frames on the receiving side with :class:`TensorAssembler` --
-entropy-decoding each chunk the moment its frame arrives, so decode
-overlaps the transfer and only the final dequantize waits for END.
+entropy-decoding arrived chunks in batches (one batched rANS step loop
+per ``STREAM_CHUNK_BATCH`` chunks, mirroring the batched send side), so
+decode overlaps the transfer and only the final dequantize plus at most
+one remainder batch waits for END.
 
 FEEDBACK frame payloads (link stats the cloud reports back for the
 edge-side rate controller) are also defined here so both halves share
@@ -64,7 +66,7 @@ class TensorAssembler:
     ``feed`` returns the reconstruction (a float32 ndarray, bit-exact
     with the in-process ``codec.decode(codec.encode(x))`` path) when the
     END frame completes the tensor, else None.  Chunk frames are
-    entropy-decoded immediately on arrival.
+    entropy-decoded in arrival batches (see :class:`ChunkStreamDecoder`).
     """
 
     def __init__(self, *, backend=None, ecsq=None) -> None:

@@ -225,4 +225,7 @@ class TestVectorizedCoder:
                          p=[0.55, 0.25, 0.13, 0.07]).astype(np.int32)
         blob = cabac.encode_indices(idx, 4, mode="rans")
         est = estimated_bits_np(idx, 4)
-        assert 8 * len(blob) <= est * 1.05  # within 5% of the adaptive bound
+        # within 10% of the adaptive bound: the speed-tuned lane count
+        # (rans.lane_count) spends ~5-8% on per-lane state flushes in
+        # exchange for the >=20 Melem/s hot path (see BENCH_codec.json)
+        assert 8 * len(blob) <= est * 1.10

@@ -228,6 +228,45 @@ class TestRateControl:
         with pytest.raises(KeyError):
             bank.get(7)
 
+    def test_seed_estimate_replaced_by_first_measurement(self):
+        rc = RateController(RateControlConfig(target_bpe=1.0,
+                                              ladder=(2, 4, 8)))
+        rc.seed_estimate(4, 0.5)
+        assert rc.estimate_bpe(4) == 0.5
+        rc.on_tensor(4, coded_bytes=25000, n_elems=100000)  # 2.0 bpe
+        # the estimate is dropped outright, not EWMA-blended
+        assert rc.estimate_bpe(4) == 2.0
+        rc.on_tensor(4, coded_bytes=12500, n_elems=100000)  # 1.0 bpe
+        assert rc.estimate_bpe(4) == pytest.approx(0.4 * 1.0 + 0.6 * 2.0)
+        # seeding never overrides an existing measurement
+        rc.seed_estimate(4, 9.9)
+        assert rc.estimate_bpe(4) != 9.9
+
+    def test_prime_controller_orders_mixed_ladder(self, features):
+        from repro.transport.rate_control import Rung
+        ladder = (2, 4, Rung(4, "channel"), 8)
+        bank = CodecBank(CodecConfig(n_levels=4, clip_mode="minmax",
+                                     constrain_cmin_zero=False,
+                                     channel_axis=-1), features,
+                         ladder=ladder)
+        rc = RateController(RateControlConfig(target_bpe=1.0,
+                                              ladder=ladder))
+        bank.prime_controller(rc)
+        # every rung carries an in-graph estimate before any coding,
+        # and the per-channel rung estimates below per-tensor at equal N
+        # on these channel-biased features
+        est = {r: rc.estimate_bpe(r) for r in rc.ladder}
+        assert all(v > 0 for v in est.values())
+        assert est[Rung(4, "channel")] < est[Rung(4)]
+
+    def test_tile_rate_bits_sums_to_estimate(self, features):
+        import jax.numpy as jnp
+        codec = _codec(features, "channel")
+        tr = np.asarray(codec.tile_rate_bits(jnp.asarray(features)))
+        assert tr.shape == (codec.plan.n_cgroups, codec.plan.n_sblocks)
+        est = float(codec.estimate_rate(jnp.asarray(features)))
+        assert tr.sum() / features.size == pytest.approx(est, rel=1e-4)
+
 
 class TestAsyncTransport:
     def test_concurrent_sessions_bit_exact(self, features):
