@@ -21,6 +21,10 @@ ResNet-50 layer-21 model:
     spatial-block, v3 streams) measured bits/element *and* MSE at equal N
     (acceptance: tiled MSE below per-tensor at equal-or-lower measured
     bpe for >= 2 level counts),
+  * the conv-shaped 2-D RD sweep: flat spatial blocking (v3) vs 2-D
+    row x column tiles (v4) on a (1, 64, 56, 56) feature map at equal
+    tile count and N (acceptance: 2-D bpe <= flat at equal-or-lower MSE
+    for >= 2 level counts),
   * chunked stream encode *and decode* with per-chunk dispatch vs the
     batched rANS loops (``encode_planes_batch`` / ``decode_indices_batch``).
 
@@ -68,6 +72,25 @@ def _biased_channel_features(n_rows: int = 16384, n_channels: int = 64,
     mu = np.linspace(0.0, 10.0, n_channels).astype(np.float32)
     return (mu[None, :]
             + rng.exponential(1.0, (n_rows, n_channels))).astype(np.float32)
+
+
+def _conv_features(c: int = 64, h: int = 56, w: int = 56,
+                   seed: int = 7) -> np.ndarray:
+    """(1, C, H, W) conv feature map with genuine row x column structure
+    (an off-center activation blob plus a column ramp, per-channel
+    scaled) -- the case arXiv 1804.09963 tiles feature maps spatially
+    for.  Flat spatial blocking smears the column structure across
+    tiles; 2-D (bh, bw) tiles keep it."""
+    rng = np.random.default_rng(seed)
+    yy, xx = np.meshgrid(np.arange(h), np.arange(w), indexing="ij")
+    blob = 6.0 * np.exp(-(((yy - 20) ** 2) + ((xx - 34) ** 2))
+                        / (2 * 12.0 ** 2))
+    ramp = np.linspace(0.0, 2.5, w)[None, :]
+    mu = (blob + ramp).astype(np.float32)
+    ch = np.linspace(0.5, 2.0, c).astype(np.float32)
+    x = ch[:, None, None] * mu[None] \
+        + rng.exponential(0.5, (c, h, w)).astype(np.float32)
+    return x[None].astype(np.float32)
 
 
 def _bench_fused_kernel_micro() -> dict:
@@ -221,6 +244,37 @@ def bench_codec(quick: bool = False) -> list[str]:
                   if v["tile_bpe"] <= v["tensor_bpe"]
                   and v["tile_mse"] < v["tensor_mse"])
 
+    # conv-shaped 2-D RD sweep: a (1, 64, 56, 56) NCHW map whose stats
+    # drift along rows AND columns.  2-D (8, 8) row x column tiles (v4
+    # streams) vs flat 64-element spatial blocking (v3) at the *same*
+    # tile count (49 spatial blocks either way, so equal side-info), at
+    # equal N -- measured wire bpe (header included) + MSE
+    import jax.numpy as _jnp
+    xconv = _conv_features()
+    xconv_j = _jnp.asarray(xconv)
+    conv_common = dict(clip_mode="minmax", constrain_cmin_zero=False,
+                       granularity="tile", channel_axis=1,
+                       channel_group_size=8)
+    conv2d_rd = {}
+    for n_levels in (2, 4, 8):
+        flat = calibrate(CodecConfig(n_levels=n_levels,
+                                     spatial_block_size=64, **conv_common),
+                         samples=xconv)
+        t2d = calibrate(CodecConfig(n_levels=n_levels,
+                                    spatial_block_hw=(8, 8), **conv_common),
+                        samples=xconv)
+        conv2d_rd[n_levels] = {
+            "flat_bpe": flat.compressed_bits_per_element(xconv),
+            "flat_mse": float(np.mean(
+                (np.asarray(flat.apply(xconv_j)) - xconv) ** 2)),
+            "tile2d_bpe": t2d.compressed_bits_per_element(xconv),
+            "tile2d_mse": float(np.mean(
+                (np.asarray(t2d.apply(xconv_j)) - xconv) ** 2)),
+        }
+    conv2d_wins = sum(1 for v in conv2d_rd.values()
+                      if v["tile2d_bpe"] <= v["flat_bpe"]
+                      and v["tile2d_mse"] <= v["flat_mse"])
+
     # chunked stream encode + decode: per-chunk dispatch vs the batched
     # rANS loops on both sides
     stream_codec = calibrate(CodecConfig(n_levels=4, clip_mode="model"),
@@ -285,6 +339,9 @@ def bench_codec(quick: bool = False) -> list[str]:
         "tiled_rd": tiled_rd,
         "tiled_rd_wins": rd_wins,
         "tiled_beats_tensor_ge_2_levels": rd_wins >= 2,
+        "conv2d_rd": conv2d_rd,
+        "conv2d_rd_wins": conv2d_wins,
+        "conv2d_beats_flat_ge_2_levels": conv2d_wins >= 2,
         "stream_chunk_elems": chunk,
         "stream_encode_perchunk_s": t_stream_serial,
         "stream_encode_batched_s": t_stream_batch,
@@ -325,6 +382,12 @@ def bench_codec(quick: bool = False) -> list[str]:
                     f"tensor_mse={v['tensor_mse']:.4f},"
                     f"tile_bpe={v['tile_bpe']:.3f},"
                     f"tile_mse={v['tile_mse']:.4f}")
+    for n_levels, v in conv2d_rd.items():
+        rows.append(f"codec_conv2d_rd_N{n_levels},0,"
+                    f"flat_bpe={v['flat_bpe']:.3f},"
+                    f"flat_mse={v['flat_mse']:.4f},"
+                    f"tile2d_bpe={v['tile2d_bpe']:.3f},"
+                    f"tile2d_mse={v['tile2d_mse']:.4f}")
     rows.append(f"codec_stream_encode_batched,{t_stream_batch*1e6:.0f},"
                 f"chunks={n_payloads - 1},"
                 f"vs_perchunk={t_stream_serial/t_stream_batch:.2f}x")

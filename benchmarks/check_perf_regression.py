@@ -14,7 +14,14 @@ codec hot path regressed:
     only catches catastrophic slowdowns);
   * boolean gates (``encode_speedup_ge_20x``, ``decode_speedup_ge_20x``,
     ``fused_identical``, ``channel_le_tensor``,
-    ``tiled_beats_tensor_ge_2_levels``) must hold outright.
+    ``tiled_beats_tensor_ge_2_levels``,
+    ``conv2d_beats_flat_ge_2_levels``) must hold outright.
+
+Failures are reported per metric (a summary line naming every regressed
+metric, then one detail line each); metrics missing from the baseline --
+i.e. added by a newer bench revision -- are noted and skipped instead of
+erroring, so a bench change and its baseline refresh need not land in
+lockstep.
 
 Baselines measured at a different ``n_elements`` (e.g. a --quick run
 against a full-run baseline) only check the ratio and boolean gates.
@@ -38,18 +45,35 @@ ABS_KEYS = ("encode_Melem_per_s", "decode_Melem_per_s",
             "stream_decode_batch_speedup")
 BOOL_KEYS = ("encode_speedup_ge_20x", "decode_speedup_ge_20x",
              "fused_identical", "channel_le_tensor",
-             "tiled_beats_tensor_ge_2_levels")
+             "tiled_beats_tensor_ge_2_levels",
+             "conv2d_beats_flat_ge_2_levels")
 
 
 def check(current: dict, baseline: dict, tolerance: float,
-          abs_tolerance: float) -> list[str]:
-    failures = []
+          abs_tolerance: float) -> list[tuple[str, str]]:
+    """Compare ``current`` against ``baseline``; returns one
+    (metric, reason) pair per regressed metric.
+
+    Metrics present in only one of the two files never hard-fail the
+    numeric buckets: a key missing from the *baseline* is new (added by
+    a later bench revision -- noted and skipped until the baseline is
+    regenerated), and a numeric key missing from the *current* run only
+    fails when the baseline tracks it.  Boolean gates must hold whenever
+    the current run reports them.
+    """
+    failures: list[tuple[str, str]] = []
     same_size = current.get("n_elements") == baseline.get("n_elements")
     for key in BOOL_KEYS:
         if key not in current:
-            failures.append(f"{key} missing from current benchmark")
+            if key in baseline:
+                failures.append((key, "missing from current benchmark"))
+            else:
+                print(f"note: {key} in neither file, skipped "
+                      "(new gate?)")
         elif not current[key]:
-            failures.append(f"{key} is {current[key]} (must hold)")
+            failures.append((key, f"is {current[key]} (must hold)"))
+        else:
+            print(f"{key}: True ok")
     checks = list(RATIO_KEYS) + (list(ABS_KEYS) if same_size else [])
     if not same_size:
         print(f"note: n_elements {current.get('n_elements')} != baseline "
@@ -60,10 +84,11 @@ def check(current: dict, baseline: dict, tolerance: float,
         base = baseline.get(key)
         cur = current.get(key)
         if base is None:
-            print(f"note: {key} missing from baseline, skipped")
+            print(f"note: {key} missing from baseline, skipped "
+                  "(regenerate the baseline to start gating it)")
             continue
         if cur is None:
-            failures.append(f"{key} missing from current benchmark")
+            failures.append((key, "missing from current benchmark"))
             continue
         floor = base * (1.0 - tol)
         status = "ok" if cur >= floor else "FAIL"
@@ -71,8 +96,8 @@ def check(current: dict, baseline: dict, tolerance: float,
               f"(floor {floor:.2f}) {status}")
         if cur < floor:
             failures.append(
-                f"{key} dropped {100 * (1 - cur / base):.0f}% "
-                f"({cur:.2f} < floor {floor:.2f})")
+                (key, f"dropped {100 * (1 - cur / base):.0f}% "
+                      f"({cur:.2f} < floor {floor:.2f})"))
     return failures
 
 
@@ -92,9 +117,11 @@ def main() -> int:
         baseline = json.load(f)
     failures = check(current, baseline, args.tolerance, args.abs_tolerance)
     if failures:
-        print("\nPERF REGRESSION:", file=sys.stderr)
-        for msg in failures:
-            print(f"  - {msg}", file=sys.stderr)
+        names = ", ".join(key for key, _ in failures)
+        print(f"\nPERF REGRESSION: {len(failures)} metric(s) regressed: "
+              f"{names}", file=sys.stderr)
+        for key, msg in failures:
+            print(f"  - {key}: {msg}", file=sys.stderr)
         return 1
     print("\nperf gate passed")
     return 0

@@ -93,11 +93,17 @@ def run_edge(args):
     feats = [np.asarray(forward_head(cfg, params, jnp.asarray(b)),
                         np.float32) for b in batches]
 
+    # "tile2d": (row x column) tiles over the (batch, seq) grid of the
+    # split tensor -- every session shares the shape, so the 2-D extent
+    # pin holds and the stream ships the v4 header
+    grain = "tile" if args.granularity == "tile2d" else args.granularity
     codec = calibrate(
         CodecConfig(n_levels=args.levels, clip_mode="empirical",
                     constrain_cmin_zero=False,
-                    granularity=args.granularity, channel_axis=-1,
-                    channel_group_size=8),
+                    granularity=grain, channel_axis=-1,
+                    channel_group_size=8,
+                    spatial_block_hw=(1, 8)
+                    if args.granularity == "tile2d" else None),
         samples=feats[0])
     print(f"[edge] split tensor {feats[0].shape}, codec N={args.levels} "
           f"granularity={args.granularity}", flush=True)
@@ -147,7 +153,10 @@ def main():
     ap.add_argument("--d-model", type=int, default=64)
     ap.add_argument("--levels", type=int, default=8)
     ap.add_argument("--granularity", default="channel",
-                    choices=["tensor", "channel"])
+                    choices=["tensor", "channel", "tile2d"],
+                    help="'tile2d' codes (1, 8) row x column tiles over "
+                         "the (batch, seq) grid -- v4 streams on the "
+                         "wire")
     ap.add_argument("--chunk-elems", type=int, default=2048)
     ap.add_argument("--seed", type=int, default=7)
     ap.add_argument("--smoke", action="store_true",

@@ -138,7 +138,12 @@ def _coded_order(idx: np.ndarray, spec: QuantSpec) -> np.ndarray:
 
 def _tile_hists_np(coded: np.ndarray, spec: QuantSpec) -> np.ndarray:
     """Host per-tile histograms from coded-order indices:
-    (n_cgroups, n_sblocks, N); (1, 1, N) for per-tensor specs."""
+    (n_cgroups, n_sblocks, N); (1, 1, N) for per-tensor specs.
+
+    Works off the coded-order band bounds (every tile is a contiguous
+    run of each coded channel row), so 1-D flat runs and 2-D row x column
+    blocks are the same loop.
+    """
     n = spec.n_levels
     if spec.plan is None:
         return np.bincount(coded, minlength=n).reshape(1, 1, n) \
@@ -147,10 +152,14 @@ def _tile_hists_np(coded: np.ndarray, spec: QuantSpec) -> np.ndarray:
     c = plan.n_channels
     m = coded.size // max(c, 1)
     arr = coded.reshape(c, m)
+    gc = plan.channel_group_size
+    bounds = plan.coded_band_bounds(m)
     out = np.zeros((plan.n_cgroups, plan.n_sblocks, n), np.int32)
-    for t, cs, ss in plan.tile_slices(c, m):
-        out[t // plan.n_sblocks, t % plan.n_sblocks] = \
-            np.bincount(arr[cs, ss].ravel(), minlength=n)
+    for g in range(plan.n_cgroups):
+        rows = arr[g * gc:min((g + 1) * gc, c)]
+        for b in range(plan.n_sblocks):
+            out[g, b] = np.bincount(
+                rows[:, bounds[b]:bounds[b + 1]].ravel(), minlength=n)
     return out
 
 
@@ -315,10 +324,7 @@ class KernelBackend:
                     x, lo, hi,
                     jnp.asarray(spec.ecsq.thresholds, jnp.float32),
                     jnp.asarray(spec.ecsq.levels, jnp.float32),
-                    n_levels=spec.n_levels,
-                    channel_axis=plan.channel_axis,
-                    channel_group_size=plan.channel_group_size,
-                    spatial_block_size=plan.spatial_block_size,
+                    n_levels=spec.n_levels, plan=plan,
                     interpret=self.interpret)
             plan = spec.plan
             plan.resolve(x.shape)
@@ -327,10 +333,7 @@ class KernelBackend:
             hi = jnp.asarray(spec.cmax, jnp.float32).reshape(
                 plan.n_cgroups, plan.n_sblocks)
             return ops.clip_quantize_tiled(
-                x, lo, hi, n_levels=spec.n_levels,
-                channel_axis=plan.channel_axis,
-                channel_group_size=plan.channel_group_size,
-                spatial_block_size=plan.spatial_block_size,
+                x, lo, hi, n_levels=spec.n_levels, plan=plan,
                 interpret=self.interpret)
         if spec.ecsq is not None:
             if spec.n_levels > MAX_LEVELS:
@@ -367,10 +370,7 @@ class KernelBackend:
         plan = spec.plan
         plan.resolve(idx.shape)
         return ops.index_histogram_tiled(
-            idx, n_levels=spec.n_levels, channel_axis=plan.channel_axis,
-            channel_group_size=plan.channel_group_size,
-            n_sblocks=plan.n_sblocks,
-            spatial_block_size=plan.spatial_block_size,
+            idx, n_levels=spec.n_levels, plan=plan,
             interpret=self.interpret)
 
     def encode_fused(self, x, spec: QuantSpec, bits: int,
@@ -401,10 +401,7 @@ class KernelBackend:
                 plan.n_cgroups, plan.n_sblocks)
             packed, hist, lay = ops.encode_fused(
                 x, lo, hi, n_levels=spec.n_levels, bits=bits,
-                channel_axis=plan.channel_axis,
-                channel_group_size=plan.channel_group_size,
-                spatial_block_size=plan.spatial_block_size,
-                interpret=self.interpret)
+                plan=plan, interpret=self.interpret)
         coded = lay.unpack_indices(ops.unpack_bytes(np.asarray(packed),
                                                     bits))
         hists = lay.group_hists(np.asarray(hist), spec.n_levels,

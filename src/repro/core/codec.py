@@ -21,11 +21,14 @@ channel mosaic, arXiv 2105.06002, plus the spatial structure of
 arXiv 1804.09963): per-tensor mode uses one (c_min, c_max); "channel" and
 "tile" granularities calibrate a range -- and optionally an ECSQ table --
 per (channel-group x spatial-block) tile and record the tile geometry +
-tables in a v3 self-describing header, so heterogeneous channels and
-spatially drifting feature maps neither waste levels nor blow up the
-coded rate.  Tiled streams serialize indices in tile-major (channel-
-major) order so consecutive coded symbols share a tile and streaming
-chunk boundaries align to tiles.
+tables in a self-describing header (v3 for 1-D flat spatial runs, v4 for
+the 2-D ``spatial_block_hw`` row x column split of conv feature maps),
+so heterogeneous channels and spatially drifting feature maps neither
+waste levels nor blow up the coded rate.  Tiled streams serialize
+indices in tile-major (channel-major) order -- 2-D plans additionally
+permute each channel row so every row x column tile is one contiguous
+run -- so consecutive coded symbols share a tile and streaming chunk
+boundaries align to tiles.
 
 Side information (header): c_min, c_max, N, flags, element count --
 16 bytes for classification-style payloads, matching the paper's
@@ -60,12 +63,18 @@ _CHANNEL_EXT_FMT = "<BBHH"  # ndim, channel_axis, group_size, n_groups
 # v3 tile ext: ndim, channel_axis, tile flags, pad, channel_group_size,
 # n_cgroups, spatial_block_size, n_sblocks (then dims + range tables)
 _TILE_EXT_FMT = "<BBBBHHII"
+# v4 2-D tile ext: ndim, channel_axis, tile flags, pad,
+# channel_group_size, n_cgroups, block_rows (bh), block_cols (bw),
+# spatial_rows (H), spatial_cols (W)  (then dims + range tables, exactly
+# like v3 -- n_sblocks = ceil(H/bh) * ceil(W/bw) is derived)
+_TILE2D_EXT_FMT = "<BBBBHHHHII"
 _STREAM_META_FMT = "<IIB"  # chunk_elems, n_chunks, ndim (then ndim u32 dims)
 
 FLAG_ECSQ = 1      # per-tensor ECSQ; v2 streams append the level table
 FLAG_CHANNEL = 2   # legacy v2 per-channel granularity (decode-only)
 FLAG_V2 = 4        # payload starts with a coder-id byte (serial | rans)
 FLAG_TILE = 8      # v3 tile extension (geometry + per-tile tables)
+FLAG_TILE2D = 16   # v4 2-D (row x column) tile extension
 
 TFLAG_ECSQ = 1     # tile ext carries per-tile ECSQ level tables
 
@@ -94,6 +103,11 @@ class CodecConfig:
     # 'tile' granularity: elements per spatial block of the channel-major
     # (C, M) view; 0 = one block spanning M (pure per-channel tiling)
     spatial_block_size: int = 0
+    # 'tile' granularity, 2-D mode: (bh, bw) row x column blocks over the
+    # (H, W) spatial grid of a conv feature map (W = innermost non-channel
+    # dim).  Mutually exclusive with spatial_block_size; streams carry the
+    # v4 header.
+    spatial_block_hw: tuple[int, int] | None = None
     backend: str | None = None   # None = auto (kernel on TPU, jnp on CPU)
 
 
@@ -128,22 +142,38 @@ def parse_header(data: bytes) -> ParsedHeader:
     spec = None
     plan = None
     tile_levels = None
-    if flags & FLAG_TILE:
-        ndim, axis, tflags, _, gsize, ngroups, sblock, nsblocks = \
-            struct.unpack_from(_TILE_EXT_FMT, data, off)
-        off += struct.calcsize(_TILE_EXT_FMT)
+    if flags & (FLAG_TILE | FLAG_TILE2D):
+        if flags & FLAG_TILE2D:
+            ndim, axis, tflags, _, gsize, ngroups, bh, bw, sh, sw = \
+                struct.unpack_from(_TILE2D_EXT_FMT, data, off)
+            off += struct.calcsize(_TILE2D_EXT_FMT)
+        else:
+            ndim, axis, tflags, _, gsize, ngroups, sblock, nsblocks = \
+                struct.unpack_from(_TILE_EXT_FMT, data, off)
+            off += struct.calcsize(_TILE_EXT_FMT)
         dims = tuple(int(d) for d in np.frombuffer(data, "<u4", ndim, off))
         off += 4 * ndim
         c = dims[axis]
         m = int(np.prod(dims)) // max(c, 1)
-        plan = TilePlan(channel_axis=axis, channel_group_size=gsize,
-                        spatial_block_size=sblock, n_channels=c,
-                        spatial_extent=m if sblock else None)
-        if (plan.n_cgroups, plan.n_sblocks) != (ngroups, nsblocks):
-            raise ValueError("tile header geometry is inconsistent")
-        n_tiles = ngroups * nsblocks
+        if flags & FLAG_TILE2D:
+            if sh * sw != m:
+                raise ValueError("2-D tile header spatial grid does not "
+                                 "match the tensor dims")
+            plan = TilePlan(channel_axis=axis, channel_group_size=gsize,
+                            spatial_block_size=0, n_channels=c,
+                            spatial_extent=m, spatial_hw=(sh, sw),
+                            spatial_block_hw=(bh, bw))
+            if plan.n_cgroups != ngroups:
+                raise ValueError("tile header geometry is inconsistent")
+        else:
+            plan = TilePlan(channel_axis=axis, channel_group_size=gsize,
+                            spatial_block_size=sblock, n_channels=c,
+                            spatial_extent=m if sblock else None)
+            if (plan.n_cgroups, plan.n_sblocks) != (ngroups, nsblocks):
+                raise ValueError("tile header geometry is inconsistent")
+        n_tiles = plan.n_tiles
         table = np.frombuffer(data, "<f4", 2 * n_tiles, off) \
-            .reshape(ngroups, nsblocks, 2)
+            .reshape(plan.n_cgroups, plan.n_sblocks, 2)
         off += 8 * n_tiles
         ecsq = None
         if tflags & TFLAG_ECSQ:
@@ -458,15 +488,25 @@ class FeatureCodec:
         flags = FLAG_V2
         ext = b""
         if self.plan is not None:
-            flags |= FLAG_TILE
             axis, _, _ = self.plan.resolve(x.shape)
             lo, hi = self.tile_tables()
             tflags = TFLAG_ECSQ if self.tile_ecsq is not None else 0
-            ext += struct.pack(_TILE_EXT_FMT, x.ndim, axis, tflags, 0,
-                               self.plan.channel_group_size,
-                               self.plan.n_cgroups,
-                               self.plan.spatial_block_size,
-                               self.plan.n_sblocks)
+            if self.plan.is_2d:
+                flags |= FLAG_TILE2D
+                ext += struct.pack(_TILE2D_EXT_FMT, x.ndim, axis, tflags, 0,
+                                   self.plan.channel_group_size,
+                                   self.plan.n_cgroups,
+                                   self.plan.spatial_block_hw[0],
+                                   self.plan.spatial_block_hw[1],
+                                   self.plan.spatial_hw[0],
+                                   self.plan.spatial_hw[1])
+            else:
+                flags |= FLAG_TILE
+                ext += struct.pack(_TILE_EXT_FMT, x.ndim, axis, tflags, 0,
+                                   self.plan.channel_group_size,
+                                   self.plan.n_cgroups,
+                                   self.plan.spatial_block_size,
+                                   self.plan.n_sblocks)
             ext += np.asarray(x.shape, "<u4").tobytes()
             ext += np.stack([lo, hi], axis=-1).astype("<f4").tobytes()
             if self.tile_ecsq is not None:
@@ -682,6 +722,10 @@ def calibrate(config: CodecConfig,
     per-group ECSQ is the one-spatial-block case).
     """
     cfg = config
+    if cfg.spatial_block_hw is not None and cfg.granularity != "tile":
+        raise ValueError(
+            "spatial_block_hw is a 'tile'-granularity setting; "
+            f"granularity={cfg.granularity!r} would silently ignore it")
     if cfg.granularity in ("channel", "tile"):
         if samples is None:
             raise ValueError(f"{cfg.granularity} granularity needs "

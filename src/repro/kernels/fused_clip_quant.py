@@ -127,9 +127,9 @@ def clip_quant_rows_2d(x, cmin, cmax, n_levels: int, block=DEFAULT_BLOCK,
 HIST_WIDTH = 64        # lane width of the per-(row, band) histogram output
 
 
-def _kernel_encode(x_ref, cmin_ref, cmax_ref, packed_ref, hist_ref, *,
-                   n_levels: int, bits: int, bc: int, sb_cols: int, bs: int,
-                   bs_last: int, n_sblocks: int):
+def _kernel_encode(x_ref, cmin_ref, cmax_ref, valid_ref, packed_ref,
+                   hist_ref, *, n_levels: int, bits: int, bc: int,
+                   sb_cols: int):
     """One fused pass per block: clip -> quantize -> bit-pack -> histogram.
 
     The encode hot path's whole device side: the feature block is read
@@ -143,10 +143,13 @@ def _kernel_encode(x_ref, cmin_ref, cmax_ref, packed_ref, hist_ref, *,
     byte (same little-end-first layout as ``pack_bits.py`` / the jnp host
     fallback) via a minor-dim reshape; ``per == 1`` (bit widths 3/5/6)
     stores one index per byte.  The histogram masks band-column padding
-    (``col_in_band >= bs``) so tiles see only real elements; padded rows
-    are dropped host-side.  Like the rest of the kernel backend this is
-    validated in interpret mode in CI; the TPU lowering of the lane-dim
-    reshape is part of the ROADMAP's TPU-validation follow-up.
+    against the band's valid count (the (1, 1) ``valid_ref`` cell the
+    grid mapped for this band -- 2-D plans have ragged edge tiles, so
+    every band carries its own count) so tiles see only real elements;
+    padded rows are dropped host-side.  Like the rest of the kernel
+    backend this is validated in interpret mode in CI; the TPU lowering
+    of the lane-dim reshape is part of the ROADMAP's TPU-validation
+    follow-up.
     """
     per = 8 // bits if bits in (1, 2, 4) else 1
     j = pl.program_id(1)
@@ -172,9 +175,9 @@ def _kernel_encode(x_ref, cmin_ref, cmax_ref, packed_ref, hist_ref, *,
     def _init():
         hist_ref[...] = jnp.zeros_like(hist_ref)
 
-    # mask band-column padding; the last band's tail (the flattened
-    # spatial extent rarely fills it) has its own valid count
-    limit = jnp.where(j // (sb_cols // bc) == n_sblocks - 1, bs_last, bs)
+    # mask band-column padding: each band's tail beyond its valid count
+    # holds layout padding, not feature elements
+    limit = valid_ref[0, 0]
     valid = jax.lax.broadcasted_iota(jnp.int32, q.shape, 1) \
         + band_col < limit
     hlane = jax.lax.broadcasted_iota(jnp.int32, hist_ref.shape, 1)
@@ -188,8 +191,21 @@ def _kernel_encode(x_ref, cmin_ref, cmax_ref, packed_ref, hist_ref, *,
     jax.lax.fori_loop(0, n_levels, body, 0)
 
 
+def band_valid_array(n_sblocks: int, bs: int, bs_last: int | None,
+                     band_valid=None):
+    """(1, n_sblocks) int32 per-band valid element counts: explicit
+    ``band_valid`` (2-D ragged tiles) or the uniform-but-for-the-last
+    1-D rule."""
+    if band_valid is not None:
+        v = jnp.asarray(band_valid, jnp.int32)
+    else:
+        v = jnp.full((n_sblocks,), bs, jnp.int32) \
+            .at[-1].set(bs if bs_last is None else bs_last)
+    return v.reshape(1, n_sblocks)
+
+
 def encode_tiles_2d(x, cmin, cmax, n_levels: int, bits: int, sb_cols: int,
-                    bs: int, bs_last: int | None = None,
+                    bs: int, bs_last: int | None = None, band_valid=None,
                     block=DEFAULT_BLOCK, interpret: bool = False):
     """Fused encode over a banded 2-D view (see ``_kernel_encode``).
 
@@ -197,7 +213,9 @@ def encode_tiles_2d(x, cmin, cmax, n_levels: int, bits: int, sb_cols: int,
     (R, n_sblocks) per-(row, band) ranges; ``bs`` is the valid element
     count per band (<= sb_cols) and ``bs_last`` the last band's (its
     tail may be padding when the spatial extent is not a block
-    multiple).  Returns (packed (R, C // per) int32 byte values,
+    multiple); ``band_valid`` (n_sblocks,) overrides both with explicit
+    per-band counts (2-D plans: ragged edge tiles).  Returns
+    (packed (R, C // per) int32 byte values,
     hist (R, n_sblocks * HIST_WIDTH) int32).
     """
     if n_levels > HIST_WIDTH:
@@ -213,17 +231,17 @@ def encode_tiles_2d(x, cmin, cmax, n_levels: int, bits: int, sb_cols: int,
         bc -= 128
     grid = (r // br, c // bc)
     bpb = sb_cols // bc            # column blocks per band
+    valid = band_valid_array(n_sblocks, bs, bs_last, band_valid)
     return pl.pallas_call(
         functools.partial(_kernel_encode, n_levels=n_levels, bits=bits,
-                          bc=bc, sb_cols=sb_cols, bs=bs,
-                          bs_last=bs if bs_last is None else bs_last,
-                          n_sblocks=n_sblocks),
+                          bc=bc, sb_cols=sb_cols),
         grid=grid,
         in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j)),
                   pl.BlockSpec((br, 1), lambda i, j: (i, j * bc
                                                       // sb_cols)),
                   pl.BlockSpec((br, 1), lambda i, j: (i, j * bc
-                                                      // sb_cols))],
+                                                      // sb_cols)),
+                  pl.BlockSpec((1, 1), lambda i, j, bpb=bpb: (0, j // bpb))],
         out_specs=[pl.BlockSpec((br, bc // per), lambda i, j: (i, j)),
                    pl.BlockSpec((br, HIST_WIDTH),
                                 lambda i, j, bpb=bpb: (i, j // bpb))],
@@ -231,4 +249,4 @@ def encode_tiles_2d(x, cmin, cmax, n_levels: int, bits: int, sb_cols: int,
                    jax.ShapeDtypeStruct((r, n_sblocks * HIST_WIDTH),
                                         jnp.int32)],
         interpret=interpret,
-    )(x, cmin, cmax)
+    )(x, cmin, cmax, valid)

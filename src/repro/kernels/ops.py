@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.tiling import PaddedLayout
+from ..core.tiling import PaddedLayout, TilePlan
 from . import ref
 from .ecsq_assign import ecsq_assign_2d, ecsq_assign_tiles_2d
 from .ecsq_assign import MAX_LEVELS as ECSQ_MAX_LEVELS
@@ -67,35 +67,57 @@ def _to_2d(x, fill: float):
     return padded.reshape(lay.rows, lay.cols), n
 
 
-def banded_layout(shape, channel_axis: int, n_sblocks: int,
-                  spatial_block_size: int,
-                  channel_group_size: int = 1) -> PaddedLayout:
+def banded_layout(shape, plan: TilePlan) -> PaddedLayout:
     """Geometry of the channel-major banded view the tiled kernels use:
     each spatial block padded to a whole lane-aligned column band, rows
-    padded to the sublane multiple."""
-    axis = channel_axis % len(shape)
+    padded to the sublane multiple.  2-D plans have one band per
+    (row-block, column-block) cell, sized for the largest tile; ragged
+    edge tiles record their true sizes in ``band_valid``."""
+    axis = plan.channel_axis % len(shape)
     ch = shape[axis]
     m = 1
     for d, s in enumerate(shape):
         if d != axis:
             m *= s
-    bs = spatial_block_size or m
+    sizes = plan.band_sizes(m)
+    bs = int(sizes.max())
     sb_cols = _pad_lane(bs)
     align = _ROW if ch <= 256 else 256
     rows = ((ch + align - 1) // align) * align
-    return PaddedLayout(rows=rows, cols=n_sblocks * sb_cols, ch=ch, m=m,
-                        n_sblocks=n_sblocks, sb_cols=sb_cols, bs=bs,
-                        channel_group_size=max(1, channel_group_size))
+    return PaddedLayout(rows=rows, cols=plan.n_sblocks * sb_cols, ch=ch,
+                        m=m, n_sblocks=plan.n_sblocks, sb_cols=sb_cols,
+                        bs=bs,
+                        channel_group_size=max(1, plan.channel_group_size),
+                        band_valid=tuple(int(s) for s in sizes)
+                        if plan.is_2d else None)
 
 
-def _banded_view(x, channel_axis: int, lay: PaddedLayout):
+@functools.lru_cache(maxsize=64)
+def _padded_cols(plan: TilePlan, lay: PaddedLayout) -> np.ndarray:
+    """(m,) original flat spatial position -> column of the banded padded
+    view (2-D plans: tile elements land contiguously in their band)."""
+    perm = plan.spatial_perm(lay.m)
+    out = np.empty(lay.m, np.int64)
+    out[perm] = lay.coded_cols()
+    out.setflags(write=False)    # shared cache entry: guard the layout map
+    return out
+
+
+def _banded_view(x, lay: PaddedLayout, plan: TilePlan):
     """Scatter ``x`` into the banded device view ``lay`` describes.
     Returns (xp (rows, cols), moved_shape) -- padding is zero-filled and
-    masked/stripped downstream."""
-    axis = channel_axis % x.ndim
+    masked/stripped downstream.  2-D plans scatter through the coded-
+    order column map (each row x column tile contiguous in its band);
+    1-D plans keep the cheap reshape path."""
+    axis = plan.channel_axis % x.ndim
     xm = jnp.moveaxis(x, axis, 0)
     moved_shape = xm.shape
     x2 = xm.reshape(lay.ch, -1)
+    if lay.band_valid is not None:
+        pcols = _padded_cols(plan, lay)
+        xp = jnp.zeros((lay.rows, lay.cols), x.dtype) \
+            .at[:lay.ch, pcols].set(x2)
+        return xp, moved_shape
     mp = lay.n_sblocks * lay.bs
     if mp != lay.m:
         x2 = jnp.concatenate(
@@ -118,8 +140,13 @@ def _row_ranges(lo, hi, lay: PaddedLayout):
     return lo_r, hi_r
 
 
-def _unband(a, lay: PaddedLayout, moved_shape, axis: int):
+def _unband(a, lay: PaddedLayout, moved_shape, axis: int,
+            plan: TilePlan | None = None):
     """Inverse of :func:`_banded_view` for a same-shape kernel output."""
+    if lay.band_valid is not None:
+        pcols = _padded_cols(plan, lay)
+        return jnp.moveaxis(
+            a[:lay.ch][:, pcols].reshape(moved_shape), 0, axis)
     a = a[:lay.ch].reshape(lay.ch, lay.n_sblocks, lay.sb_cols)[:, :, :lay.bs]
     mp = lay.n_sblocks * lay.bs
     return jnp.moveaxis(
@@ -142,38 +169,33 @@ def clip_quantize(x, *, cmin: float, cmax: float, n_levels: int,
             deq.reshape(-1)[:n].reshape(shape))
 
 
-@functools.partial(jax.jit, static_argnames=("n_levels", "channel_axis",
-                                             "channel_group_size",
-                                             "spatial_block_size",
+@functools.partial(jax.jit, static_argnames=("n_levels", "plan",
                                              "interpret"))
-def clip_quantize_tiled(x, lo, hi, *, n_levels: int, channel_axis: int = -1,
-                        channel_group_size: int = 1,
-                        spatial_block_size: int = 0,
+def clip_quantize_tiled(x, lo, hi, *, n_levels: int, plan: TilePlan,
                         interpret: bool | None = None):
     """TilePlan fused clip+quantize+dequantize (channel x spatial tiling).
 
-    ``lo``/``hi`` are (n_cgroups, n_sblocks) range tables: channel group
-    ``c // channel_group_size`` x spatial block ``m // spatial_block_size``
-    of the channel-major (C, M) view (``spatial_block_size == 0`` = one
-    block spanning M).  The view is laid out with each spatial block
-    padded to a whole lane-aligned column block, so the blocked per-tile
+    ``lo``/``hi`` are (n_cgroups, n_sblocks) range tables over the plan's
+    channel-major (C, M) view (``plan`` is a static argument: frozen,
+    hashable geometry).  The view is laid out with each spatial block
+    padded to a whole lane-aligned column band, so the blocked per-tile
     kernel reads one range cell per grid step; rows pad to the sublane
     multiple with a dummy [0, 1] range.  Per-channel granularity is the
-    one-spatial-block case.
+    one-spatial-block case; 2-D plans place each row x column tile
+    contiguously in its own band (coded-order scatter), so the kernel is
+    identical for flat and 2-D spatial splits.
     """
     interpret = _on_cpu() if interpret is None else interpret
-    axis = channel_axis % x.ndim
-    n_cgroups, n_sblocks = lo.shape
-    lay = banded_layout(x.shape, axis, n_sblocks, spatial_block_size,
-                        channel_group_size)
-    xp, moved_shape = _banded_view(x, axis, lay)
+    axis = plan.channel_axis % x.ndim
+    lay = banded_layout(x.shape, plan)
+    xp, moved_shape = _banded_view(x, lay, plan)
     lo_r, hi_r = _row_ranges(lo, hi, lay)
     br = min(256, lay.rows)
     idx, deq = clip_quant_tiles_2d(xp, lo_r, hi_r, n_levels, lay.sb_cols,
                                    block=(br, min(512, lay.cols)),
                                    interpret=interpret)
-    return (_unband(idx, lay, moved_shape, axis),
-            _unband(deq, lay, moved_shape, axis))
+    return (_unband(idx, lay, moved_shape, axis, plan),
+            _unband(deq, lay, moved_shape, axis, plan))
 
 
 def clip_quantize_channels(x, cmin, cmax, *, n_levels: int,
@@ -181,9 +203,10 @@ def clip_quantize_channels(x, cmin, cmax, *, n_levels: int,
                            interpret: bool | None = None):
     """Per-channel fused clip+quantize+dequantize: the one-spatial-block
     case of :func:`clip_quantize_tiled` (kept as a named entry point)."""
+    plan = TilePlan(channel_axis=channel_axis, channel_group_size=1,
+                    spatial_block_size=0, n_channels=cmin.size)
     return clip_quantize_tiled(x, cmin.reshape(-1, 1), cmax.reshape(-1, 1),
-                               n_levels=n_levels, channel_axis=channel_axis,
-                               channel_group_size=1, spatial_block_size=0,
+                               n_levels=n_levels, plan=plan,
                                interpret=interpret)
 
 
@@ -219,23 +242,18 @@ def _encode_fused_flat(x, *, cmin: float, cmax: float, n_levels: int,
     return packed.astype(jnp.uint8), hist
 
 
-@functools.partial(jax.jit, static_argnames=("n_levels", "bits",
-                                             "channel_axis",
-                                             "channel_group_size",
-                                             "spatial_block_size",
+@functools.partial(jax.jit, static_argnames=("n_levels", "bits", "plan",
                                              "interpret"))
 def _encode_fused_tiled(x, lo, hi, *, n_levels: int, bits: int,
-                        channel_axis: int, channel_group_size: int,
-                        spatial_block_size: int, interpret: bool):
+                        plan: TilePlan, interpret: bool):
     """Jitted tiled megakernel pass over the banded view."""
-    axis = channel_axis % x.ndim
-    lay = banded_layout(x.shape, axis, lo.shape[1], spatial_block_size,
-                        channel_group_size)
-    xp, _ = _banded_view(x, axis, lay)
+    lay = banded_layout(x.shape, plan)
+    xp, _ = _banded_view(x, lay, plan)
     lo_r, hi_r = _row_ranges(lo, hi, lay)
     packed, hist = encode_tiles_2d(xp, lo_r, hi_r, n_levels, bits,
                                    sb_cols=lay.sb_cols, bs=lay.bs,
                                    bs_last=lay.bs_last,
+                                   band_valid=lay.band_valid,
                                    block=(min(256, lay.rows),
                                           min(512, lay.cols)),
                                    interpret=interpret)
@@ -243,8 +261,7 @@ def _encode_fused_tiled(x, lo, hi, *, n_levels: int, bits: int,
 
 
 def encode_fused(x, lo, hi, *, n_levels: int, bits: int,
-                 channel_axis: int | None = None,
-                 channel_group_size: int = 1, spatial_block_size: int = 0,
+                 plan: TilePlan | None = None,
                  interpret: bool | None = None):
     """Single-pass fused encode: clip + quantize + bit-pack + histogram.
 
@@ -255,24 +272,22 @@ def encode_fused(x, lo, hi, *, n_levels: int, bits: int,
     host recovers coded-order indices with ``layout.unpack_indices`` and
     per-tile counts with ``layout.group_hists``.
 
-    ``channel_axis is None`` is the per-tensor mode (``lo``/``hi``
-    floats); otherwise ``lo``/``hi`` are (n_cgroups, n_sblocks) range
-    tables over the TilePlan's banded view.
+    ``plan is None`` is the per-tensor mode (``lo``/``hi`` floats);
+    otherwise ``lo``/``hi`` are (n_cgroups, n_sblocks) range tables over
+    the plan's banded view (1-D flat runs or 2-D row x column tiles --
+    the megakernel sees only bands either way).
     """
     interpret = _on_cpu() if interpret is None else interpret
-    if channel_axis is None:
+    if plan is None:
         lay = flat_layout(int(np.prod(np.shape(x))))
         packed, hist = _encode_fused_flat(x, cmin=float(lo), cmax=float(hi),
                                           n_levels=n_levels, bits=bits,
                                           interpret=interpret)
         return packed, hist, lay
-    lay = banded_layout(np.shape(x), channel_axis, lo.shape[1],
-                        spatial_block_size, channel_group_size)
+    lay = banded_layout(np.shape(x), plan)
     packed, hist = _encode_fused_tiled(
         x, jnp.asarray(lo, jnp.float32), jnp.asarray(hi, jnp.float32),
-        n_levels=n_levels, bits=bits, channel_axis=channel_axis,
-        channel_group_size=channel_group_size,
-        spatial_block_size=spatial_block_size, interpret=interpret)
+        n_levels=n_levels, bits=bits, plan=plan, interpret=interpret)
     return packed, hist, lay
 
 
@@ -290,14 +305,9 @@ def unpack_bytes(packed: np.ndarray, bits: int) -> np.ndarray:
     return vals.reshape(packed.shape[:-1] + (-1,)).astype(np.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("n_levels", "channel_axis",
-                                             "channel_group_size",
-                                             "n_sblocks",
-                                             "spatial_block_size",
+@functools.partial(jax.jit, static_argnames=("n_levels", "plan",
                                              "interpret"))
-def index_histogram_tiled(idx, *, n_levels: int, channel_axis: int,
-                          channel_group_size: int, n_sblocks: int,
-                          spatial_block_size: int,
+def index_histogram_tiled(idx, *, n_levels: int, plan: TilePlan,
                           interpret: bool | None = None):
     """Per-tile index histogram, in-graph: (n_cgroups, n_sblocks, N).
 
@@ -307,12 +317,12 @@ def index_histogram_tiled(idx, *, n_levels: int, channel_axis: int,
     choices never need the indices on the host.
     """
     interpret = _on_cpu() if interpret is None else interpret
-    axis = channel_axis % idx.ndim
-    lay = banded_layout(idx.shape, axis, n_sblocks, spatial_block_size,
-                        channel_group_size)
-    idx_p, _ = _banded_view(idx.astype(jnp.int32), axis, lay)
+    n_sblocks = plan.n_sblocks
+    lay = banded_layout(idx.shape, plan)
+    idx_p, _ = _banded_view(idx.astype(jnp.int32), lay, plan)
     hist = index_histogram_tiles_2d(idx_p, n_levels, lay.sb_cols, lay.bs,
                                     bs_last=lay.bs_last,
+                                    band_valid=lay.band_valid,
                                     block=(min(256, lay.rows),
                                            min(512, lay.cols)),
                                     interpret=interpret)
@@ -327,13 +337,10 @@ def index_histogram_tiled(idx, *, n_levels: int, channel_axis: int,
     return h.reshape(n_cgroups, gs, n_sblocks, n_levels).sum(axis=1)
 
 
-@functools.partial(jax.jit, static_argnames=("n_levels", "channel_axis",
-                                             "channel_group_size",
-                                             "spatial_block_size",
+@functools.partial(jax.jit, static_argnames=("n_levels", "plan",
                                              "interpret"))
 def ecsq_quantize_tiled(x, lo, hi, thresholds, levels, *, n_levels: int,
-                        channel_axis: int, channel_group_size: int,
-                        spatial_block_size: int,
+                        plan: TilePlan,
                         interpret: bool | None = None):
     """Per-tile ECSQ quantize + dequantize through the Pallas kernel.
 
@@ -343,11 +350,10 @@ def ecsq_quantize_tiled(x, lo, hi, thresholds, levels, *, n_levels: int,
     indices vs the jnp threshold-compare path (same ``xc >= t`` formula).
     """
     interpret = _on_cpu() if interpret is None else interpret
-    axis = channel_axis % x.ndim
-    n_sblocks = lo.shape[1]
-    lay = banded_layout(x.shape, axis, n_sblocks, spatial_block_size,
-                        channel_group_size)
-    xp, moved_shape = _banded_view(x, axis, lay)
+    axis = plan.channel_axis % x.ndim
+    n_sblocks = plan.n_sblocks
+    lay = banded_layout(x.shape, plan)
+    xp, moved_shape = _banded_view(x, lay, plan)
     lo_r, hi_r = _row_ranges(lo, hi, lay)
     # expand the flat-tile tables to per-(row, band) MAX_LEVELS-wide rows:
     # thresholds pad with +inf (no bin past N), levels zero-pad
@@ -367,8 +373,8 @@ def ecsq_quantize_tiled(x, lo, hi, thresholds, levels, *, n_levels: int,
         n_levels, lay.sb_cols,
         block=(min(256, lay.rows), min(512, lay.cols)),
         interpret=interpret)
-    return (_unband(idx, lay, moved_shape, axis),
-            _unband(deq, lay, moved_shape, axis))
+    return (_unband(idx, lay, moved_shape, axis, plan),
+            _unband(deq, lay, moved_shape, axis, plan))
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "interpret"))

@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .fused_clip_quant import band_valid_array
+
 DEFAULT_BLOCK = (256, 512)
 MAX_LEVELS = 64
 
@@ -40,13 +42,14 @@ def _kernel(idx_ref, hist_ref, *, n_levels: int):
     jax.lax.fori_loop(0, n_levels, body, 0)
 
 
-def _kernel_tiles(idx_ref, hist_ref, *, n_levels: int, bc: int,
-                  sb_cols: int, bs: int, bs_last: int, n_sblocks: int):
+def _kernel_tiles(idx_ref, valid_ref, hist_ref, *, n_levels: int, bc: int,
+                  sb_cols: int):
     """Per-(row, spatial-band) histogram: the tile-resolved variant of
     :func:`_kernel`, sharing the fused encode megakernel's output layout
     (see ``fused_clip_quant._kernel_encode``) so tile-aware in-graph rate
-    estimation needs no packed-bytes pass.  Band-column padding
-    (``col_in_band >= bs``, and the last band's shorter ``bs_last``) is
+    estimation needs no packed-bytes pass.  Band-column padding beyond
+    the band's valid count (the (1, 1) ``valid_ref`` cell -- 2-D plans
+    have ragged edge tiles, so every band carries its own count) is
     masked out; padded rows are dropped host-side."""
     j = pl.program_id(1)
     band_col = (j % (sb_cols // bc)) * bc
@@ -56,7 +59,7 @@ def _kernel_tiles(idx_ref, hist_ref, *, n_levels: int, bc: int,
         hist_ref[...] = jnp.zeros_like(hist_ref)
 
     idx = idx_ref[...]
-    limit = jnp.where(j // (sb_cols // bc) == n_sblocks - 1, bs_last, bs)
+    limit = valid_ref[0, 0]
     valid = jax.lax.broadcasted_iota(jnp.int32, idx.shape, 1) \
         + band_col < limit
     hlane = jax.lax.broadcasted_iota(jnp.int32, hist_ref.shape, 1)
@@ -71,10 +74,12 @@ def _kernel_tiles(idx_ref, hist_ref, *, n_levels: int, bc: int,
 
 
 def index_histogram_tiles_2d(idx, n_levels: int, sb_cols: int, bs: int,
-                             bs_last: int | None = None,
+                             bs_last: int | None = None, band_valid=None,
                              block=DEFAULT_BLOCK, interpret: bool = False):
-    """idx: (R, C) int32 banded view, C == n_sblocks * sb_cols.  Returns
-    (R, n_sblocks * MAX_LEVELS) int32 per-(row, band) counts."""
+    """idx: (R, C) int32 banded view, C == n_sblocks * sb_cols;
+    ``band_valid`` (n_sblocks,) optionally gives explicit per-band valid
+    counts (2-D ragged tiles).  Returns (R, n_sblocks * MAX_LEVELS) int32
+    per-(row, band) counts."""
     if n_levels > MAX_LEVELS:
         raise ValueError(f"n_levels {n_levels} > {MAX_LEVELS}")
     r, c = idx.shape
@@ -87,19 +92,19 @@ def index_histogram_tiles_2d(idx, n_levels: int, sb_cols: int, bs: int,
         bc -= 128
     grid = (r // br, c // bc)
     bpb = sb_cols // bc
+    valid = band_valid_array(n_sblocks, bs, bs_last, band_valid)
     return pl.pallas_call(
         functools.partial(_kernel_tiles, n_levels=n_levels, bc=bc,
-                          sb_cols=sb_cols, bs=bs,
-                          bs_last=bs if bs_last is None else bs_last,
-                          n_sblocks=n_sblocks),
+                          sb_cols=sb_cols),
         grid=grid,
-        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j))],
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+                  pl.BlockSpec((1, 1), lambda i, j, bpb=bpb: (0, j // bpb))],
         out_specs=pl.BlockSpec((br, MAX_LEVELS),
                                lambda i, j, bpb=bpb: (i, j // bpb)),
         out_shape=jax.ShapeDtypeStruct((r, n_sblocks * MAX_LEVELS),
                                        jnp.int32),
         interpret=interpret,
-    )(idx)
+    )(idx, valid)
 
 
 def index_histogram_2d(idx, n_levels: int, block=DEFAULT_BLOCK,

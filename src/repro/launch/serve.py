@@ -40,9 +40,12 @@ def _calibrate_warmup(cfg, params, args):
     from ..data import DataConfig, stream
     from ..models import forward
 
-    # "tile" (fixed spatial extent) is not offered here: serving tensors
-    # change spatial size between prefill and decode steps, so only the
-    # extent-free granularities calibrate from a warm-up pass
+    # "tile" (fixed spatial extent -- 1-D spatial_block_size or the 2-D
+    # spatial_block_hw row x column split) is not offered here: serving
+    # tensors change spatial size between prefill and decode steps, so
+    # only the extent-free granularities calibrate from a warm-up pass
+    # (fixed-shape deployments get 2-D tiles via CodecConfig directly;
+    # see examples/edge_cloud_demo.py --granularity tile2d)
     ccfg = CodecConfig(n_levels=args.codec_levels, clip_mode=args.clip_mode,
                        constrain_cmin_zero=False,
                        granularity=args.granularity, channel_axis=-1,
@@ -148,7 +151,12 @@ def main():
                     choices=["tensor", "channel"],
                     help="codec granularity at the split boundary: "
                          "'channel' calibrates one range per d_model "
-                         "channel group (TilePlan, v3 streams)")
+                         "channel group (TilePlan, v3 streams).  Spatial "
+                         "('tile') granularities -- incl. the 2-D "
+                         "spatial_block_hw split, v4 streams -- pin the "
+                         "spatial extent at calibration and are for "
+                         "fixed-shape boundaries, not the varying "
+                         "prefill/decode shapes served here")
     ap.add_argument("--channel-group", type=int, default=1,
                     help="channels per range group for "
                          "--granularity channel")

@@ -42,20 +42,26 @@ class Rung:
     ``granularity="base"`` (what a bare int normalizes to) means "inherit
     the CodecBank's base config" -- only ``n_levels`` is overridden, so
     int ladders keep their pre-Rung semantics whatever granularity the
-    bank was built with.
+    bank was built with.  ``spatial_block_hw=(bh, bw)`` makes a "tile"
+    rung a 2-D (row x column) split of the conv feature map's spatial
+    grid (v4 streams); ``(0, 0)`` keeps the 1-D flat-run split of
+    ``spatial_block_size``.
     """
 
     n_levels: int
     granularity: str = "base"
     channel_group_size: int = 1
     spatial_block_size: int = 0
+    spatial_block_hw: tuple[int, int] = (0, 0)
 
     def __str__(self) -> str:
         if self.granularity in ("base", "tensor"):
             return f"N{self.n_levels}"
         tag = f"N{self.n_levels}/{self.granularity}" \
               f"@g{self.channel_group_size}"
-        if self.spatial_block_size:
+        if self.spatial_block_hw != (0, 0):
+            tag += f"s{self.spatial_block_hw[0]}x{self.spatial_block_hw[1]}"
+        elif self.spatial_block_size:
             tag += f"s{self.spatial_block_size}"
         return tag
 
@@ -71,9 +77,12 @@ def rung_of_codec(codec) -> Rung:
     """The rung a calibrated codec actually operates at (for attributing
     measured rates to the right ladder entry)."""
     cfg = codec.config
+    bhw = getattr(cfg, "spatial_block_hw", None)
     return Rung(n_levels=cfg.n_levels, granularity=cfg.granularity,
                 channel_group_size=max(1, cfg.channel_group_size),
-                spatial_block_size=cfg.spatial_block_size)
+                spatial_block_size=cfg.spatial_block_size,
+                spatial_block_hw=(0, 0) if bhw is None
+                else (int(bhw[0]), int(bhw[1])))
 
 
 DEFAULT_LADDER = (2, 3, 4, 6, 8, 12, 16, 24, 32)
@@ -295,7 +304,10 @@ class CodecBank:
                     self.base_config, n_levels=rung.n_levels,
                     granularity=rung.granularity,
                     channel_group_size=rung.channel_group_size,
-                    spatial_block_size=rung.spatial_block_size)
+                    spatial_block_size=rung.spatial_block_size,
+                    spatial_block_hw=None
+                    if rung.spatial_block_hw == (0, 0)
+                    else rung.spatial_block_hw)
             self._codecs[rung] = self._calibrate(cfg, samples=self.samples)
         return self._codecs[rung]
 

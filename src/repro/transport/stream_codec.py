@@ -32,10 +32,13 @@ from .framing import (FT_CHUNK, FT_END, FT_FEEDBACK, FT_HEADER, Frame,
 # amortizes most of it.  256Ki elements still gives a multi-MB tensor a
 # several-stage pipeline at near-one-shot encode cost.  Tiled codecs
 # round the chunk size up to the tile run length in coded order
-# (TilePlan.align_chunk_elems), so chunk boundaries align to tiles and
-# each chunk's chunk-static entropy probabilities see tile-homogeneous
-# statistics; ChunkStreamDecoder stays bit-exact and out-of-order
-# tolerant either way (chunks address element ranges, not tiles).
+# (TilePlan.align_chunk_elems: the uniform block run when every spatial
+# block -- flat 1-D run or 2-D row x column tile -- has the same element
+# count, a whole channel row otherwise), so chunk boundaries align to
+# tiles and each chunk's chunk-static entropy probabilities see
+# tile-homogeneous statistics; ChunkStreamDecoder stays bit-exact and
+# out-of-order tolerant either way (chunks address element ranges, not
+# tiles).
 DEFAULT_CHUNK_ELEMS = 1 << 18
 
 _END_FMT = "<I"            # n_chunks sent (completeness check)

@@ -1,0 +1,71 @@
+"""Regenerate the frozen stream-conformance vectors under tests/golden/.
+
+    PYTHONPATH=src python tests/regen_golden.py [--check]
+
+Writes, for every case in ``tests/golden_cases.py``:
+
+    <name>.input.npy     the deterministic input tensor
+    <name>.stream.bin    the encoded bitstream (or length-prefixed
+                         payload sequence for streamed cases)
+    <name>.decoded.npy   the bit-exact reconstruction of the stream
+
+``--check`` regenerates in memory and reports diffs without writing --
+the same comparison ``tests/test_stream_conformance.py`` gates in CI.
+
+Only regenerate when a format change is *intentional*: a diff in an
+existing ``.stream.bin`` means previously written streams no longer
+decode (or re-encode differently), which is a wire-compatibility break
+-- new formats must add a header version instead of mutating an old one.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import sys
+
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+
+from golden_cases import CASES  # noqa: E402
+
+GOLDEN_DIR = pathlib.Path(__file__).resolve().parent / "golden"
+
+
+def generate(case):
+    x = case.make_input()
+    stream = case.encode(x)
+    decoded = case.decode(stream, x)
+    return x, stream, np.asarray(decoded, np.float32)
+
+
+def main(argv) -> int:
+    check = "--check" in argv
+    GOLDEN_DIR.mkdir(exist_ok=True)
+    n_diff = 0
+    for case in CASES:
+        x, stream, decoded = generate(case)
+        paths = {
+            "input": GOLDEN_DIR / f"{case.name}.input.npy",
+            "stream": GOLDEN_DIR / f"{case.name}.stream.bin",
+            "decoded": GOLDEN_DIR / f"{case.name}.decoded.npy",
+        }
+        if check:
+            ok = (paths["stream"].exists()
+                  and paths["stream"].read_bytes() == stream
+                  and np.array_equal(np.load(paths["input"]), x)
+                  and np.array_equal(np.load(paths["decoded"]), decoded))
+            print(f"{case.name}: {'ok' if ok else 'DIFFERS'} "
+                  f"({len(stream)} stream bytes)")
+            n_diff += not ok
+            continue
+        np.save(paths["input"], x)
+        paths["stream"].write_bytes(stream)
+        np.save(paths["decoded"], decoded)
+        print(f"wrote {case.name}: {x.size} elems -> "
+              f"{len(stream)} stream bytes")
+    return 1 if n_diff else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -18,9 +18,17 @@ from repro.core.binarization import index_to_context_bits
 
 @pytest.fixture(autouse=True)
 def _clean_pools():
+    # restore (not just pop) the pool env: the CI entropy_coders matrix
+    # exports these for the whole pytest run, and later test files must
+    # still see them -- only values set *by a test here* are undone
+    before = {k: os.environ.get(k)
+              for k in ("REPRO_RANS_PROCS", "REPRO_RANS_THREADS")}
     yield
-    os.environ.pop("REPRO_RANS_PROCS", None)
-    os.environ.pop("REPRO_RANS_THREADS", None)
+    for k, v in before.items():
+        if v is None:
+            os.environ.pop(k, None)
+        else:
+            os.environ[k] = v
     rans._shutdown_proc_pool()
 
 

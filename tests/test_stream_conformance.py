@@ -1,0 +1,122 @@
+"""Stream-conformance suite: frozen golden bitstreams for every wire
+format the codec has shipped (v1 seed, v2 per-tensor/ECSQ/legacy-channel,
+v3 1-D tile, v4 2-D tile; one-shot and chunked-stream forms).
+
+Asserts *byte-exact* encode and *bit-exact* decode against the committed
+vectors under ``tests/golden/``, so a refactor of the quantizer, entropy
+stage, header layout or coded order cannot silently break compatibility
+with streams already on the wire.  Regenerate (only for intentional
+format changes) with ``python tests/regen_golden.py``; diffs in existing
+``.stream.bin`` files are wire-compatibility breaks and need a new
+header version instead.
+"""
+
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+
+from golden_cases import CASES, unpack_payloads  # noqa: E402
+from repro.core.codec import (FLAG_CHANNEL, FLAG_ECSQ, FLAG_TILE,
+                              FLAG_TILE2D, FLAG_V2,
+                              parse_header)  # noqa: E402
+
+GOLDEN_DIR = pathlib.Path(__file__).resolve().parent / "golden"
+_IDS = [c.name for c in CASES]
+
+
+def _load(case):
+    stream = (GOLDEN_DIR / f"{case.name}.stream.bin").read_bytes()
+    x = np.load(GOLDEN_DIR / f"{case.name}.input.npy")
+    decoded = np.load(GOLDEN_DIR / f"{case.name}.decoded.npy")
+    return x, stream, decoded
+
+
+@pytest.mark.parametrize("case", CASES, ids=_IDS)
+class TestGoldenStreams:
+    def test_input_deterministic(self, case):
+        """The case's input construction still reproduces the committed
+        tensor (separates "rng/input drifted" from "format broke")."""
+        np.testing.assert_array_equal(case.make_input(), _load(case)[0])
+
+    def test_encode_byte_exact(self, case):
+        """Encoding the frozen input reproduces the frozen bytes --
+        header layout, coded order and entropy payload all unchanged.
+        Decode-only legacy formats freeze their layout through the
+        manual builder the seed/PR-1 encoders used."""
+        x, stream, _ = _load(case)
+        assert case.encode(x) == stream, (
+            f"{case.name}: encoder output differs from the committed "
+            "golden stream -- this is a wire-format change")
+
+    def test_decode_bit_exact(self, case):
+        x, stream, decoded = _load(case)
+        got = np.asarray(case.decode(stream, x), np.float32)
+        assert got.dtype == decoded.dtype and got.shape == decoded.shape
+        np.testing.assert_array_equal(got, decoded)
+
+
+class TestGoldenCoverage:
+    """The committed vectors actually span the formats they claim to."""
+
+    def _flags(self, name):
+        stream = (GOLDEN_DIR / f"{name}.stream.bin").read_bytes()
+        return parse_header(stream).flags
+
+    def test_v1_has_no_flags(self):
+        assert self._flags("v1_seed_uniform") == 0
+
+    def test_v2_flags(self):
+        assert self._flags("v2_uniform_rans") == FLAG_V2
+        assert self._flags("v2_ecsq") == FLAG_V2 | FLAG_ECSQ
+        assert self._flags("v2_channel_legacy") == FLAG_V2 | FLAG_CHANNEL
+
+    def test_v3_v4_flags(self):
+        assert self._flags("v3_tile") == FLAG_V2 | FLAG_TILE
+        assert self._flags("v4_tile2d") == FLAG_V2 | FLAG_TILE2D
+        assert self._flags("v4_tile2d_ecsq") == FLAG_V2 | FLAG_TILE2D
+
+    def test_v4_header_carries_2d_geometry(self):
+        stream = (GOLDEN_DIR / "v4_tile2d.stream.bin").read_bytes()
+        hdr = parse_header(stream)
+        assert hdr.plan is not None and hdr.plan.is_2d
+        assert hdr.plan.spatial_block_hw == (4, 3)
+        assert hdr.plan.spatial_hw == (11, 9)
+        ecsq = parse_header(
+            (GOLDEN_DIR / "v4_tile2d_ecsq.stream.bin").read_bytes())
+        assert ecsq.tile_levels is not None
+        assert ecsq.tile_levels.shape == (ecsq.plan.n_tiles, 4)
+
+    def test_streamed_chunks_align_to_tiles(self):
+        """The committed streamed vectors chunk on tile-aligned element
+        boundaries (the v3/v4 chunk-alignment rule): the stream-meta
+        chunk size must be a whole multiple of the plan's tile run
+        length in coded order."""
+        from repro.core.codec import ChunkStreamDecoder
+        for name in ("v3_tile_stream", "v4_tile2d_stream"):
+            payloads = unpack_payloads(
+                (GOLDEN_DIR / f"{name}.stream.bin").read_bytes())
+            assert len(payloads) > 2, "streamed vector must be chunked"
+            dec = ChunkStreamDecoder(payloads[0])
+            plan = dec.header.plan
+            assert plan is not None
+            m = dec.header.n_elems // plan.n_channels
+            sizes = plan.band_sizes(m)
+            run = int(sizes[0]) if (sizes == sizes[0]).all() else m
+            assert dec.chunk_elems % run == 0, (
+                f"{name}: chunk size {dec.chunk_elems} splits the "
+                f"{run}-element tile run")
+            assert dec.n_chunks == -(-dec.header.n_elems
+                                     // dec.chunk_elems)
+
+    def test_coder_ids(self):
+        """Payload coder-id bytes stay stable (1-byte id after header)."""
+        serial = (GOLDEN_DIR / "v2_uniform_serial.stream.bin").read_bytes()
+        hdr = parse_header(serial)
+        assert serial[hdr.payload_off] == 0          # serial CABAC
+        rans = (GOLDEN_DIR / "v2_uniform_rans.stream.bin").read_bytes()
+        hdr = parse_header(rans)
+        assert rans[hdr.payload_off] == 1            # vectorized rANS

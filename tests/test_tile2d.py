@@ -1,0 +1,292 @@
+"""2-D (row x column) TilePlan tests: v4 self-describing streams,
+coded-order permutation invariants, backend bit-exactness, fused-vs-
+unfused parity, streamed-vs-one-shot parity, and hypothesis sweeps over
+random (C, H, W, channel-group, bh, bw) geometries including
+non-multiple tile sizes and degenerate 1x1 / full-extent tiles."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import CodecConfig, TilePlan, calibrate
+from repro.core.backend import get_backend
+from repro.core.codec import FLAG_TILE2D, parse_header
+from repro.core.tiling import spatial_grid
+
+try:  # hypothesis is optional: only the property sweeps need it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _conv_features(shape, axis, seed=0):
+    """Conv-map-like features whose statistics drift along channels AND
+    both spatial axes (the case 2-D tiles exist for)."""
+    rng = np.random.default_rng(seed)
+    axis = axis % len(shape)
+    h, w = spatial_grid(shape, axis)
+    c = shape[axis]
+    x = rng.exponential(1.0, (c, h, w)).astype(np.float32)
+    x += np.linspace(0.0, 5.0, c)[:, None, None]
+    x += np.linspace(0.0, 4.0, h)[None, :, None]
+    x += np.linspace(0.0, 3.0, w)[None, None, :]
+    moved = [shape[axis]] + [s for d, s in enumerate(shape) if d != axis]
+    return np.ascontiguousarray(
+        np.moveaxis(x.reshape(moved), 0, axis)).astype(np.float32)
+
+
+def _codec2d(x, axis, gc, bh, bw, n_levels=4, use_ecsq=False):
+    return calibrate(CodecConfig(n_levels=n_levels, clip_mode="minmax",
+                                 constrain_cmin_zero=False,
+                                 granularity="tile", channel_axis=axis,
+                                 channel_group_size=gc,
+                                 spatial_block_hw=(bh, bw),
+                                 use_ecsq=use_ecsq),
+                     samples=x)
+
+
+# (shape, channel_axis, channel_group, bh, bw): non-multiples on purpose
+GEOMETRIES_2D = [
+    ((1, 5, 13, 11), 1, 2, 4, 3),     # NCHW, ragged rows + cols
+    ((6, 9, 4), -1, 1, 3, 3),         # NHWC-ish, rows tile exactly
+    ((3, 10, 10), 0, 3, 1, 1),        # degenerate 1x1 blocks
+    ((2, 7, 9), 0, 2, 7, 9),          # full-extent single tile per group
+    ((4, 6, 5), 0, 4, 100, 100),      # blocks larger than the grid
+    ((2, 3, 8, 7), -1, 7, 5, 2),      # batch folded into rows, gc > C
+]
+
+
+class TestTilePlan2DGeometry:
+    def test_sblock_ids_band_sizes_consistent(self):
+        plan = TilePlan(channel_axis=0, channel_group_size=1,
+                        spatial_block_size=0, n_channels=2,
+                        spatial_extent=13 * 11, spatial_hw=(13, 11),
+                        spatial_block_hw=(4, 3))
+        ids = plan.sblock_ids(13 * 11)
+        sizes = plan.band_sizes(13 * 11)
+        np.testing.assert_array_equal(
+            np.bincount(ids, minlength=plan.n_sblocks), sizes)
+        assert sizes.sum() == 13 * 11
+        assert plan.n_sblocks == 4 * 4 and plan.n_rblocks == 4
+
+    def test_coded_order_roundtrip(self):
+        for shape, axis, gc, bh, bw in GEOMETRIES_2D:
+            x = _conv_features(shape, axis, seed=3)
+            codec = _codec2d(x, axis, gc, bh, bw)
+            coded = codec.plan.to_coded_order(x)
+            back = codec.plan.from_coded_order(coded, x.shape)
+            np.testing.assert_array_equal(back, x)
+
+    def test_coded_order_tiles_contiguous(self):
+        """Every tile's elements form one contiguous run per coded row."""
+        shape, axis, gc, bh, bw = GEOMETRIES_2D[0]
+        x = _conv_features(shape, axis)
+        codec = _codec2d(x, axis, gc, bh, bw)
+        plan = codec.plan
+        m = plan.spatial_extent
+        tid_coded = plan.sblock_ids(m)[plan.spatial_perm(m)]
+        bounds = plan.coded_band_bounds(m)
+        for b in range(plan.n_sblocks):
+            seg = tid_coded[bounds[b]:bounds[b + 1]]
+            assert (seg == b).all()
+
+    def test_align_chunk_elems(self):
+        x = _conv_features((1, 4, 12, 8), 1)
+        codec = _codec2d(x, 1, 2, 4, 4)      # exact tiling: run = 16
+        assert codec.plan.align_chunk_elems(10, x.shape) == 16
+        assert codec.plan.align_chunk_elems(17, x.shape) == 32
+        ragged = _codec2d(x, 1, 2, 5, 3)     # ragged: run = whole row
+        assert ragged.plan.align_chunk_elems(10, x.shape) == 96
+
+    def test_spatial_grid_rule(self):
+        assert spatial_grid((1, 64, 56, 56), 1) == (56, 56)     # NCHW
+        assert spatial_grid((2, 56, 57, 64), -1) == (2 * 56, 57)  # NHWC
+        assert spatial_grid((64, 7), 1) == (1, 64)
+        assert spatial_grid((64,), 0) == (1, 1)
+
+    def test_invalid_plans_rejected(self):
+        with pytest.raises(ValueError):
+            TilePlan(channel_axis=0, channel_group_size=1,
+                     spatial_block_size=0, n_channels=2, spatial_extent=12,
+                     spatial_hw=(3, 5), spatial_block_hw=(2, 2))
+        with pytest.raises(ValueError):
+            TilePlan(channel_axis=0, channel_group_size=1,
+                     spatial_block_size=4, n_channels=2, spatial_extent=12,
+                     spatial_hw=(3, 4), spatial_block_hw=(2, 2))
+        with pytest.raises(ValueError):
+            TilePlan(channel_axis=0, channel_group_size=1,
+                     spatial_block_size=0, n_channels=2, spatial_extent=12,
+                     spatial_hw=(3, 4), spatial_block_hw=None)
+        with pytest.raises(ValueError):
+            calibrate(CodecConfig(granularity="tile", spatial_block_size=8,
+                                  spatial_block_hw=(2, 2)),
+                      samples=np.zeros((4, 6, 6), np.float32))
+
+
+class TestTile2DCodec:
+    @pytest.mark.parametrize("geom", GEOMETRIES_2D,
+                             ids=[str(g) for g in GEOMETRIES_2D])
+    def test_roundtrip_and_header(self, geom):
+        shape, axis, gc, bh, bw = geom
+        x = _conv_features(shape, axis)
+        codec = _codec2d(x, axis, gc, bh, bw)
+        blob = codec.encode(x)
+        hdr = parse_header(blob)
+        assert hdr.flags & FLAG_TILE2D
+        assert hdr.plan.spatial_block_hw == (bh, bw)
+        assert hdr.plan.spatial_hw == spatial_grid(shape, axis)
+        assert hdr.plan.n_tiles == codec.plan.n_tiles
+        y = codec.decode(blob)
+        ref = np.asarray(codec.dequantize(codec.quantize(jnp.asarray(x))))
+        np.testing.assert_array_equal(y, ref)
+        # every element obeys its own tile's clip range after dequant
+        lo, hi = codec.tile_tables()
+        tid = codec.plan.tile_ids(x.shape)
+        assert (y >= lo.reshape(-1)[tid] - 1e-5).all()
+        assert (y <= hi.reshape(-1)[tid] + 1e-5).all()
+
+    @pytest.mark.parametrize("geom", GEOMETRIES_2D,
+                             ids=[str(g) for g in GEOMETRIES_2D])
+    def test_fused_equals_unfused(self, geom):
+        shape, axis, gc, bh, bw = geom
+        x = _conv_features(shape, axis, seed=1)
+        codec = _codec2d(x, axis, gc, bh, bw)
+        assert codec.encode(x) == codec.encode(x, fused=False)
+
+    @pytest.mark.parametrize("geom", GEOMETRIES_2D,
+                             ids=[str(g) for g in GEOMETRIES_2D])
+    def test_jnp_kernel_bit_identical(self, geom):
+        shape, axis, gc, bh, bw = geom
+        x = _conv_features(shape, axis, seed=2)
+        codec = _codec2d(x, axis, gc, bh, bw)
+        spec = codec.spec()
+        jb, kb = get_backend("jnp"), get_backend("kernel_interpret")
+        xj = jnp.asarray(x)
+        np.testing.assert_array_equal(np.asarray(jb.quantize(xj, spec)),
+                                      np.asarray(kb.quantize(xj, spec)))
+        cj, hj = jb.encode_fused(xj, spec, codec.bits_per_index(),
+                                 want_hist=True)
+        ck, hk = kb.encode_fused(xj, spec, codec.bits_per_index(),
+                                 want_hist=True)
+        np.testing.assert_array_equal(cj, ck)
+        np.testing.assert_array_equal(hj, hk)
+        assert int(np.sum(hj)) == x.size
+        idx = jb.quantize(xj, spec)
+        np.testing.assert_array_equal(
+            np.asarray(jb.tile_histogram(idx, spec)),
+            np.asarray(kb.tile_histogram(idx, spec)))
+
+    def test_streamed_equals_one_shot(self):
+        shape, axis, gc, bh, bw = GEOMETRIES_2D[0]
+        x = _conv_features(shape, axis, seed=4)
+        codec = _codec2d(x, axis, gc, bh, bw)
+        one_shot = codec.decode(codec.encode(x))
+        for chunk in (1, 37, 1 << 18):
+            payloads = list(codec.encode_stream(x, chunk_elems=chunk))
+            np.testing.assert_array_equal(codec.decode_stream(payloads),
+                                          one_shot)
+        # out-of-order chunk arrival
+        payloads = list(codec.encode_stream(x, chunk_elems=37))
+        shuffled = [payloads[0]] + payloads[:0:-1]
+        np.testing.assert_array_equal(codec.decode_stream(shuffled),
+                                      one_shot)
+
+    def test_ecsq_2d(self):
+        shape, axis, gc, bh, bw = GEOMETRIES_2D[1]
+        x = _conv_features(shape, axis, seed=5)
+        codec = _codec2d(x, axis, gc, bh, bw, use_ecsq=True)
+        assert codec.tile_ecsq is not None
+        assert codec.tile_ecsq.levels.shape == (codec.plan.n_tiles, 4)
+        blob = codec.encode(x)
+        hdr = parse_header(blob)
+        assert hdr.tile_levels is not None
+        ref = np.asarray(codec.dequantize(codec.quantize(jnp.asarray(x))))
+        np.testing.assert_array_equal(codec.decode(blob), ref)
+        spec = codec.spec()
+        jb, kb = get_backend("jnp"), get_backend("kernel_interpret")
+        np.testing.assert_array_equal(
+            np.asarray(jb.quantize(jnp.asarray(x), spec)),
+            np.asarray(kb.quantize(jnp.asarray(x), spec)))
+
+    def test_receiver_needs_no_state(self):
+        shape, axis, gc, bh, bw = GEOMETRIES_2D[0]
+        x = _conv_features(shape, axis, seed=6)
+        sender = _codec2d(x, axis, gc, bh, bw)
+        receiver = calibrate(CodecConfig(n_levels=8, clip_mode="manual",
+                                         manual_cmin=-1.0, manual_cmax=1.0))
+        np.testing.assert_array_equal(receiver.decode(sender.encode(x)),
+                                      sender.decode(sender.encode(x)))
+
+    def test_rate_estimate_matches_tile_hists(self):
+        shape, axis, gc, bh, bw = GEOMETRIES_2D[0]
+        x = _conv_features(shape, axis, seed=7)
+        codec = _codec2d(x, axis, gc, bh, bw)
+        rate = float(codec.estimate_rate(jnp.asarray(x)))
+        tile_bits = np.asarray(codec.tile_rate_bits(jnp.asarray(x)))
+        assert tile_bits.shape == (codec.plan.n_cgroups,
+                                   codec.plan.n_sblocks)
+        assert rate == pytest.approx(tile_bits.sum() / x.size, rel=1e-5)
+
+    def test_wrong_extent_rejected(self):
+        x = _conv_features((1, 4, 8, 8), 1)
+        codec = _codec2d(x, 1, 2, 4, 4)
+        with pytest.raises(ValueError):
+            codec.encode(_conv_features((1, 4, 8, 9), 1))
+
+    def test_wrong_grid_same_extent_rejected(self):
+        """Same flattened extent but a different (H, W) grid must be
+        rejected -- the 2-D tile map is positional in both axes, so a
+        reshaped tensor would silently mis-tile every block."""
+        x = _conv_features((1, 4, 8, 8), 1)
+        codec = _codec2d(x, 1, 2, 4, 4)
+        with pytest.raises(ValueError, match="grid"):
+            codec.encode(x.reshape(1, 4, 4, 16))
+        with pytest.raises(ValueError, match="grid"):
+            codec.quantize(jnp.asarray(x).reshape(1, 4, 16, 4))
+
+    def test_spatial_block_hw_needs_tile_granularity(self):
+        x = _conv_features((1, 4, 8, 8), 1)
+        for grain in ("tensor", "channel"):
+            with pytest.raises(ValueError, match="tile"):
+                calibrate(CodecConfig(granularity=grain, channel_axis=1,
+                                      spatial_block_hw=(4, 4)), samples=x)
+
+
+if HAVE_HYPOTHESIS:
+    class TestTile2DProperties:
+        @settings(max_examples=25, deadline=None)
+        @given(st.integers(1, 6), st.integers(1, 9), st.integers(1, 9),
+               st.integers(1, 7), st.integers(1, 10), st.integers(1, 10),
+               st.integers(2, 5))
+        def test_random_geometry_roundtrip(self, c, h, w, gc, bh, bw,
+                                           n_levels):
+            x = _conv_features((c, h, w), 0, seed=c * 1000 + h * 100 + w)
+            codec = _codec2d(x, 0, gc, bh, bw, n_levels=n_levels)
+            blob = codec.encode(x)
+            assert blob == codec.encode(x, fused=False)
+            ref = np.asarray(codec.dequantize(
+                codec.quantize(jnp.asarray(x))))
+            np.testing.assert_array_equal(codec.decode(blob), ref)
+            payloads = list(codec.encode_stream(
+                x, chunk_elems=max(1, h * w // 3)))
+            np.testing.assert_array_equal(codec.decode_stream(payloads),
+                                          ref)
+
+        @settings(max_examples=15, deadline=None)
+        @given(st.integers(1, 5), st.integers(1, 8), st.integers(1, 8),
+               st.integers(1, 6), st.integers(1, 9), st.integers(1, 9))
+        def test_random_geometry_backend_parity(self, c, h, w, gc, bh, bw):
+            x = _conv_features((c, h, w), 0, seed=c * 97 + h * 13 + w)
+            codec = _codec2d(x, 0, gc, bh, bw)
+            spec = codec.spec()
+            jb, kb = get_backend("jnp"), get_backend("kernel_interpret")
+            xj = jnp.asarray(x)
+            np.testing.assert_array_equal(np.asarray(jb.quantize(xj, spec)),
+                                          np.asarray(kb.quantize(xj, spec)))
+            cj, hj = jb.encode_fused(xj, spec, codec.bits_per_index(),
+                                     want_hist=True)
+            ck, hk = kb.encode_fused(xj, spec, codec.bits_per_index(),
+                                     want_hist=True)
+            np.testing.assert_array_equal(cj, ck)
+            np.testing.assert_array_equal(hj, hk)

@@ -185,6 +185,9 @@ class TestShardedRans:
     def test_auto_mode_selects_sharded_only_with_threads(self, monkeypatch):
         rng = np.random.default_rng(1)
         idx = rng.integers(0, 4, 2_000_000).astype(np.int32)
+        # the proc pool outranks the thread pool in auto mode: pin this
+        # test's coder choice regardless of the CI coder-matrix env
+        monkeypatch.delenv("REPRO_RANS_PROCS", raising=False)
         monkeypatch.setenv("REPRO_RANS_THREADS", "1")
         assert cabac.encode_indices(idx, 4, mode="auto")[0] \
             == cabac._CODER_RANS
