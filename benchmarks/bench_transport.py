@@ -1,5 +1,6 @@
-"""Transport benchmark: streaming overlap gain + rate-controller tracking
-(the ISSUE-2 acceptance gates).
+"""Transport benchmark: streaming overlap gain, rate-controller tracking
+(the ISSUE-2 acceptance gates), and the cross-session batching tick
+(the ISSUE-6 gates).
 
 1. **Overlap**: one >= 4 MB split-layer tensor crosses a localhost
    socket to a decoder subprocess, with the sender pacing its writes to
@@ -18,6 +19,17 @@
    quantizer rung per tensor (leaky bucket over coded bits + link
    feedback); gate: measured bits/element within 10% of the budget in
    both bandwidth phases.
+
+3. **Sessions**: a many-session load generator.  K concurrent sessions
+   (1/8/64, +256 full) each submit one same-shape tensor; the
+   *per-session* path encodes + entropy-codes + decodes each stream on
+   its own (K fused launches, K+K entropy calls), the *batched* path
+   runs one encode tick (stacked fused launches, ONE entropy call) and
+   one decode drain (ONE batched entropy pass) over all K.  Reports
+   p50/p99 per-tensor latency and aggregate Melem/s for both paths.
+   Gates: batched streams byte-identical to per-session, <=
+   ceil(K/max_batch) fused launches + 1 entropy call per tick, and >= 2x
+   aggregate encode+decode throughput at K=64.
 
 Writes ``BENCH_transport.json`` and prints CSV rows.
 
@@ -277,11 +289,135 @@ def bench_rate_control(quick: bool) -> dict:
     }
 
 
+def _roundtrip_per_session(codec, xs, chunk_elems: int,
+                           coder_mode: str = "auto"):
+    """Each session on its own: encode_stream -> per-stream entropy
+    decode, sequentially (one worker's per-request path).  Returns
+    (payload lists, per-session completion latencies, total seconds)."""
+    from repro.core.codec import ChunkStreamDecoder
+
+    payload_lists, lat = [], []
+    t0 = time.perf_counter()
+    for x in xs:
+        payloads = list(codec.encode_stream(x, chunk_elems=chunk_elems,
+                                            coder_mode=coder_mode))
+        dec = ChunkStreamDecoder(payloads[0])
+        for p in payloads[1:]:
+            dec.add_chunk(p)
+        out = dec.finish()
+        assert out.shape == x.shape
+        lat.append(time.perf_counter() - t0)
+        payload_lists.append(payloads)
+    return payload_lists, lat, time.perf_counter() - t0
+
+
+def _roundtrip_batched(codec, xs, cfg):
+    """One encode tick + one decode drain over all sessions.  Returns
+    (payload lists, TickStats, per-session latencies, total seconds)."""
+    from repro.core.codec import ChunkStreamDecoder
+    from repro.serving import DecodeBatcher, encode_tick
+
+    t0 = time.perf_counter()
+    payload_lists, stats = encode_tick([(codec, x) for x in xs], cfg)
+    batcher = DecodeBatcher()
+    decs = []
+    for payloads in payload_lists:
+        dec = ChunkStreamDecoder(payloads[0], chunk_batch=0)
+        for p in payloads[1:]:
+            dec.add_chunk(p)
+        batcher.note(dec)
+        decs.append(dec)
+    failures = batcher.drain()
+    assert not failures, failures
+    for dec, x in zip(decs, xs):
+        out = dec.finish()
+        assert out.shape == x.shape
+    total = time.perf_counter() - t0
+    # every session completes at tick end: the tick window IS the latency
+    return payload_lists, stats, [total] * len(xs), total
+
+
+def bench_sessions(quick: bool) -> dict:
+    from repro.serving import TickConfig
+    from repro.transport import shared_bank
+
+    # small boundary tensors are the many-session serving regime (a
+    # decode step ships (B, S=1, d_model) activations), and the regime
+    # where per-session dispatch overhead -- not entropy volume --
+    # dominates: exactly what the tick amortizes.  The vectorized coder
+    # is pinned on BOTH paths so the streams stay byte-comparable and
+    # the measurement isolates batching (auto mode would route tensors
+    # this small to the serial coder, which no batch layer can help)
+    elems = 1 << 13
+    counts = [1, 8, 64] if quick else [1, 8, 64, 256]
+    cfg = TickConfig(chunk_elems=1 << 18, coder_mode="rans")
+    reps = 1 if quick else 2
+    rng = np.random.default_rng(2)
+    m = resnet50_layer21_model()
+    samples = m.sample(200_000, rng).astype(np.float32)
+    bank = shared_bank(CodecConfig(n_levels=8, clip_mode="model"), samples)
+    codec = bank.get(8)
+
+    # warm both paths (jit of the fused encode, coder dispatch)
+    warm = [m.sample(elems, rng).astype(np.float32) for _ in range(4)]
+    _roundtrip_per_session(codec, warm, cfg.chunk_elems, cfg.coder_mode)
+    _roundtrip_batched(codec, warm, cfg)
+
+    out: dict = {"n_elems_per_tensor": elems, "max_batch": cfg.max_batch,
+                 "session_counts": counts, "per_session": {},
+                 "batched": {}}
+    identical = True
+    launch_ok = True
+    for k in counts:
+        xs = [m.sample(elems, rng).astype(np.float32) for _ in range(k)]
+        best_ps = best_bt = None
+        for _ in range(reps):
+            ps = _roundtrip_per_session(codec, xs, cfg.chunk_elems,
+                                        cfg.coder_mode)
+            if best_ps is None or ps[2] < best_ps[2]:
+                best_ps = ps
+            bt = _roundtrip_batched(codec, xs, cfg)
+            if best_bt is None or bt[3] < best_bt[3]:
+                best_bt = bt
+        ps_payloads, ps_lat, ps_total = best_ps
+        bt_payloads, stats, bt_lat, bt_total = best_bt
+        identical &= ps_payloads == bt_payloads
+        launch_ok &= (stats.fused_launches <= -(-k // cfg.max_batch)
+                      and stats.entropy_calls == 1)
+        total_elems = float(k * elems)
+        out["per_session"][str(k)] = {
+            "p50_ms": 1e3 * float(np.percentile(ps_lat, 50)),
+            "p99_ms": 1e3 * float(np.percentile(ps_lat, 99)),
+            "melem_per_s": total_elems / ps_total / 1e6,
+            "total_s": ps_total,
+        }
+        out["batched"][str(k)] = {
+            "p50_ms": 1e3 * float(np.percentile(bt_lat, 50)),
+            "p99_ms": 1e3 * float(np.percentile(bt_lat, 99)),
+            "melem_per_s": total_elems / bt_total / 1e6,
+            "total_s": bt_total,
+            "fused_launches": stats.fused_launches,
+            "entropy_calls": stats.entropy_calls,
+            "stacked_sessions": stats.stacked_sessions,
+        }
+    speedup_64 = (out["batched"]["64"]["melem_per_s"]
+                  / out["per_session"]["64"]["melem_per_s"])
+    out.update(
+        batched_identical=bool(identical),
+        launch_bound_ok=bool(launch_ok),
+        batched_speedup_64=speedup_64,
+        batched_speedup_ge_2x=bool(speedup_64 >= 2.0),
+    )
+    return out
+
+
 def main() -> None:
     quick = "--quick" in sys.argv
     overlap = bench_overlap(quick)
     rate = bench_rate_control(quick)
-    result = {"overlap": overlap, "rate_control": rate}
+    sessions = bench_sessions(quick)
+    result = {"overlap": overlap, "rate_control": rate,
+              "sessions": sessions}
     with open("BENCH_transport.json", "w") as f:
         json.dump(result, f, indent=2)
     print("name,value,derived")
@@ -295,6 +431,17 @@ def main() -> None:
           f"high_bw={rate['bpe_high_bw']:.3f},"
           f"low_bw={rate['bpe_low_bw']:.3f},"
           f"within_10pct={rate['within_10pct']}")
+    for k in sessions["session_counts"]:
+        ps, bt = sessions["per_session"][str(k)], sessions["batched"][str(k)]
+        print(f"sessions_{k}_melem_per_s,{bt['melem_per_s']:.2f},"
+              f"per_session={ps['melem_per_s']:.2f},"
+              f"batched_p99_ms={bt['p99_ms']:.2f},"
+              f"launches={bt['fused_launches']}")
+    print(f"sessions_batched_speedup_64,"
+          f"{sessions['batched_speedup_64']:.2f},"
+          f"ge_2x={sessions['batched_speedup_ge_2x']},"
+          f"identical={sessions['batched_identical']},"
+          f"launch_bound_ok={sessions['launch_bound_ok']}")
 
 
 if __name__ == "__main__":

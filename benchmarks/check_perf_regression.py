@@ -1,8 +1,10 @@
-"""Perf-regression gate over ``BENCH_codec.json`` (CI).
+"""Perf-regression gate over benchmark JSONs (CI).
 
 Compares a freshly measured benchmark JSON against the committed
-baseline (``benchmarks/BENCH_codec.baseline.json``) and fails when the
-codec hot path regressed:
+baseline and fails when the hot path regressed.  Two kinds:
+
+``--kind codec`` (default) gates ``BENCH_codec.json`` against
+``benchmarks/BENCH_codec.baseline.json``:
 
   * hardware-normalized ratios (``encode_speedup``, ``decode_speedup``)
     may not drop more than ``--tolerance`` (default 20%) -- these divide
@@ -17,17 +19,29 @@ codec hot path regressed:
     ``tiled_beats_tensor_ge_2_levels``,
     ``conv2d_beats_flat_ge_2_levels``) must hold outright.
 
+``--kind transport`` gates ``BENCH_transport.json`` against
+``benchmarks/BENCH_transport.baseline.json`` with the same tolerance
+scheme; nested result dicts are addressed with dotted keys
+(``sessions.batched_speedup_64``).  The ISSUE-6 acceptance gates --
+batched==per-session byte identity, the <= ceil(K/max_batch)
+launch bound, and the >= 2x aggregate-throughput win at 64 sessions --
+are boolean, so they must hold outright on every run.  The overlap gain
+and raw Melem/s sit in the loose absolute bucket (timing-noisy on
+shared runners); ``overlap_gain_ge_1p2`` is deliberately *not* a
+boolean gate here because paced-link timing flakes on loaded CI boxes.
+
 Failures are reported per metric (a summary line naming every regressed
 metric, then one detail line each); metrics missing from the baseline --
 i.e. added by a newer bench revision -- are noted and skipped instead of
 erroring, so a bench change and its baseline refresh need not land in
 lockstep.
 
-Baselines measured at a different ``n_elements`` (e.g. a --quick run
-against a full-run baseline) only check the ratio and boolean gates.
+Baselines measured at a different size (``n_elements`` /
+``sessions.n_elems_per_tensor``, e.g. a --quick run against a full-run
+baseline) only check the ratio and boolean gates.
 
     python -m benchmarks.check_perf_regression BENCH_codec.json \
-        [--baseline benchmarks/BENCH_codec.baseline.json] \
+        [--kind codec] [--baseline benchmarks/BENCH_codec.baseline.json] \
         [--tolerance 0.2] [--abs-tolerance 0.5]
 """
 
@@ -37,20 +51,57 @@ import argparse
 import json
 import sys
 
-RATIO_KEYS = ("encode_speedup", "decode_speedup")
-# stream batch ratios are small (1.1-1.6x) and chunk-count noisy, so they
-# sit in the loose bucket with the absolute throughputs
-ABS_KEYS = ("encode_Melem_per_s", "decode_Melem_per_s",
-            "fused_encode_Melem_per_s", "stream_batch_speedup",
-            "stream_decode_batch_speedup")
-BOOL_KEYS = ("encode_speedup_ge_20x", "decode_speedup_ge_20x",
-             "fused_identical", "channel_le_tensor",
-             "tiled_beats_tensor_ge_2_levels",
-             "conv2d_beats_flat_ge_2_levels")
+KINDS = {
+    "codec": {
+        "ratio": ("encode_speedup", "decode_speedup"),
+        # stream batch ratios are small (1.1-1.6x) and chunk-count
+        # noisy, so they sit in the loose bucket with the absolute
+        # throughputs
+        "abs": ("encode_Melem_per_s", "decode_Melem_per_s",
+                "fused_encode_Melem_per_s", "stream_batch_speedup",
+                "stream_decode_batch_speedup"),
+        "bool": ("encode_speedup_ge_20x", "decode_speedup_ge_20x",
+                 "fused_identical", "channel_le_tensor",
+                 "tiled_beats_tensor_ge_2_levels",
+                 "conv2d_beats_flat_ge_2_levels"),
+        "size_key": "n_elements",
+        "baseline": "benchmarks/BENCH_codec.baseline.json",
+    },
+    "transport": {
+        "ratio": (),
+        "abs": ("overlap.overlap_gain", "sessions.batched_speedup_64",
+                "sessions.batched.64.melem_per_s",
+                "sessions.per_session.64.melem_per_s"),
+        "bool": ("rate_control.within_10pct", "sessions.batched_identical",
+                 "sessions.launch_bound_ok",
+                 "sessions.batched_speedup_ge_2x"),
+        "size_key": "sessions.n_elems_per_tensor",
+        "baseline": "benchmarks/BENCH_transport.baseline.json",
+    },
+}
+
+# module-level aliases: the codec key sets predate --kind and are
+# imported by tests
+RATIO_KEYS = KINDS["codec"]["ratio"]
+ABS_KEYS = KINDS["codec"]["abs"]
+BOOL_KEYS = KINDS["codec"]["bool"]
+
+
+def _flatten(d: dict, prefix: str = "") -> dict:
+    """Nested dicts -> dotted-key scalars ({"a": {"b": 1}} -> {"a.b": 1})."""
+    out = {}
+    for k, v in d.items():
+        key = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.update(_flatten(v, f"{key}."))
+        else:
+            out[key] = v
+    return out
 
 
 def check(current: dict, baseline: dict, tolerance: float,
-          abs_tolerance: float) -> list[tuple[str, str]]:
+          abs_tolerance: float, kind: str = "codec"
+          ) -> list[tuple[str, str]]:
     """Compare ``current`` against ``baseline``; returns one
     (metric, reason) pair per regressed metric.
 
@@ -61,9 +112,13 @@ def check(current: dict, baseline: dict, tolerance: float,
     fails when the baseline tracks it.  Boolean gates must hold whenever
     the current run reports them.
     """
+    spec = KINDS[kind]
+    current = _flatten(current)
+    baseline = _flatten(baseline)
     failures: list[tuple[str, str]] = []
-    same_size = current.get("n_elements") == baseline.get("n_elements")
-    for key in BOOL_KEYS:
+    size_key = spec["size_key"]
+    same_size = current.get(size_key) == baseline.get(size_key)
+    for key in spec["bool"]:
         if key not in current:
             if key in baseline:
                 failures.append((key, "missing from current benchmark"))
@@ -74,13 +129,13 @@ def check(current: dict, baseline: dict, tolerance: float,
             failures.append((key, f"is {current[key]} (must hold)"))
         else:
             print(f"{key}: True ok")
-    checks = list(RATIO_KEYS) + (list(ABS_KEYS) if same_size else [])
+    checks = list(spec["ratio"]) + (list(spec["abs"]) if same_size else [])
     if not same_size:
-        print(f"note: n_elements {current.get('n_elements')} != baseline "
-              f"{baseline.get('n_elements')}; absolute throughput keys "
+        print(f"note: {size_key} {current.get(size_key)} != baseline "
+              f"{baseline.get(size_key)}; absolute throughput keys "
               "skipped")
     for key in checks:
-        tol = tolerance if key in RATIO_KEYS else abs_tolerance
+        tol = tolerance if key in spec["ratio"] else abs_tolerance
         base = baseline.get(key)
         cur = current.get(key)
         if base is None:
@@ -103,19 +158,23 @@ def check(current: dict, baseline: dict, tolerance: float,
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("current", help="fresh BENCH_codec.json to check")
-    ap.add_argument("--baseline",
-                    default="benchmarks/BENCH_codec.baseline.json")
+    ap.add_argument("current", help="fresh benchmark JSON to check")
+    ap.add_argument("--kind", choices=sorted(KINDS), default="codec")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline JSON (default: the committed baseline "
+                         "for --kind)")
     ap.add_argument("--tolerance", type=float, default=0.2,
                     help="max fractional drop for ratio metrics")
     ap.add_argument("--abs-tolerance", type=float, default=0.5,
                     help="max fractional drop for absolute Melem/s")
     args = ap.parse_args()
+    baseline_path = args.baseline or KINDS[args.kind]["baseline"]
     with open(args.current) as f:
         current = json.load(f)
-    with open(args.baseline) as f:
+    with open(baseline_path) as f:
         baseline = json.load(f)
-    failures = check(current, baseline, args.tolerance, args.abs_tolerance)
+    failures = check(current, baseline, args.tolerance, args.abs_tolerance,
+                     kind=args.kind)
     if failures:
         names = ", ".join(key for key, _ in failures)
         print(f"\nPERF REGRESSION: {len(failures)} metric(s) regressed: "

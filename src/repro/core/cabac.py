@@ -316,7 +316,17 @@ def encode_indices(idx: np.ndarray, n_levels: int, mode: str = "auto") -> bytes:
     raise ValueError(f"unknown coder mode {mode!r}")
 
 
-def encode_indices_batch(segments: list[np.ndarray], n_levels: int,
+def _levels_list(n_levels, count: int) -> list[int]:
+    """Normalize an ``n_levels`` argument (scalar or per-item sequence)."""
+    if np.ndim(n_levels) == 0:
+        return [int(n_levels)] * count
+    levels = [int(n) for n in n_levels]
+    if len(levels) != count:
+        raise ValueError(f"got {len(levels)} n_levels for {count} payloads")
+    return levels
+
+
+def encode_indices_batch(segments: list[np.ndarray], n_levels,
                          mode: str = "auto") -> list[bytes]:
     """Encode many independent index segments with shared dispatch.
 
@@ -327,24 +337,26 @@ def encode_indices_batch(segments: list[np.ndarray], n_levels: int,
     chunked-stream encoder's per-chunk python dispatch collapses to one
     loop per batch.  ``auto`` keeps the serial coder for small segments;
     the thread-sharded coder is not used here (batching already amortizes
-    the dispatch the pool would target).
+    the dispatch the pool would target).  ``n_levels`` may be a scalar or
+    one value per segment (cross-session ticks mix quantizer rungs).
     """
     from .binarization import index_to_context_bits, total_tu_bits
     segments = [np.asarray(s).ravel() for s in segments]
+    levels = _levels_list(n_levels, len(segments))
     out: list[bytes | None] = [None] * len(segments)
     rans_ids = []
     for i, seg in enumerate(segments):
         m = mode
         if m == "auto":
             m = "rans" if seg.size >= _SERIAL_CUTOFF_BITS else \
-                ("serial" if total_tu_bits(seg, n_levels)
+                ("serial" if total_tu_bits(seg, levels[i])
                  < _SERIAL_CUTOFF_BITS else "rans")
         if m == "rans":
             rans_ids.append(i)
         else:
-            out[i] = encode_indices(seg, n_levels, mode=m)
+            out[i] = encode_indices(seg, levels[i], mode=m)
     blobs = rans.encode_planes_batch(
-        [index_to_context_bits(segments[i], n_levels) for i in rans_ids])
+        [index_to_context_bits(segments[i], levels[i]) for i in rans_ids])
     for i, blob in zip(rans_ids, blobs):
         out[i] = bytes([_CODER_RANS]) + blob
     return out
@@ -369,7 +381,7 @@ def decode_indices(data: bytes, n_elems: int, n_levels: int) -> np.ndarray:
 
 
 def decode_indices_batch(payloads: list[bytes], counts: list[int],
-                         n_levels: int) -> list[np.ndarray]:
+                         n_levels) -> list[np.ndarray]:
     """Decode many independent payloads with shared dispatch.
 
     Result-identical to per-payload :func:`decode_indices` calls, but all
@@ -378,8 +390,12 @@ def decode_indices_batch(payloads: list[bytes], counts: list[int],
     (:class:`repro.core.rans.BatchPlaneDecoder`) -- the receive side's
     per-chunk python dispatch collapses the same way the batched encoder
     collapsed the send side's.  Serial and sharded payloads decode
-    individually (they are small or already parallel).
+    individually (they are small or already parallel).  ``n_levels`` may
+    be a scalar or one value per payload: a cross-session drain mixes
+    streams at different quantizer rungs in one call, and a stream whose
+    TU planes are exhausted simply stops consuming plane rounds.
     """
+    levels = _levels_list(n_levels, len(payloads))
     out: list[np.ndarray | None] = [None] * len(payloads)
     groups: dict[int, list[int]] = {}
     for i, data in enumerate(payloads):
@@ -388,18 +404,20 @@ def decode_indices_batch(payloads: list[bytes], counts: list[int],
             if lanes:
                 groups.setdefault(lanes, []).append(i)
                 continue
-        out[i] = decode_indices(data, counts[i], n_levels)
+        out[i] = decode_indices(data, counts[i], levels[i])
     for lanes, members in groups.items():
         if len(members) == 1:
             i = members[0]
-            out[i] = decode_indices(payloads[i], counts[i], n_levels)
+            out[i] = decode_indices(payloads[i], counts[i], levels[i])
             continue
         dec = rans.BatchPlaneDecoder([payloads[i][1:] for i in members])
         n = [counts[i] for i in members]
+        rounds = [levels[i] - 1 for i in members]
         idxs = [np.zeros(c, dtype=np.int32) for c in n]
         poss = [np.arange(c, dtype=np.int64) for c in n]
-        for _ in range(n_levels - 1):
-            n_alive = [p.size for p in poss]
+        for r in range(max(rounds)):
+            n_alive = [p.size if r < rounds[s] else 0
+                       for s, p in enumerate(poss)]
             if not any(n_alive):
                 break
             planes = dec.next_planes(n_alive)

@@ -241,6 +241,47 @@ def reconstruct_indices(idx: np.ndarray, hdr: ParsedHeader, *,
     return out.reshape(hdr.dims) if hdr.dims is not None else out
 
 
+class HeaderCache:
+    """Worker-level cache of parsed stream headers, keyed by the exact
+    header bytes.
+
+    Concurrent sessions of one serving worker overwhelmingly share a few
+    (shape, rung) combinations, and same-rung same-shape tensors produce
+    byte-identical headers -- so the parse (including the QuantSpec /
+    TilePlan construction and the per-tile table views inside it) runs
+    once per distinct header instead of once per session.  Sharing is
+    safe because every consumer treats :class:`ParsedHeader` as
+    immutable (``reconstruct_indices`` only reads it) and the numpy views
+    reference the immutable key bytes.  ``hits``/``misses`` feed the
+    server's counters dict.
+    """
+
+    def __init__(self, maxsize: int = 256) -> None:
+        from collections import OrderedDict
+        self._entries: "OrderedDict[bytes, ParsedHeader]" = OrderedDict()
+        self.maxsize = max(1, maxsize)
+        self.hits = 0
+        self.misses = 0
+
+    def parse(self, data: bytes) -> ParsedHeader:
+        hdr = self._entries.get(data)
+        if hdr is not None:
+            self.hits += 1
+            self._entries.move_to_end(data)
+            return hdr
+        self.misses += 1
+        hdr = parse_header(data)
+        self._entries[data] = hdr
+        if len(self._entries) > self.maxsize:
+            self._entries.popitem(last=False)
+        return hdr
+
+    @property
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "entries": len(self._entries)}
+
+
 class ChunkStreamDecoder:
     """Incremental decoder for :meth:`FeatureCodec.encode_stream` payloads.
 
@@ -253,25 +294,35 @@ class ChunkStreamDecoder:
     result-identical to per-payload ``decode_indices``).  Chunks may
     arrive in any order -- each payload carries its chunk id --
     and ``chunk_batch=1`` restores strict decode-on-arrival.
+
+    ``chunk_batch=0`` defers entropy decode entirely: chunks only
+    accumulate, and either :meth:`finish` or a cross-session
+    :func:`flush_decoders` pass drains them -- the mode the serving
+    tick loop uses to collapse many sessions' chunks into one batched
+    entropy call.  ``header_cache`` shares parsed headers across the
+    sessions of a worker (see :class:`HeaderCache`).
     """
 
     def __init__(self, header_payload: bytes, *, backend=None,
                  ecsq: ECSQQuantizer | None = None,
-                 chunk_batch: int = STREAM_CHUNK_BATCH) -> None:
+                 chunk_batch: int = STREAM_CHUNK_BATCH,
+                 header_cache: HeaderCache | None = None) -> None:
         self.chunk_elems, self.n_chunks, ndim = struct.unpack_from(
             _STREAM_META_FMT, header_payload)
         meta = struct.calcsize(_STREAM_META_FMT)
         self.shape = tuple(
             int(d) for d in np.frombuffer(header_payload, "<u4", ndim, meta))
         meta += 4 * ndim
-        self.header = parse_header(header_payload[meta:])
+        hdr_bytes = header_payload[meta:]
+        self.header = header_cache.parse(hdr_bytes) if header_cache \
+            is not None else parse_header(hdr_bytes)
         if self.header.payload_off != len(header_payload) - meta:
             raise ValueError("trailing bytes after stream header")
         self._backend = backend
         self._ecsq = ecsq
         self._idx = np.zeros(self.header.n_elems, dtype=np.int32)
         self._seen = np.zeros(self.n_chunks, dtype=bool)
-        self._batch = max(1, chunk_batch)
+        self._batch = max(0, chunk_batch)
         self._pending: list[tuple[int, bytes]] = []
 
     def _bounds(self, cid: int) -> tuple[int, int]:
@@ -307,9 +358,14 @@ class ChunkStreamDecoder:
             raise ValueError(f"duplicate chunk {cid}")
         self._seen[cid] = True
         self._pending.append((cid, payload[4:]))
-        if len(self._pending) >= self._batch:
+        if self._batch and len(self._pending) >= self._batch:
             self._flush()
         return cid
+
+    @property
+    def pending_chunks(self) -> int:
+        """Chunks accumulated but not yet entropy-decoded."""
+        return len(self._pending)
 
     @property
     def complete(self) -> bool:
@@ -324,6 +380,64 @@ class ChunkStreamDecoder:
                                    backend=self._backend, ecsq=self._ecsq,
                                    shape=self.shape if shape is None
                                    else shape)
+
+
+def flush_decoders(decoders) -> tuple[int, int, list]:
+    """Entropy-decode the pending chunks of *many* stream decoders in one
+    batched call -- the cross-session drain of the serving tick loop.
+
+    Where per-session decoding runs one ``decode_indices_batch`` per
+    stream, this gathers every decoder's pending payloads (each knows its
+    own element counts and quantizer level count -- mixed shapes and
+    rungs coexist in one call) into a single
+    :func:`cabac.decode_indices_batch` pass, so all sessions of a tick
+    share one python dispatch and one batched rANS step loop per TU
+    plane round.  Results are scattered back into each decoder's index
+    buffer, bit-exact with per-decoder :meth:`ChunkStreamDecoder._flush`.
+
+    Isolation: when the combined batch fails (one corrupt session must
+    not poison a tick), every decoder falls back to its own per-decoder
+    flush; failing decoders un-see their chunks (re-feeding a corrected
+    copy is not a duplicate) and are reported rather than raised, so the
+    caller can error out only the affected sessions.
+
+    Returns ``(n_chunks_decoded, n_elems_decoded, failures)`` with
+    ``failures`` a list of ``(decoder, exception)`` pairs.
+    """
+    work = []
+    for dec in decoders:
+        if dec._pending:
+            pend, dec._pending = dec._pending, []
+            work.append((dec, pend))
+    if not work:
+        return 0, 0, []
+    payloads, counts, levels, owners = [], [], [], []
+    for dec, pend in work:
+        for cid, blob in pend:
+            a, b = dec._bounds(cid)
+            payloads.append(blob)
+            counts.append(b - a)
+            levels.append(dec.header.n_levels)
+            owners.append((dec, a, b))
+    try:
+        decoded = cabac.decode_indices_batch(payloads, counts, levels)
+    except Exception:
+        failures = []
+        n_chunks = n_elems = 0
+        for dec, pend in work:
+            dec._pending = pend
+            try:
+                dec._flush()
+            except Exception as e:     # noqa: BLE001 -- reported, not raised
+                failures.append((dec, e))
+            else:
+                n_chunks += len(pend)
+                n_elems += sum(b - a for a, b in
+                               (dec._bounds(cid) for cid, _ in pend))
+        return n_chunks, n_elems, failures
+    for (dec, a, b), arr in zip(owners, decoded):
+        dec._idx[a:b] = arr
+    return len(payloads), sum(counts), []
 
 
 @dataclasses.dataclass

@@ -36,9 +36,10 @@ def _calibrate_warmup(cfg, params, args):
     """
     import jax
 
-    from ..core import CodecConfig, calibrate
+    from ..core import CodecConfig
     from ..data import DataConfig, stream
     from ..models import forward
+    from ..transport import shared_bank
 
     # "tile" (fixed spatial extent -- 1-D spatial_block_size or the 2-D
     # spatial_block_hw row x column split) is not offered here: serving
@@ -54,9 +55,13 @@ def _calibrate_warmup(cfg, params, args):
         if args.granularity != "tensor":
             raise SystemExit("--clip-mode manual implies per-tensor "
                              "granularity")
-        return calibrate(CodecConfig(n_levels=args.codec_levels,
-                                     clip_mode="manual", manual_cmin=-8.0,
-                                     manual_cmax=8.0))
+        # manual ranges ignore samples; dummy samples let the bank cache
+        # still dedupe repeated workers
+        bank = shared_bank(
+            CodecConfig(n_levels=args.codec_levels, clip_mode="manual",
+                        manual_cmin=-8.0, manual_cmax=8.0),
+            np.zeros(1, np.float32), ladder=(args.codec_levels,))
+        return bank.get(args.codec_levels)
     probe = {}
 
     def probe_fn(x):
@@ -74,7 +79,10 @@ def _calibrate_warmup(cfg, params, args):
     samples = np.concatenate(chunks, axis=0)
     if args.granularity == "tensor":
         samples = samples.reshape(-1)
-    codec = calibrate(ccfg, samples=samples)
+    # rung tables are immutable -- one worker-level bank serves every
+    # session with this (config, warm-up samples) pair
+    codec = shared_bank(ccfg, samples,
+                        ladder=(args.codec_levels,)).get(args.codec_levels)
     grain = args.granularity if args.granularity == "tensor" else \
         f"{args.granularity}(g={args.channel_group})"
     print(f"calibrated codec on {samples.size} warm-up activations: "
@@ -84,7 +92,7 @@ def _calibrate_warmup(cfg, params, args):
     return codec
 
 
-def _loopback_codec_fn(codec, chunk_elems: int):
+def _loopback_codec_fn(codec, chunk_elems: int, tick_ms: float = 0.0):
     """Split-boundary hook that streams every tensor over localhost.
 
     Starts a CloudServer (echoing reconstructions) on a daemon thread and
@@ -92,6 +100,19 @@ def _loopback_codec_fn(codec, chunk_elems: int):
     through the framed streaming client and feeds the *socket-round-
     tripped* reconstruction back into the jitted step.  The reported rate
     is the true wire bits/element (frames, headers and all).
+
+    The server always runs the cross-session tick drain (one batched
+    entropy call per tick); ``tick_ms`` sets the tick window.  The
+    ordered io_callback keeps one tensor in flight per engine, so the
+    default window is 0 (drain as soon as the loop is idle) and client-
+    side encode coalescing only engages for ``tick_ms > 0``.
+
+    Needs a multi-core host: the client's encode is itself a jax
+    computation, and on a single-CPU box the ordered io_callback holds
+    XLA's only dispatch thread while that nested encode waits for it --
+    a deadlock that predates the tick path (same hang at the seed
+    revision).  CI exercises the socket stack via
+    ``examples/edge_cloud_demo.py`` instead.
     """
     import asyncio
     import threading
@@ -100,17 +121,20 @@ def _loopback_codec_fn(codec, chunk_elems: int):
     import jax.numpy as jnp
     from jax.experimental import io_callback
 
+    from ..serving import TickConfig
     from ..transport import CloudServer, SyncEdgeClient
 
     loop = asyncio.new_event_loop()
     threading.Thread(target=loop.run_forever, name="cloud-server",
                      daemon=True).start()
-    server = CloudServer(echo_features=True)
+    tick = TickConfig(max_wait_s=tick_ms / 1e3)
+    server = CloudServer(echo_features=True, tick=tick)
     asyncio.run_coroutine_threadsafe(server.start(), loop).result()
     client = SyncEdgeClient("127.0.0.1", server.port, codec=codec,
-                            chunk_elems=chunk_elems)
+                            chunk_elems=chunk_elems,
+                            tick=tick if tick_ms > 0 else None)
     print(f"loopback transport: streaming split tensors via "
-          f"127.0.0.1:{server.port}")
+          f"127.0.0.1:{server.port} (tick window {tick_ms:.1f}ms)")
 
     def host_roundtrip(x):
         res = client.submit(np.asarray(x, np.float32))
@@ -126,9 +150,15 @@ def _loopback_codec_fn(codec, chunk_elems: int):
         return recon.astype(x.dtype), rate
 
     def cleanup():
+        counters = server.counters
         client.close()
         asyncio.run_coroutine_threadsafe(server.close(), loop).result()
         loop.call_soon_threadsafe(loop.stop)
+        print(f"cloud ticks: {counters.get('ticks', 0)} "
+              f"(occupancy {counters.get('batch_occupancy_avg', 0.0):.2f}, "
+              f"entropy calls {counters.get('entropy_calls', 0)}, "
+              f"bpe {counters.get('bpe_avg', 0.0):.3f}, header cache "
+              f"{counters.get('header_cache', {})})")
 
     return codec_fn, cleanup
 
@@ -165,6 +195,12 @@ def main():
                     help="'loopback' streams every split tensor through "
                          "the framed transport over a localhost socket")
     ap.add_argument("--chunk-elems", type=int, default=1 << 16)
+    ap.add_argument("--tick-ms", type=float, default=0.0,
+                    help="cross-session batching tick window for the "
+                         "loopback transport (0 = drain immediately; the "
+                         "ordered io_callback keeps one tensor in "
+                         "flight, so >0 only helps with several engines "
+                         "sharing the worker)")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
 
@@ -185,7 +221,8 @@ def main():
     if args.codec_levels:
         codec = _calibrate_warmup(cfg, params, args)
         if args.transport == "loopback":
-            codec_fn, cleanup = _loopback_codec_fn(codec, args.chunk_elems)
+            codec_fn, cleanup = _loopback_codec_fn(codec, args.chunk_elems,
+                                                   args.tick_ms)
             codec = None
     elif args.transport == "loopback":
         ap.error("--transport loopback needs --codec-levels")
@@ -212,6 +249,13 @@ def main():
         print(f"request latency: mean={np.mean(lat):.3f}s "
               f"p50={np.percentile(lat, 50):.3f}s "
               f"max={np.max(lat):.3f}s")
+    ec = eng.counters
+    print(f"engine: {ec['steps']} steps, occupancy "
+          f"{ec['batch_occupancy_avg']:.2f}, {ec['refills']} refills, "
+          f"{ec['epochs']} epochs")
+    if args.codec_levels:
+        from ..transport import bank_cache_stats
+        print(f"codec bank cache: {bank_cache_stats()}")
     if cleanup is not None:
         cleanup()
 

@@ -1,3 +1,6 @@
+from .batcher import (DecodeBatcher, TickConfig, TickStats, encode_tick,
+                      split_coded, stack_group)
 from .engine import Request, ServeEngine
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["Request", "ServeEngine", "TickConfig", "TickStats",
+           "DecodeBatcher", "encode_tick", "stack_group", "split_coded"]

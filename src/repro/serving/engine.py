@@ -76,6 +76,8 @@ class ServeEngine:
         self.refill_align = max(1, refill_align)
         self.rate_log: list[float] = []
         self.latency_log: list[dict] = []
+        self._tallies = {"steps": 0, "slot_steps": 0, "active_slot_steps": 0,
+                         "prefills": 0, "refills": 0, "epochs": 0}
 
         self._prefill = jax.jit(
             lambda p, t, c: prefill(cfg, p, t, c, ctx=ctx, codec_fn=codec_fn))
@@ -121,6 +123,10 @@ class ServeEngine:
                                                   cur, pos)
             if all(r is None for r in active):
                 continue    # nothing admitted (prompts too long for pos)
+            self._tallies["steps"] += 1
+            self._tallies["slot_steps"] += self.slots
+            self._tallies["active_slot_steps"] += sum(
+                r is not None for r in active)
             lg, cache, aux = self._decode(self.params, cur, cache,
                                           jnp.int32(pos))
             if "codec_rate_bits" in aux:
@@ -147,6 +153,21 @@ class ServeEngine:
         return len(r.prompt) <= plen \
             and plen + r.max_new_tokens <= self.max_seq
 
+    @property
+    def counters(self) -> dict:
+        """Structured serving metrics (the observability satellite):
+        slot occupancy of the continuous batch, admission churn, and the
+        split-layer rate actually spent."""
+        t = self._tallies
+        return {
+            **t,
+            "batch_occupancy_avg": (t["active_slot_steps"]
+                                    / max(t["slot_steps"], 1)),
+            "split_bpe_avg": (float(np.mean(self.rate_log))
+                              if self.rate_log else 0.0),
+            "requests_done": len(self.latency_log),
+        }
+
     def _start_epoch(self, queue: list, active: list):
         """Full-batch prefill of up to ``slots`` queued requests."""
         batch = [queue.pop(0) for _ in range(min(self.slots, len(queue)))]
@@ -159,6 +180,8 @@ class ServeEngine:
             active[i] = r
         cache = init_cache(self.cfg, batch=self.slots, max_seq=self.max_seq,
                            split=self.codec_fn is not None)
+        self._tallies["epochs"] += 1
+        self._tallies["prefills"] += 1
         logits, cache = self._prefill(self.params, jnp.asarray(toks), cache)
         cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         # zero-token requests retire immediately
@@ -194,6 +217,8 @@ class ServeEngine:
         one = init_cache(self.cfg, batch=1, max_seq=self.max_seq,
                          split=self.codec_fn is not None)
         r.t_admit = time.perf_counter()
+        self._tallies["refills"] += 1
+        self._tallies["prefills"] += 1
         logits, one = self._prefill(self.params, jnp.asarray(toks), one)
         cache = jax.tree.map(lambda full, o: full.at[:, slot].set(o[:, 0]),
                              cache, one)

@@ -20,10 +20,11 @@ from .framing import (FT_CHUNK, FT_END, FT_ERROR, FT_FEEDBACK, FT_HEADER,
                       FT_RESULT, Frame, FrameReader, FramingError,
                       encode_frame, pack_arrays, unpack_arrays)
 from .rate_control import (DEFAULT_LADDER, CodecBank, RateControlConfig,
-                           RateController, Rung, as_rung, rung_of_codec)
+                           RateController, Rung, as_rung, bank_cache_stats,
+                           clear_bank_cache, rung_of_codec, shared_bank)
 from .server import CloudServer
 from .stream_codec import (DEFAULT_CHUNK_ELEMS, Feedback, TensorAssembler,
-                           tensor_to_frames)
+                           payloads_to_frames, tensor_to_frames)
 
 __all__ = [
     "EdgeClient", "SyncEdgeClient", "SubmitResult", "TransportError",
@@ -33,6 +34,7 @@ __all__ = [
     "FT_ERROR",
     "CodecBank", "RateControlConfig", "RateController", "DEFAULT_LADDER",
     "Rung", "as_rung", "rung_of_codec",
-    "CloudServer", "TensorAssembler", "tensor_to_frames", "Feedback",
-    "DEFAULT_CHUNK_ELEMS",
+    "shared_bank", "bank_cache_stats", "clear_bank_cache",
+    "CloudServer", "TensorAssembler", "tensor_to_frames",
+    "payloads_to_frames", "Feedback", "DEFAULT_CHUNK_ELEMS",
 ]

@@ -28,10 +28,12 @@ import time
 import numpy as np
 
 from ..core.codec import FeatureCodec
+from ..serving.batcher import TickConfig, encode_tick
 from .framing import (FT_ERROR, FT_FEEDBACK, FT_RESULT, FrameReader,
                       unpack_arrays)
 from .rate_control import CodecBank, RateController, rung_of_codec
-from .stream_codec import DEFAULT_CHUNK_ELEMS, Feedback, tensor_to_frames
+from .stream_codec import (DEFAULT_CHUNK_ELEMS, Feedback, payloads_to_frames,
+                           tensor_to_frames)
 
 
 class TransportError(RuntimeError):
@@ -56,7 +58,8 @@ class EdgeClient:
                  codec_bank: CodecBank | None = None,
                  rate_controller: RateController | None = None,
                  chunk_elems: int = DEFAULT_CHUNK_ELEMS,
-                 coder_mode: str = "auto") -> None:
+                 coder_mode: str = "auto",
+                 tick: TickConfig | None = None) -> None:
         if codec is None and codec_bank is None:
             raise ValueError("need a codec or a codec_bank")
         if rate_controller is not None and codec_bank is None:
@@ -68,6 +71,7 @@ class EdgeClient:
         self.rate_controller = rate_controller
         self.chunk_elems = chunk_elems
         self.coder_mode = coder_mode
+        self.tick = tick
         self._reader: asyncio.StreamReader | None = None
         self._writer: asyncio.StreamWriter | None = None
         self._write_lock = asyncio.Lock()
@@ -76,6 +80,16 @@ class EdgeClient:
         self._next_session = 0
         self._reader_task: asyncio.Task | None = None
         self._dead: Exception | None = None
+        # encode-tick coalescing state (tick is not None):
+        # (codec, tensor, session, sent-bytes future) entries await one
+        # shared encode_tick launch
+        self._encode_queue: list[tuple] = []
+        self._encode_timer: asyncio.TimerHandle | None = None
+        self._encode_lock = asyncio.Lock()
+        self.encode_counters = {"ticks": 0, "sessions": 0,
+                                "stacked_sessions": 0, "fused_launches": 0,
+                                "entropy_calls": 0, "elems": 0,
+                                "coded_bytes": 0, "encode_s": 0.0}
 
     async def connect(self) -> "EdgeClient":
         self._reader, self._writer = await asyncio.open_connection(
@@ -90,6 +104,13 @@ class EdgeClient:
         await self.close()
 
     async def close(self) -> None:
+        if self._encode_timer is not None:
+            self._encode_timer.cancel()
+            self._encode_timer = None
+        queue, self._encode_queue = self._encode_queue, []
+        for *_, sent in queue:
+            if not sent.done():
+                sent.set_exception(TransportError("client closed"))
         if self._reader_task is not None:
             self._reader_task.cancel()
             try:
@@ -154,6 +175,66 @@ class EdgeClient:
         rung = max(self.codec_bank.ladder)
         return self.codec_bank.get(rung), rung
 
+    async def _submit_tick(self, codec: FeatureCodec, x: np.ndarray,
+                           session: int) -> int:
+        """Queue one tensor for the next encode tick; resolves with the
+        wire byte count once its frames are on the socket."""
+        loop = asyncio.get_running_loop()
+        sent: asyncio.Future = loop.create_future()
+        self._encode_queue.append((codec, x, session, sent))
+        if len(self._encode_queue) >= self.tick.max_batch:
+            await self._flush_encode()
+        elif self._encode_timer is None:
+            self._encode_timer = loop.call_later(
+                self.tick.max_wait_s,
+                lambda: loop.create_task(self._flush_encode()))
+        return await sent
+
+    async def _flush_encode(self) -> None:
+        """Encode everything queued since the last tick in one
+        ``encode_tick`` call (stacked fused launches + ONE entropy call),
+        then write each session's frames."""
+        async with self._encode_lock:
+            if self._encode_timer is not None:
+                self._encode_timer.cancel()
+                self._encode_timer = None
+            queue, self._encode_queue = self._encode_queue, []
+            if not queue:
+                return
+            cfg = dataclasses.replace(self.tick,
+                                      chunk_elems=self.chunk_elems,
+                                      coder_mode=self.coder_mode)
+            try:
+                payload_lists, stats = await asyncio.to_thread(
+                    encode_tick, [(c, x) for c, x, _, _ in queue], cfg)
+            except Exception as e:                  # noqa: BLE001
+                for *_, sent in queue:
+                    if not sent.done():
+                        sent.set_exception(e)
+                return
+            c = self.encode_counters
+            c["ticks"] += 1
+            c["sessions"] += stats.sessions
+            c["stacked_sessions"] += stats.stacked_sessions
+            c["fused_launches"] += stats.fused_launches
+            c["entropy_calls"] += stats.entropy_calls
+            c["elems"] += stats.elems
+            c["coded_bytes"] += stats.coded_bytes
+            c["encode_s"] += stats.encode_s
+            for (_, _, session, sent), payloads in zip(queue, payload_lists):
+                frames = payloads_to_frames(payloads, session)
+                try:
+                    async with self._write_lock:
+                        for frame_bytes in frames:
+                            self._writer.write(frame_bytes)
+                        await self._writer.drain()
+                except Exception as e:              # noqa: BLE001
+                    if not sent.done():
+                        sent.set_exception(e)
+                    continue
+                if not sent.done():
+                    sent.set_result(sum(len(f) for f in frames))
+
     async def submit(self, x: np.ndarray,
                      codec: FeatureCodec | None = None) -> SubmitResult:
         """Stream one tensor; resolves when the cloud's RESULT arrives."""
@@ -179,22 +260,26 @@ class EdgeClient:
 
         x = np.asarray(x, np.float32)
         t0 = time.perf_counter()
-        coded = 0
-        gen = tensor_to_frames(codec, x, session,
-                               chunk_elems=self.chunk_elems,
-                               coder_mode=self.coder_mode)
-        while True:
-            # chunk entropy-coding runs off-loop, overlapping the socket
-            frame_bytes = await asyncio.to_thread(next, gen, None)
-            if frame_bytes is None:
-                break
-            coded += len(frame_bytes)
-            async with self._write_lock:
-                self._writer.write(frame_bytes)
-                await self._writer.drain()
-            if self.rate_controller is not None:
-                buf = self._writer.transport.get_write_buffer_size()
-                self.rate_controller.on_queue_depth(buf // (1 << 16))
+        if self.tick is not None:
+            coded = await self._submit_tick(codec, x, session)
+        else:
+            coded = 0
+            gen = tensor_to_frames(codec, x, session,
+                                   chunk_elems=self.chunk_elems,
+                                   coder_mode=self.coder_mode)
+            while True:
+                # chunk entropy-coding runs off-loop, overlapping the
+                # socket
+                frame_bytes = await asyncio.to_thread(next, gen, None)
+                if frame_bytes is None:
+                    break
+                coded += len(frame_bytes)
+                async with self._write_lock:
+                    self._writer.write(frame_bytes)
+                    await self._writer.drain()
+                if self.rate_controller is not None:
+                    buf = self._writer.transport.get_write_buffer_size()
+                    self.rate_controller.on_queue_depth(buf // (1 << 16))
         send_s = time.perf_counter() - t0
 
         arrays = await fut

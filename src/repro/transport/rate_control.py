@@ -328,3 +328,48 @@ class CodecBank:
             codec = self.get(rung)
             controller.seed_estimate(rung,
                                      float(codec.estimate_rate(feats)))
+
+
+# -- worker-level bank sharing ------------------------------------------------
+
+_BANKS: dict[tuple, CodecBank] = {}
+_BANK_STATS = {"hits": 0, "misses": 0}
+
+
+def _bank_key(base_config, samples: np.ndarray, ladder: tuple) -> tuple:
+    import hashlib
+    return (dataclasses.astuple(base_config), samples.shape,
+            hashlib.sha1(np.ascontiguousarray(samples).tobytes()).hexdigest(),
+            tuple(sorted(set(as_rung(r) for r in ladder))))
+
+
+def shared_bank(base_config, samples: np.ndarray,
+                ladder: tuple = DEFAULT_LADDER) -> CodecBank:
+    """Worker-level :class:`CodecBank` cache.
+
+    Rung calibration tables are immutable, so every session of one
+    worker with the same (config, calibration samples, ladder) can share
+    one bank -- calibration runs once per worker instead of once per
+    session.  Keyed by config fields + samples content hash, so a
+    *different* calibration set still gets its own bank.  Hit/miss
+    counts via :func:`bank_cache_stats`.
+    """
+    samples = np.asarray(samples, np.float32)
+    key = _bank_key(base_config, samples, ladder)
+    bank = _BANKS.get(key)
+    if bank is not None:
+        _BANK_STATS["hits"] += 1
+        return bank
+    _BANK_STATS["misses"] += 1
+    bank = _BANKS[key] = CodecBank(base_config, samples, ladder)
+    return bank
+
+
+def bank_cache_stats() -> dict:
+    return {**_BANK_STATS, "entries": len(_BANKS)}
+
+
+def clear_bank_cache() -> None:
+    """Tests only: drop cached banks and zero the counters."""
+    _BANKS.clear()
+    _BANK_STATS.update(hits=0, misses=0)

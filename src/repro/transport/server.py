@@ -1,12 +1,25 @@
 """Cloud-side streaming server (asyncio).
 
 Accepts one or more edge connections, demultiplexes interleaved tensor
-sessions, entropy-decodes chunk frames *as they arrive* (the expensive
-stage overlaps the transfer), and on each END frame reconstructs the
-split-layer tensor and runs the cloud half (``tail_fn``).  The result
-arrays go back in a RESULT frame; a FEEDBACK frame carries
-receiver-measured link throughput and queue depth for the edge-side
-rate controller.
+sessions, and reconstructs split-layer tensors for the cloud half
+(``tail_fn``).  The result arrays go back in a RESULT frame; a FEEDBACK
+frame carries receiver-measured link throughput and queue depth for the
+edge-side rate controller.
+
+Two receive disciplines:
+
+* **tick mode** (default, ``tick=TickConfig()``): arriving chunk frames
+  only accumulate (deferred-mode :class:`TensorAssembler`); a bounded
+  tick window (``max_wait_s`` / ``max_chunks``) then drains every
+  pending chunk of every session -- across connections -- through ONE
+  batched entropy call (:class:`~repro.serving.batcher.DecodeBatcher`),
+  and completed tensors finish + run ``tail_fn`` together.  Stream
+  headers are parsed once per distinct (shape, rung) via a shared
+  :class:`~repro.core.codec.HeaderCache`.  Per-tick metrics land in
+  :attr:`counters`.
+* **per-session mode** (``tick=None``): the original path -- chunks
+  entropy-decode on arrival so decode overlaps the transfer (what
+  ``bench_overlap`` measures), one entropy call per session stream.
 
 Backpressure is the transport's: frames are processed in arrival order
 per connection and the server only reads more bytes once the previous
@@ -26,11 +39,15 @@ from typing import Callable
 
 import numpy as np
 
+from ..core.codec import HeaderCache
+from ..serving.batcher import DecodeBatcher, TickConfig
 from .framing import (FT_CHUNK, FT_END, FT_ERROR, FT_HEADER, FT_RESULT,
                       FrameReader, FramingError, encode_frame, pack_arrays)
 from .stream_codec import Feedback, TensorAssembler
 
 log = logging.getLogger(__name__)
+
+_DEFAULT_TICK = TickConfig()
 
 
 class _Session:
@@ -52,11 +69,17 @@ class CloudServer:
     ``echo_features``: prepend the reconstructed split-layer tensor to
     the RESULT arrays (used by the demo/tests for the bit-exactness
     check and by the loopback serving transport).
+    ``tick``: cross-session batching bounds; ``None`` selects the
+    per-session decode-on-arrival path.
+    ``header_cache``: share a :class:`HeaderCache` across servers of one
+    worker (a fresh one is made per server otherwise).
     """
 
     def __init__(self, *, tail_fn: Callable | None = None,
                  echo_features: bool = False, host: str = "127.0.0.1",
-                 port: int = 0, backend=None) -> None:
+                 port: int = 0, backend=None,
+                 tick: TickConfig | None = _DEFAULT_TICK,
+                 header_cache: HeaderCache | None = None) -> None:
         self.tail_fn = tail_fn
         self.echo_features = echo_features
         self.host = host
@@ -65,6 +88,20 @@ class CloudServer:
         self._server: asyncio.AbstractServer | None = None
         self.sessions_served = 0
         self.open_connections = 0
+        self.tick = tick
+        self._batcher = DecodeBatcher()
+        self._header_cache = (header_cache if header_cache is not None
+                              else HeaderCache())
+        # tensors whose END arrived, awaiting the tick drain:
+        # (sess, session_id, writer, sessions-dict of their connection)
+        self._ready: list[tuple] = []
+        self._drain_lock = asyncio.Lock()
+        self._drain_timer: asyncio.TimerHandle | None = None
+        # decoder id -> (sessions-dict, session_id, writer): lets a drain
+        # failure evict + notify exactly the offending session
+        self._dec_owner: dict[int, tuple] = {}
+        self._tallies = {"ticks": 0, "occupancy_sum": 0, "coded_bytes": 0,
+                         "elems": 0, "decode_errors": 0}
 
     async def start(self) -> "CloudServer":
         self._server = await asyncio.start_server(self._handle, self.host,
@@ -80,6 +117,9 @@ class CloudServer:
         await self.close()
 
     async def close(self) -> None:
+        if self._drain_timer is not None:
+            self._drain_timer.cancel()
+            self._drain_timer = None
         if self._server is not None:
             self._server.close()
             await self._server.wait_closed()
@@ -88,6 +128,29 @@ class CloudServer:
     async def wait_closed(self) -> None:
         if self._server is not None:
             await self._server.serve_forever()
+
+    @property
+    def counters(self) -> dict:
+        """Structured per-tick metrics (the observability satellite)."""
+        c = {"sessions_served": self.sessions_served,
+             "open_connections": self.open_connections}
+        if self.tick is None:
+            return c
+        b = self._batcher.counters
+        t = self._tallies
+        c.update(
+            ticks=t["ticks"],
+            batch_occupancy_avg=t["occupancy_sum"] / max(t["ticks"], 1),
+            queue_depth=self._batcher.pending_sessions + len(self._ready),
+            entropy_calls=b["entropy_calls"],
+            entropy_chunks=b["chunks"],
+            entropy_melem_per_s=(b["elems"] / b["entropy_s"] / 1e6
+                                 if b["entropy_s"] > 0 else 0.0),
+            bpe_avg=8.0 * t["coded_bytes"] / max(t["elems"], 1),
+            decode_errors=t["decode_errors"],
+            header_cache=self._header_cache.stats,
+        )
+        return c
 
     # -- connection handling --------------------------------------------------
 
@@ -121,6 +184,7 @@ class CloudServer:
             pass
         finally:
             self.open_connections -= 1
+            self._forget_connection(sessions, writer)
             writer.close()
             try:
                 await writer.wait_closed()
@@ -129,10 +193,170 @@ class CloudServer:
             log.info("edge disconnected: %s", peer)
 
     async def _on_tensor_frame(self, frame, sessions, writer) -> None:
+        if self.tick is None:
+            await self._on_tensor_frame_immediate(frame, sessions, writer)
+            return
         sess = sessions.get(frame.session)
         if sess is None:
             sess = sessions[frame.session] = _Session(
-                TensorAssembler(backend=self._backend))
+                TensorAssembler(backend=self._backend, defer=True,
+                                header_cache=self._header_cache))
+        t0 = time.perf_counter()
+        # deferred mode: no entropy work here, just buffering -- cheap
+        # enough to run on-loop
+        sess.assembler.feed(frame)
+        sess.decode_s += time.perf_counter() - t0
+        dec = sess.assembler.decoder
+        if dec is not None:
+            self._batcher.note(dec)
+            if id(dec) not in self._dec_owner:
+                self._dec_owner[id(dec)] = (sessions, frame.session, writer)
+        if sess.assembler.ready:
+            del sessions[frame.session]
+            self._ready.append((sess, frame.session, writer, sessions))
+        if (len(self._ready) >= self.tick.max_batch
+                or self._batcher.pending_chunks >= self.tick.max_chunks
+                # a session is complete and no entropy work is queued:
+                # nothing could batch with it, so waiting out the tick
+                # window would be pure latency (hit after a max_chunks
+                # mid-stream drain already flushed the chunks)
+                or (self._ready and self._batcher.pending_chunks == 0)):
+            await self._drain_tick()
+        elif self._ready or self._batcher.pending_sessions:
+            self._arm_drain_timer()
+
+    def _arm_drain_timer(self) -> None:
+        if self._drain_timer is not None:
+            return
+        loop = asyncio.get_running_loop()
+        self._drain_timer = loop.call_later(
+            self.tick.max_wait_s,
+            lambda: loop.create_task(self._drain_tick()))
+
+    async def _drain_tick(self) -> None:
+        async with self._drain_lock:
+            if self._drain_timer is not None:
+                self._drain_timer.cancel()
+                self._drain_timer = None
+            ready, self._ready = self._ready, []
+            if not ready and not self._batcher.pending_sessions:
+                return
+            # ONE batched entropy pass over every pending chunk of every
+            # session, across connections
+            failures = await asyncio.to_thread(self._batcher.drain)
+            for dec, exc in failures:
+                await self._evict_decoder(dec, exc)
+                ready = [e for e in ready if e[0].assembler.decoder is not dec]
+            outs = await asyncio.to_thread(self._finish_ready,
+                                           [e[0] for e in ready])
+            self._tallies["ticks"] += 1
+            self._tallies["occupancy_sum"] += len(ready)
+            for (sess, session_id, writer, sessions), out in zip(ready, outs):
+                dec = sess.assembler.decoder
+                self._dec_owner.pop(id(dec), None)
+                if isinstance(out, Exception):
+                    self._tallies["decode_errors"] += 1
+                    await self._send_error(writer, session_id, out)
+                    continue
+                arrays, work_s = out
+                sess.decode_s += work_s
+                self.sessions_served += 1
+                self._tallies["coded_bytes"] += sess.assembler.chunk_bytes
+                self._tallies["elems"] += sess.assembler.n_elems
+                await self._send_result(sess, session_id, writer, sessions,
+                                        arrays)
+
+    def _finish_ready(self, sesses: list[_Session]) -> list:
+        """Reconstruct + run ``tail_fn`` for each drained session (worker
+        thread; entropy is already done, so finish() is dequantize +
+        reshape).  A per-session exception is returned in place so one
+        bad stream cannot sink its tickmates."""
+        outs = []
+        for sess in sesses:
+            t0 = time.perf_counter()
+            try:
+                tensor = sess.assembler.finish()
+                arrays = [tensor] if self.echo_features else []
+                if self.tail_fn is not None:
+                    out = self.tail_fn(tensor)
+                    arrays.extend(out if isinstance(out, (list, tuple))
+                                  else [out])
+                outs.append((arrays, time.perf_counter() - t0))
+            except Exception as e:                  # noqa: BLE001
+                outs.append(e)
+        return outs
+
+    async def _evict_decoder(self, dec, exc) -> None:
+        """A decoder failed the batched drain: evict + notify exactly
+        that session, leave its tickmates untouched."""
+        self._tallies["decode_errors"] += 1
+        self._batcher.discard(dec)
+        owner = self._dec_owner.pop(id(dec), None)
+        if owner is None:
+            return
+        sessions, session_id, writer = owner
+        sessions.pop(session_id, None)
+        log.error("decode failed for session %d: %s", session_id, exc)
+        await self._send_error(writer, session_id, exc)
+
+    async def _send_error(self, writer, session_id: int, exc) -> None:
+        try:
+            writer.write(encode_frame(FT_ERROR, session_id, 0,
+                                      str(exc).encode()))
+            await writer.drain()
+        except (ConnectionError, RuntimeError):
+            pass
+
+    async def _send_result(self, sess: _Session, session_id: int, writer,
+                           sessions, arrays) -> None:
+        elapsed = max(time.perf_counter() - sess.t_first, 1e-9)
+        fb = Feedback(
+            recv_bytes_per_s=sess.assembler.chunk_bytes / elapsed,
+            decode_s=sess.decode_s,
+            queue_depth=len(sessions),
+            active_sessions=len(sessions),
+        )
+        # FEEDBACK goes out *before* RESULT: the client resolves the
+        # session on RESULT, so in-order delivery guarantees the submit
+        # sees its own link stats
+        try:
+            writer.write(fb.encode(session_id, sess.seq))
+            writer.write(encode_frame(FT_RESULT, session_id, sess.seq + 1,
+                                      pack_arrays([np.asarray(a)
+                                                   for a in arrays])))
+            await writer.drain()
+        except (ConnectionError, RuntimeError):
+            pass
+
+    def _forget_connection(self, sessions, writer) -> None:
+        """Connection gone: unregister its in-flight decoders from the
+        batcher so the next drain only sees live sessions."""
+        for sess in sessions.values():
+            self._forget_session(sess)
+        sessions.clear()
+        kept = []
+        for entry in self._ready:
+            if entry[2] is writer:
+                self._forget_session(entry[0])
+            else:
+                kept.append(entry)
+        self._ready = kept
+
+    def _forget_session(self, sess: _Session) -> None:
+        dec = sess.assembler.decoder
+        if dec is not None:
+            self._batcher.discard(dec)
+            self._dec_owner.pop(id(dec), None)
+
+    # -- per-session (tick=None) path -----------------------------------------
+
+    async def _on_tensor_frame_immediate(self, frame, sessions,
+                                         writer) -> None:
+        sess = sessions.get(frame.session)
+        if sess is None:
+            sess = sessions[frame.session] = _Session(
+                TensorAssembler(backend=self._backend,
+                                header_cache=self._header_cache))
         t0 = time.perf_counter()
         tensor = await asyncio.to_thread(sess.assembler.feed, frame)
         sess.decode_s += time.perf_counter() - t0
@@ -146,17 +370,4 @@ class CloudServer:
             out = await asyncio.to_thread(self.tail_fn, tensor)
             sess.decode_s += time.perf_counter() - t0
             arrays.extend(out if isinstance(out, (list, tuple)) else [out])
-        elapsed = max(time.perf_counter() - sess.t_first, 1e-9)
-        fb = Feedback(
-            recv_bytes_per_s=sess.assembler.chunk_bytes / elapsed,
-            decode_s=sess.decode_s,
-            queue_depth=len(sessions),
-            active_sessions=len(sessions),
-        )
-        # FEEDBACK goes out *before* RESULT: the client resolves the
-        # session on RESULT, so in-order delivery guarantees the submit
-        # sees its own link stats
-        writer.write(fb.encode(frame.session, sess.seq))
-        writer.write(encode_frame(FT_RESULT, frame.session, sess.seq + 1,
-                                  pack_arrays([np.asarray(a) for a in arrays])))
-        await writer.drain()
+        await self._send_result(sess, frame.session, writer, sessions, arrays)

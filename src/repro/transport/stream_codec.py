@@ -20,7 +20,7 @@ import struct
 
 import numpy as np
 
-from ..core.codec import ChunkStreamDecoder, FeatureCodec
+from ..core.codec import STREAM_CHUNK_BATCH, ChunkStreamDecoder, FeatureCodec
 from .framing import (FT_CHUNK, FT_END, FT_FEEDBACK, FT_HEADER, Frame,
                       encode_frame)
 
@@ -63,6 +63,19 @@ def tensor_to_frames(codec: FeatureCodec, x: np.ndarray, session: int,
     yield encode_frame(FT_END, session, seq, struct.pack(_END_FMT, seq - 1))
 
 
+def payloads_to_frames(payloads: list[bytes], session: int) -> list[bytes]:
+    """Wire frames (HEADER, CHUNKs, END) for an already-encoded payload
+    list (the cross-session batcher's per-session output).  Frame-for-
+    frame identical to :func:`tensor_to_frames` over the same payloads --
+    the batched and per-session send paths put the same bytes on the
+    wire."""
+    frames = [encode_frame(FT_HEADER if i == 0 else FT_CHUNK, session, i, p)
+              for i, p in enumerate(payloads)]
+    frames.append(encode_frame(FT_END, session, len(payloads),
+                               struct.pack(_END_FMT, len(payloads) - 1)))
+    return frames
+
+
 class TensorAssembler:
     """Per-session receiver: feed frames, get the reconstructed tensor.
 
@@ -70,11 +83,21 @@ class TensorAssembler:
     with the in-process ``codec.decode(codec.encode(x))`` path) when the
     END frame completes the tensor, else None.  Chunk frames are
     entropy-decoded in arrival batches (see :class:`ChunkStreamDecoder`).
+
+    ``defer=True`` is the serving-tick mode: ``feed`` never decodes or
+    finishes (it always returns None; chunks accumulate in a
+    ``chunk_batch=0`` decoder for a cross-session ``flush_decoders``
+    drain), completion is polled via :attr:`ready` and the reconstruction
+    fetched with :meth:`finish`.  ``header_cache`` shares parsed headers
+    across a worker's sessions.
     """
 
-    def __init__(self, *, backend=None, ecsq=None) -> None:
+    def __init__(self, *, backend=None, ecsq=None, defer: bool = False,
+                 header_cache=None) -> None:
         self._backend = backend
         self._ecsq = ecsq
+        self._defer = defer
+        self._header_cache = header_cache
         self._dec: ChunkStreamDecoder | None = None
         self._end_chunks: int | None = None
         self.chunk_bytes = 0          # coded payload bytes seen so far
@@ -84,15 +107,32 @@ class TensorAssembler:
         return self._dec is not None
 
     @property
+    def decoder(self) -> ChunkStreamDecoder | None:
+        """The underlying stream decoder (what a cross-session drain
+        registers with a :class:`~repro.serving.batcher.DecodeBatcher`)."""
+        return self._dec
+
+    @property
     def n_elems(self) -> int:
         if self._dec is None:
             raise ValueError("no HEADER frame yet")
         return self._dec.header.n_elems
 
+    @property
+    def ready(self) -> bool:
+        """END seen and every chunk arrived (entropy work may still be
+        pending in deferred mode)."""
+        return (self._end_chunks is not None and self._dec is not None
+                and self._dec.complete)
+
+    def finish(self) -> np.ndarray:
+        """Reconstruct (deferred mode; drains any still-pending chunks)."""
+        if not self.ready:
+            raise ValueError("tensor stream not complete")
+        return self._dec.finish()
+
     def _maybe_finish(self) -> np.ndarray | None:
-        if self._end_chunks is None or self._dec is None:
-            return None
-        if not self._dec.complete:
+        if self._defer or not self.ready:
             return None
         return self._dec.finish()
 
@@ -100,9 +140,10 @@ class TensorAssembler:
         if frame.ftype == FT_HEADER:
             if self._dec is not None:
                 raise ValueError("duplicate HEADER frame")
-            self._dec = ChunkStreamDecoder(frame.payload,
-                                           backend=self._backend,
-                                           ecsq=self._ecsq)
+            self._dec = ChunkStreamDecoder(
+                frame.payload, backend=self._backend, ecsq=self._ecsq,
+                chunk_batch=0 if self._defer else STREAM_CHUNK_BATCH,
+                header_cache=self._header_cache)
             self.chunk_bytes += len(frame.payload)
             return self._maybe_finish()
         if frame.ftype == FT_CHUNK:
