@@ -86,6 +86,14 @@ RATIO_KEYS = KINDS["codec"]["ratio"]
 ABS_KEYS = KINDS["codec"]["abs"]
 BOOL_KEYS = KINDS["codec"]["bool"]
 
+# the observability-overhead gates (bench_transport's `obs` section) are
+# opt-in via --obs-overhead so bench JSONs predating that section keep
+# passing: tracing enabled must cost < 2% encode-tick throughput,
+# disabled span sites ~0%, and leaf spans must account for the roundtrip
+OBS_BOOL_KEYS = ("obs.overhead_enabled_lt_2pct",
+                 "obs.overhead_disabled_lt_0p1pct",
+                 "obs.span_sum_within_10pct")
+
 
 def _flatten(d: dict, prefix: str = "") -> dict:
     """Nested dicts -> dotted-key scalars ({"a": {"b": 1}} -> {"a.b": 1})."""
@@ -167,7 +175,14 @@ def main() -> int:
                     help="max fractional drop for ratio metrics")
     ap.add_argument("--abs-tolerance", type=float, default=0.5,
                     help="max fractional drop for absolute Melem/s")
+    ap.add_argument("--obs-overhead", action="store_true",
+                    help="additionally gate the observability-overhead "
+                         "booleans (the transport bench's obs.* keys)")
     args = ap.parse_args()
+    if args.obs_overhead:
+        spec = dict(KINDS[args.kind])
+        spec["bool"] = tuple(spec["bool"]) + OBS_BOOL_KEYS
+        KINDS[args.kind] = spec
     baseline_path = args.baseline or KINDS[args.kind]["baseline"]
     with open(args.current) as f:
         current = json.load(f)

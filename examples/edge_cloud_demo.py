@@ -51,9 +51,12 @@ def build_model(args):
 def run_cloud(args):
     """Cloud half: decode streamed features, run the tail, reply."""
     from repro.models import forward_from_boundary
+    from repro.obs import configure_tracing, tracer
     from repro.transport import CloudServer
 
     cfg, params = build_model(args)
+    if args.obs_events:
+        configure_tracing(enabled=True)
 
     def tail_fn(feats):
         logits = forward_from_boundary(cfg, params, feats)
@@ -61,9 +64,14 @@ def run_cloud(args):
 
     async def main():
         server = CloudServer(tail_fn=tail_fn, echo_features=True,
-                             port=args.port)
+                             port=args.port,
+                             metrics_port=args.metrics_port)
         await server.start()
         print(f"[cloud] serving on 127.0.0.1:{server.port}", flush=True)
+        if server.metrics_port is not None:
+            print(f"[cloud] metrics on "
+                  f"http://127.0.0.1:{server.metrics_port}/metrics",
+                  flush=True)
         # exit once every session is served AND the edge has disconnected
         # (its disconnect confirms it received all results)
         while True:
@@ -75,6 +83,10 @@ def run_cloud(args):
         print(f"[cloud] done: {server.sessions_served} sessions", flush=True)
 
     asyncio.run(main())
+    if args.obs_events:
+        path = args.obs_events + ".cloud.json"
+        tracer().dump_events(path)
+        print(f"[cloud] span log -> {path}", flush=True)
 
 
 def run_edge(args):
@@ -83,7 +95,11 @@ def run_edge(args):
 
     from repro.core import CodecConfig, calibrate
     from repro.models import forward_from_boundary, forward_head
+    from repro.obs import configure_tracing, tracer
     from repro.transport import EdgeClient
+
+    if args.obs_events:
+        configure_tracing(enabled=True)
 
     cfg, params = build_model(args)
     rng = np.random.default_rng(0)
@@ -115,6 +131,8 @@ def run_edge(args):
             results = await asyncio.gather(
                 *[client.submit(f) for f in feats])
             wall = time.perf_counter() - t0
+            if args.metrics_port:
+                await check_metrics(args, client)
         ok = True
         for i, (f, res) in enumerate(zip(feats, results)):
             recon_cloud = np.asarray(res.arrays[0], np.float32) \
@@ -140,6 +158,39 @@ def run_edge(args):
               "in-process encode/decode", flush=True)
 
     asyncio.run(main())
+    if args.obs_events:
+        tracer().dump_events(args.obs_events)
+        print(f"[edge] span log -> {args.obs_events}", flush=True)
+
+
+async def check_metrics(args, client):
+    """Scrape the cloud's /metrics endpoint while the session is live and
+    assert the exposition is parseable + carries the expected
+    instruments; also exercise the in-band FT_METRICS snapshot."""
+    import urllib.request
+
+    from repro.obs import parse_prometheus_text
+
+    url = f"http://127.0.0.1:{args.metrics_port}/metrics"
+    text = await asyncio.to_thread(
+        lambda: urllib.request.urlopen(url, timeout=5).read().decode())
+    families = parse_prometheus_text(text)   # raises on malformed lines
+    required = [
+        "repro_server_sessions_served_total",
+        "repro_server_ticks_total",
+        "repro_server_coded_bytes_total",
+        "repro_server_measured_bpe",
+        "repro_server_header_cache_hits_count",
+        "repro_decode_entropy_calls_total",
+        "repro_bank_cache_hits_total",
+    ]
+    missing = [n for n in required if n not in families]
+    if missing:
+        raise SystemExit(f"[edge] metrics scrape missing {missing}")
+    snap = await client.fetch_cloud_metrics()
+    served = snap["counters"]["sessions_served"]
+    print(f"[edge] metrics scrape OK: {len(families)} families from {url}; "
+          f"FT_METRICS snapshot says sessions_served={served}", flush=True)
 
 
 def main():
@@ -159,6 +210,13 @@ def main():
                          "wire")
     ap.add_argument("--chunk-elems", type=int, default=2048)
     ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="cloud serves Prometheus-text /metrics here and "
+                         "the edge scrapes + validates it (0 with "
+                         "--role both = pick a free port)")
+    ap.add_argument("--obs-events", metavar="PATH", default=None,
+                    help="enable stage tracing; dump the JSON span log "
+                         "to PATH (edge) and PATH.cloud.json (cloud)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes for CI")
     args = ap.parse_args()
@@ -170,18 +228,27 @@ def main():
     elif args.role == "edge":
         run_edge(args)
     else:
+        import socket
         if args.port == 0:
             # pick a free port for the pair
-            import socket
             with socket.socket() as s:
                 s.bind(("127.0.0.1", 0))
                 args.port = s.getsockname()[1]
+        if args.metrics_port == 0:
+            # both halves need to agree on the scrape port up front
+            with socket.socket() as s:
+                s.bind(("127.0.0.1", 0))
+                args.metrics_port = s.getsockname()[1]
         flags = [f"--port={args.port}", f"--sessions={args.sessions}",
                  f"--batch={args.batch}", f"--seq={args.seq}",
                  f"--d-model={args.d_model}", f"--levels={args.levels}",
                  f"--granularity={args.granularity}",
                  f"--chunk-elems={args.chunk_elems}",
                  f"--seed={args.seed}"]
+        if args.metrics_port is not None:
+            flags.append(f"--metrics-port={args.metrics_port}")
+        if args.obs_events:
+            flags.append(f"--obs-events={args.obs_events}")
         cloud = subprocess.Popen(
             [sys.executable, __file__, "--role=cloud"] + flags)
         try:

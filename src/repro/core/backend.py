@@ -59,6 +59,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs.tracing import span, tracer
 from . import uniform
 from .tiling import TileECSQ, TilePlan
 
@@ -269,7 +270,18 @@ class JnpBackend:
         """Fused-encode contract on the reference path: coded-order
         indices plus (optionally) host per-tile histograms."""
         spec = _normalize(spec)
-        coded = _coded_order(np.asarray(self.quantize(x, spec)), spec)
+        tr = tracer()
+        with tr.span("fused_launch", backend=self.name), \
+                tr.annotate("repro.encode_fused"):
+            q = self.quantize(x, spec)
+            if tr.enabled:
+                # bound the launch span at the device sync, so the
+                # device_to_host span measures only the transfer
+                q = jax.block_until_ready(q)
+        with tr.span("device_to_host"):
+            q = np.asarray(q)
+        with tr.span("host_unpack"):
+            coded = _coded_order(q, spec)
         hists = _tile_hists_np(coded, spec) if want_hist else None
         return coded, hists
 
@@ -381,30 +393,49 @@ class KernelBackend:
         from ..kernels import ops
         from ..kernels.fused_clip_quant import HIST_WIDTH
         spec = _normalize(spec)
+        tr = tracer()
         if spec.ecsq is not None or spec.n_levels > HIST_WIDTH:
             # no fused kernel for designed quantizers / wide histograms:
             # kernel-quantize, then the host fallback of the contract
-            coded = _coded_order(np.asarray(self.quantize(x, spec)), spec)
+            with tr.span("fused_launch", backend=self.name), \
+                    tr.annotate("repro.encode_fused"):
+                q = self.quantize(x, spec)
+                if tr.enabled:
+                    q = jax.block_until_ready(q)
+            with tr.span("device_to_host"):
+                q = np.asarray(q)
+            with tr.span("host_unpack"):
+                coded = _coded_order(q, spec)
             return coded, (_tile_hists_np(coded, spec) if want_hist
                            else None)
-        if spec.plan is None:
-            packed, hist, lay = ops.encode_fused(
-                x, float(spec.cmin), float(spec.cmax),
-                n_levels=spec.n_levels, bits=bits,
-                interpret=self.interpret)
-        else:
-            plan = spec.plan
-            plan.resolve(x.shape)
-            lo = np.asarray(spec.cmin, np.float32).reshape(
-                plan.n_cgroups, plan.n_sblocks)
-            hi = np.asarray(spec.cmax, np.float32).reshape(
-                plan.n_cgroups, plan.n_sblocks)
-            packed, hist, lay = ops.encode_fused(
-                x, lo, hi, n_levels=spec.n_levels, bits=bits,
-                plan=plan, interpret=self.interpret)
-        coded = lay.unpack_indices(ops.unpack_bytes(np.asarray(packed),
-                                                    bits))
-        hists = lay.group_hists(np.asarray(hist), spec.n_levels,
+        with tr.span("fused_launch", backend=self.name), \
+                tr.annotate("repro.encode_fused"):
+            if spec.plan is None:
+                packed, hist, lay = ops.encode_fused(
+                    x, float(spec.cmin), float(spec.cmax),
+                    n_levels=spec.n_levels, bits=bits,
+                    interpret=self.interpret)
+            else:
+                plan = spec.plan
+                plan.resolve(x.shape)
+                lo = np.asarray(spec.cmin, np.float32).reshape(
+                    plan.n_cgroups, plan.n_sblocks)
+                hi = np.asarray(spec.cmax, np.float32).reshape(
+                    plan.n_cgroups, plan.n_sblocks)
+                packed, hist, lay = ops.encode_fused(
+                    x, lo, hi, n_levels=spec.n_levels, bits=bits,
+                    plan=plan, interpret=self.interpret)
+            if tr.enabled:
+                # bound the launch at the device sync so the transfer
+                # span below measures only the packed-bytes fetch (the
+                # path's single device->host transfer)
+                packed = jax.block_until_ready(packed)
+        with tr.span("device_to_host"):
+            packed = np.asarray(packed)
+            hist = np.asarray(hist) if want_hist else hist
+        with tr.span("host_unpack"):
+            coded = lay.unpack_indices(ops.unpack_bytes(packed, bits))
+        hists = lay.group_hists(hist, spec.n_levels,
                                 HIST_WIDTH) if want_hist else None
         return coded, hists
 

@@ -47,6 +47,7 @@ from typing import Literal
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs.tracing import span
 from . import aciq, cabac, clipping
 from .backend import QuantSpec, get_backend, spec_from_numpy
 from .distributions import FeatureModel
@@ -335,9 +336,10 @@ class ChunkStreamDecoder:
         pending, self._pending = self._pending, []
         bounds = [self._bounds(cid) for cid, _ in pending]
         try:
-            decoded = cabac.decode_indices_batch(
-                [blob for _, blob in pending],
-                [b - a for a, b in bounds], self.header.n_levels)
+            with span("entropy_decode", chunks=len(pending)):
+                decoded = cabac.decode_indices_batch(
+                    [blob for _, blob in pending],
+                    [b - a for a, b in bounds], self.header.n_levels)
         except Exception:
             # un-see the whole batch so the caller can re-request the
             # bad chunk(s) -- a corrupt payload must not poison the
@@ -376,10 +378,12 @@ class ChunkStreamDecoder:
             missing = int((~self._seen).sum())
             raise ValueError(f"stream incomplete: {missing} chunks missing")
         self._flush()
-        return reconstruct_indices(self._idx, self.header,
-                                   backend=self._backend, ecsq=self._ecsq,
-                                   shape=self.shape if shape is None
-                                   else shape)
+        with span("dequantize", n_elems=self.header.n_elems):
+            return reconstruct_indices(self._idx, self.header,
+                                       backend=self._backend,
+                                       ecsq=self._ecsq,
+                                       shape=self.shape if shape is None
+                                       else shape)
 
 
 def flush_decoders(decoders) -> tuple[int, int, list]:
@@ -420,7 +424,9 @@ def flush_decoders(decoders) -> tuple[int, int, list]:
             levels.append(dec.header.n_levels)
             owners.append((dec, a, b))
     try:
-        decoded = cabac.decode_indices_batch(payloads, counts, levels)
+        with span("entropy_decode", chunks=len(payloads),
+                  sessions=len(work)):
+            decoded = cabac.decode_indices_batch(payloads, counts, levels)
     except Exception:
         failures = []
         n_chunks = n_elems = 0
@@ -672,8 +678,9 @@ class FeatureCodec:
         header, _ = self._header(x)
         coded = self._fused_indices(x)[0] if fused \
             else self._coded_indices(x)
-        payload = cabac.encode_indices(coded, self.config.n_levels,
-                                       mode=coder_mode)
+        with span("entropy_encode", n_elems=int(coded.size)):
+            payload = cabac.encode_indices(coded, self.config.n_levels,
+                                           mode=coder_mode)
         return header + payload
 
     def decode(self, data: bytes, shape=None) -> np.ndarray:
@@ -742,9 +749,11 @@ class FeatureCodec:
         batch = max(1, chunk_batch)
         for c0 in range(0, n_chunks, batch):
             ids = range(c0, min(c0 + batch, n_chunks))
-            blobs = cabac.encode_indices_batch(
-                [idx[c * chunk_elems:(c + 1) * chunk_elems] for c in ids],
-                self.config.n_levels, mode=coder_mode)
+            with span("entropy_encode", chunks=len(ids)):
+                blobs = cabac.encode_indices_batch(
+                    [idx[c * chunk_elems:(c + 1) * chunk_elems]
+                     for c in ids],
+                    self.config.n_levels, mode=coder_mode)
             for c, blob in zip(ids, blobs):
                 yield struct.pack("<I", c) + blob
 
@@ -821,6 +830,20 @@ def calibrate(config: CodecConfig,
               stats: RunningStats | None = None,
               sample_mean: float | None = None,
               sample_var: float | None = None) -> FeatureCodec:
+    """Build a codec from calibration data or pre-computed stats (see
+    :func:`_calibrate_impl` for the modes); traced as one ``calibrate``
+    pipeline span."""
+    with span("calibrate", granularity=config.granularity,
+              n_levels=config.n_levels, clip_mode=config.clip_mode):
+        return _calibrate_impl(config, samples, stats, sample_mean,
+                               sample_var)
+
+
+def _calibrate_impl(config: CodecConfig,
+                    samples: np.ndarray | None = None,
+                    stats: RunningStats | None = None,
+                    sample_mean: float | None = None,
+                    sample_var: float | None = None) -> FeatureCodec:
     """Build a codec from calibration data or pre-computed stats.
 
     ``model`` / ``aciq`` modes need only (mean, var) / samples respectively;

@@ -92,7 +92,8 @@ def _calibrate_warmup(cfg, params, args):
     return codec
 
 
-def _loopback_codec_fn(codec, chunk_elems: int, tick_ms: float = 0.0):
+def _loopback_codec_fn(codec, chunk_elems: int, tick_ms: float = 0.0,
+                       metrics_port: int | None = None):
     """Split-boundary hook that streams every tensor over localhost.
 
     Starts a CloudServer (echoing reconstructions) on a daemon thread and
@@ -128,13 +129,16 @@ def _loopback_codec_fn(codec, chunk_elems: int, tick_ms: float = 0.0):
     threading.Thread(target=loop.run_forever, name="cloud-server",
                      daemon=True).start()
     tick = TickConfig(max_wait_s=tick_ms / 1e3)
-    server = CloudServer(echo_features=True, tick=tick)
+    server = CloudServer(echo_features=True, tick=tick,
+                         metrics_port=metrics_port)
     asyncio.run_coroutine_threadsafe(server.start(), loop).result()
     client = SyncEdgeClient("127.0.0.1", server.port, codec=codec,
                             chunk_elems=chunk_elems,
                             tick=tick if tick_ms > 0 else None)
     print(f"loopback transport: streaming split tensors via "
           f"127.0.0.1:{server.port} (tick window {tick_ms:.1f}ms)")
+    if server.metrics_port is not None:
+        print(f"metrics: http://127.0.0.1:{server.metrics_port}/metrics")
 
     def host_roundtrip(x):
         res = client.submit(np.asarray(x, np.float32))
@@ -201,8 +205,22 @@ def main():
                          "ordered io_callback keeps one tensor in "
                          "flight, so >0 only helps with several engines "
                          "sharing the worker)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve Prometheus-text telemetry on this port "
+                         "alongside the loopback CloudServer (0 = pick a "
+                         "free one); needs --transport loopback")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="enable pipeline stage tracing and mirror the "
+                         "JSON span log to PATH")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
+
+    if args.metrics_port is not None and args.transport != "loopback":
+        ap.error("--metrics-port needs --transport loopback")
+    if args.trace is not None:
+        from ..obs import configure_tracing
+        configure_tracing(enabled=True, event_log_path=args.trace)
+        print(f"stage tracing on: span log -> {args.trace}")
 
     import jax
 
@@ -221,8 +239,9 @@ def main():
     if args.codec_levels:
         codec = _calibrate_warmup(cfg, params, args)
         if args.transport == "loopback":
-            codec_fn, cleanup = _loopback_codec_fn(codec, args.chunk_elems,
-                                                   args.tick_ms)
+            codec_fn, cleanup = _loopback_codec_fn(
+                codec, args.chunk_elems, args.tick_ms,
+                metrics_port=args.metrics_port)
             codec = None
     elif args.transport == "loopback":
         ap.error("--transport loopback needs --codec-levels")

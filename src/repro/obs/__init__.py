@@ -1,0 +1,50 @@
+"""Unified observability layer: metrics, stage tracing, exposition.
+
+Dependency-free (stdlib only).  Three pieces:
+
+- :mod:`repro.obs.metrics` -- a thread-safe :class:`MetricsRegistry` of
+  typed Counter/Gauge/Histogram instruments with label support and
+  Prometheus text-format rendering.  Instrument names follow the
+  ``repro_<subsystem>_<name>_<unit>`` convention (enforced at
+  registration; see ``validate_name``).
+- :mod:`repro.obs.tracing` -- span-based stage tracing through the tick
+  pipeline (calibrate, fused launch, device->host, entropy, framing,
+  socket write, tick drain, tail inference).  Disabled by default; when
+  enabled it emits a structured JSON event log and feeds the
+  ``repro_pipeline_stage_latency_seconds`` histogram.
+- :mod:`repro.obs.exposition` -- a minimal asyncio HTTP endpoint serving
+  ``GET /metrics`` (Prometheus text 0.0.4) and ``GET /events`` (the JSON
+  span log), plus a text-format parser for tests/CI.
+"""
+
+from .exposition import MetricsExposition, parse_prometheus_text
+from .metrics import (
+    BPE_BUCKETS,
+    LATENCY_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    default_registry,
+    render_registries,
+    validate_name,
+)
+from .tracing import Tracer, configure_tracing, span, tracer
+
+__all__ = [
+    "BPE_BUCKETS",
+    "LATENCY_BUCKETS",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsExposition",
+    "MetricsRegistry",
+    "Tracer",
+    "configure_tracing",
+    "default_registry",
+    "parse_prometheus_text",
+    "render_registries",
+    "span",
+    "tracer",
+    "validate_name",
+]

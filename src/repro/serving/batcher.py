@@ -67,6 +67,8 @@ from ..core import cabac
 from ..core.backend import QuantSpec
 from ..core.codec import _STREAM_META_FMT, FeatureCodec, flush_decoders
 from ..core.tiling import TileECSQ, TilePlan
+from ..obs.metrics import MetricsRegistry
+from ..obs.tracing import span
 
 # transport's DEFAULT_CHUNK_ELEMS without importing transport (serving
 # must not depend on the wire layer); the value is asserted equal in
@@ -235,7 +237,8 @@ def encode_tick(items, cfg: TickConfig = TickConfig()
         for b0 in range(0, len(members), cfg.max_batch):
             batch = members[b0:b0 + cfg.max_batch]
             xs = [items[i][1] for i in batch]
-            stacked = stack_group(codec, xs) if len(batch) > 1 else None
+            with span("stack_scatter", sessions=len(batch)):
+                stacked = stack_group(codec, xs) if len(batch) > 1 else None
             if stacked is None:
                 for i in batch:
                     coded[i] = codec._fused_indices(items[i][1])[0]
@@ -246,8 +249,9 @@ def encode_tick(items, cfg: TickConfig = TickConfig()
                                              codec.bits_per_index())[0]
             stats.fused_launches += 1
             stats.stacked_sessions += len(batch)
-            for i, part in zip(batch, split_coded(codec, out, xs)):
-                coded[i] = part
+            with span("stack_scatter", sessions=len(batch)):
+                for i, part in zip(batch, split_coded(codec, out, xs)):
+                    coded[i] = part
 
     # every chunk segment of the tick through one batched entropy call;
     # payloads are per-segment independent, so this is byte-identical to
@@ -257,33 +261,38 @@ def encode_tick(items, cfg: TickConfig = TickConfig()
     seg_owner: list[int] = []
     headers: list[bytes] = []
     chunking: list[tuple[int, int]] = []      # (chunk_elems, n_chunks)
-    for i, (codec, x) in enumerate(items):
-        chunk_elems = cfg.chunk_elems
-        if codec.plan is not None:
-            chunk_elems = codec.plan.align_chunk_elems(chunk_elems, x.shape)
-        idx = coded[i]
-        n_chunks = max(1, -(-idx.size // chunk_elems))
-        header, _ = codec._header(x)
-        meta = struct.pack(_STREAM_META_FMT, chunk_elems, n_chunks, x.ndim)
-        meta += np.asarray(x.shape, "<u4").tobytes()
-        headers.append(meta + header)
-        chunking.append((chunk_elems, n_chunks))
-        for c in range(n_chunks):
-            segments.append(idx[c * chunk_elems:(c + 1) * chunk_elems])
-            seg_levels.append(codec.config.n_levels)
-            seg_owner.append(i)
-        stats.elems += int(x.size)
-    blobs = cabac.encode_indices_batch(segments, seg_levels,
-                                       mode=cfg.coder_mode)
+    with span("framing", sessions=len(items)):
+        for i, (codec, x) in enumerate(items):
+            chunk_elems = cfg.chunk_elems
+            if codec.plan is not None:
+                chunk_elems = codec.plan.align_chunk_elems(chunk_elems,
+                                                           x.shape)
+            idx = coded[i]
+            n_chunks = max(1, -(-idx.size // chunk_elems))
+            header, _ = codec._header(x)
+            meta = struct.pack(_STREAM_META_FMT, chunk_elems, n_chunks,
+                               x.ndim)
+            meta += np.asarray(x.shape, "<u4").tobytes()
+            headers.append(meta + header)
+            chunking.append((chunk_elems, n_chunks))
+            for c in range(n_chunks):
+                segments.append(idx[c * chunk_elems:(c + 1) * chunk_elems])
+                seg_levels.append(codec.config.n_levels)
+                seg_owner.append(i)
+            stats.elems += int(x.size)
+    with span("entropy_encode", chunks=len(segments)):
+        blobs = cabac.encode_indices_batch(segments, seg_levels,
+                                           mode=cfg.coder_mode)
     stats.entropy_calls = 1
 
-    payloads: list[list[bytes]] = [[h] for h in headers]
-    next_cid = [0] * len(items)
-    for owner, blob in zip(seg_owner, blobs):
-        cid = next_cid[owner]
-        next_cid[owner] += 1
-        payloads[owner].append(struct.pack("<I", cid) + blob)
-    stats.coded_bytes = sum(len(p) for pl in payloads for p in pl)
+    with span("framing", sessions=len(items)):
+        payloads: list[list[bytes]] = [[h] for h in headers]
+        next_cid = [0] * len(items)
+        for owner, blob in zip(seg_owner, blobs):
+            cid = next_cid[owner]
+            next_cid[owner] += 1
+            payloads[owner].append(struct.pack("<I", cid) + blob)
+        stats.coded_bytes = sum(len(p) for pl in payloads for p in pl)
     stats.encode_s = time.perf_counter() - t0
     return payloads, stats
 
@@ -303,10 +312,34 @@ class DecodeBatcher:
     the registry and the counters.
     """
 
-    def __init__(self) -> None:
+    def __init__(self, metrics: MetricsRegistry | None = None) -> None:
         self._decoders: dict[int, object] = {}
-        self.counters = {"ticks": 0, "entropy_calls": 0, "chunks": 0,
-                         "sessions": 0, "elems": 0, "entropy_s": 0.0}
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        m = self.metrics
+        self._m_ticks = m.counter(
+            "repro_decode_ticks_total", "batched decode drains")
+        self._m_calls = m.counter(
+            "repro_decode_entropy_calls_total",
+            "batched entropy-decode calls (one per non-empty drain)")
+        self._m_chunks = m.counter(
+            "repro_decode_chunks_total", "entropy-decoded chunks")
+        self._m_sessions = m.counter(
+            "repro_decode_sessions_total", "sessions drained")
+        self._m_elems = m.counter(
+            "repro_decode_elements_total", "elements entropy-decoded")
+        self._m_entropy_s = m.counter(
+            "repro_decode_entropy_seconds_total",
+            "wall time inside batched entropy decode")
+
+    @property
+    def counters(self) -> dict:
+        """Legacy dict view of the registry instruments."""
+        return {"ticks": int(self._m_ticks.value()),
+                "entropy_calls": int(self._m_calls.value()),
+                "chunks": int(self._m_chunks.value()),
+                "sessions": int(self._m_sessions.value()),
+                "elems": int(self._m_elems.value()),
+                "entropy_s": self._m_entropy_s.value()}
 
     def note(self, decoder) -> None:
         """Register a decoder that has pending (undrained) chunks."""
@@ -335,11 +368,10 @@ class DecodeBatcher:
             return []
         t0 = time.perf_counter()
         n_chunks, n_elems, failures = flush_decoders(decs)
-        c = self.counters
-        c["ticks"] += 1
-        c["entropy_calls"] += 1
-        c["chunks"] += n_chunks
-        c["sessions"] += len(decs)
-        c["elems"] += n_elems
-        c["entropy_s"] += time.perf_counter() - t0
+        self._m_ticks.inc()
+        self._m_calls.inc()
+        self._m_chunks.inc(n_chunks)
+        self._m_sessions.inc(len(decs))
+        self._m_elems.inc(n_elems)
+        self._m_entropy_s.inc(time.perf_counter() - t0)
         return failures

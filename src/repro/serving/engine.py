@@ -17,6 +17,7 @@ and per-request wall-clock latency lands in ``latency_log``.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import logging
 import time
@@ -29,6 +30,8 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..core.codec import FeatureCodec
 from ..models import decode_step, init_cache, prefill
+from ..obs.metrics import BPE_BUCKETS, MetricsRegistry
+from ..obs.tracing import span
 
 log = logging.getLogger(__name__)
 
@@ -52,7 +55,9 @@ class Request:
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_seq: int = 256, ctx=None, codec_fn=None,
-                 codec: FeatureCodec | None = None, refill_align: int = 1):
+                 codec: FeatureCodec | None = None, refill_align: int = 1,
+                 metrics: MetricsRegistry | None = None,
+                 latency_log_size: int = 4096):
         """``codec`` is the preferred split-layer hookup: a calibrated
         :class:`FeatureCodec` (any granularity/backend) whose fused
         fake-quant + rate estimate is applied at the boundary.  The raw
@@ -64,7 +69,14 @@ class ServeEngine:
         absolute length, so each *distinct* length jit-compiles once;
         raising the alignment bounds the compile set to
         ``max_seq / refill_align`` at the cost of freed slots idling up
-        to ``refill_align - 1`` steps."""
+        to ``refill_align - 1`` steps.
+
+        ``metrics``: a :class:`MetricsRegistry` to register this engine's
+        instruments in (fresh per engine by default, so tests and
+        co-hosted engines never share series).  ``latency_log_size``
+        bounds the per-request ``latency_log`` ring buffer -- a
+        long-lived serving process keeps the recent window (p50/p99 are
+        exposed via the registry), not an unbounded list."""
         self.cfg, self.params, self.ctx = cfg, params, ctx
         if codec is not None:
             if codec_fn is not None:
@@ -74,10 +86,41 @@ class ServeEngine:
         self.slots = slots
         self.max_seq = max_seq
         self.refill_align = max(1, refill_align)
-        self.rate_log: list[float] = []
-        self.latency_log: list[dict] = []
-        self._tallies = {"steps": 0, "slot_steps": 0, "active_slot_steps": 0,
-                         "prefills": 0, "refills": 0, "epochs": 0}
+        self.rate_log: collections.deque = collections.deque(maxlen=1 << 16)
+        self.latency_log: collections.deque = collections.deque(
+            maxlen=max(1, latency_log_size))
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        m = self.metrics
+        self._m = {
+            "steps": m.counter("repro_engine_steps_total",
+                               "batched decode steps"),
+            "slot_steps": m.counter("repro_engine_slot_steps_total",
+                                    "slots * decode steps"),
+            "active_slot_steps": m.counter(
+                "repro_engine_active_slot_steps_total",
+                "decode steps weighted by occupied slots"),
+            "prefills": m.counter("repro_engine_prefills_total",
+                                  "prefill launches (epochs + refills)"),
+            "refills": m.counter("repro_engine_refills_total",
+                                 "mid-epoch slot refills"),
+            "epochs": m.counter("repro_engine_epochs_total",
+                                "full-batch prefill epochs"),
+        }
+        self._m_requests = m.counter("repro_engine_requests_total",
+                                     "requests retired")
+        self._m_latency = m.histogram(
+            "repro_engine_request_latency_seconds",
+            "request wall-clock latency (admit -> retire)")
+        self._m_lat_p50 = m.gauge(
+            "repro_engine_request_latency_p50_seconds",
+            "p50 latency over the latency_log ring buffer")
+        self._m_lat_p99 = m.gauge(
+            "repro_engine_request_latency_p99_seconds",
+            "p99 latency over the latency_log ring buffer")
+        self._m_bpe = m.histogram(
+            "repro_engine_split_rate_bpe",
+            "split-layer coded bits/element per decode step",
+            buckets=BPE_BUCKETS)
 
         self._prefill = jax.jit(
             lambda p, t, c: prefill(cfg, p, t, c, ctx=ctx, codec_fn=codec_fn))
@@ -123,14 +166,16 @@ class ServeEngine:
                                                   cur, pos)
             if all(r is None for r in active):
                 continue    # nothing admitted (prompts too long for pos)
-            self._tallies["steps"] += 1
-            self._tallies["slot_steps"] += self.slots
-            self._tallies["active_slot_steps"] += sum(
-                r is not None for r in active)
+            self._m["steps"].inc()
+            self._m["slot_steps"].inc(self.slots)
+            self._m["active_slot_steps"].inc(sum(
+                r is not None for r in active))
             lg, cache, aux = self._decode(self.params, cur, cache,
                                           jnp.int32(pos))
             if "codec_rate_bits" in aux:
-                self.rate_log.append(float(aux["codec_rate_bits"]))
+                bpe = float(aux["codec_rate_bits"])
+                self.rate_log.append(bpe)
+                self._m_bpe.observe(bpe)
             cur = jnp.argmax(lg, axis=-1).astype(jnp.int32)
             pos += 1
         return requests
@@ -143,6 +188,11 @@ class ServeEngine:
             "slot": i, "prompt_len": int(len(r.prompt)),
             "new_tokens": len(r.out_tokens), "latency_s": r.latency_s,
         })
+        self._m_requests.inc()
+        self._m_latency.observe(r.latency_s)
+        lat = [d["latency_s"] for d in self.latency_log]
+        self._m_lat_p50.set(float(np.percentile(lat, 50)))
+        self._m_lat_p99.set(float(np.percentile(lat, 99)))
         log.info("request done: slot=%d prompt_len=%d tokens=%d "
                  "latency=%.3fs", i, len(r.prompt), len(r.out_tokens),
                  r.latency_s)
@@ -156,16 +206,20 @@ class ServeEngine:
     @property
     def counters(self) -> dict:
         """Structured serving metrics (the observability satellite):
-        slot occupancy of the continuous batch, admission churn, and the
-        split-layer rate actually spent."""
-        t = self._tallies
+        slot occupancy of the continuous batch, admission churn, the
+        split-layer rate actually spent, and request-latency percentiles
+        over the ``latency_log`` window.  The same numbers live as
+        ``repro_engine_*`` instruments in :attr:`metrics`."""
+        t = {k: int(c.value()) for k, c in self._m.items()}
         return {
             **t,
             "batch_occupancy_avg": (t["active_slot_steps"]
                                     / max(t["slot_steps"], 1)),
             "split_bpe_avg": (float(np.mean(self.rate_log))
                               if self.rate_log else 0.0),
-            "requests_done": len(self.latency_log),
+            "requests_done": int(self._m_requests.value()),
+            "request_latency_p50_s": self._m_lat_p50.value(),
+            "request_latency_p99_s": self._m_lat_p99.value(),
         }
 
     def _start_epoch(self, queue: list, active: list):
@@ -180,9 +234,11 @@ class ServeEngine:
             active[i] = r
         cache = init_cache(self.cfg, batch=self.slots, max_seq=self.max_seq,
                            split=self.codec_fn is not None)
-        self._tallies["epochs"] += 1
-        self._tallies["prefills"] += 1
-        logits, cache = self._prefill(self.params, jnp.asarray(toks), cache)
+        self._m["epochs"].inc()
+        self._m["prefills"].inc()
+        with span("prefill", batch=len(batch)):
+            logits, cache = self._prefill(self.params, jnp.asarray(toks),
+                                          cache)
         cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         # zero-token requests retire immediately
         for i, r in enumerate(batch):
@@ -217,9 +273,10 @@ class ServeEngine:
         one = init_cache(self.cfg, batch=1, max_seq=self.max_seq,
                          split=self.codec_fn is not None)
         r.t_admit = time.perf_counter()
-        self._tallies["refills"] += 1
-        self._tallies["prefills"] += 1
-        logits, one = self._prefill(self.params, jnp.asarray(toks), one)
+        self._m["refills"].inc()
+        self._m["prefills"].inc()
+        with span("prefill", batch=1, refill=True):
+            logits, one = self._prefill(self.params, jnp.asarray(toks), one)
         cache = jax.tree.map(lambda full, o: full.at[:, slot].set(o[:, 0]),
                              cache, one)
         first = jnp.argmax(logits[0]).astype(jnp.int32)

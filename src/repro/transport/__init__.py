@@ -17,8 +17,9 @@ wire protocol and session machinery around it.  See DESIGN.md,
 
 from .client import EdgeClient, SubmitResult, SyncEdgeClient, TransportError
 from .framing import (FT_CHUNK, FT_END, FT_ERROR, FT_FEEDBACK, FT_HEADER,
-                      FT_RESULT, Frame, FrameReader, FramingError,
-                      encode_frame, pack_arrays, unpack_arrays)
+                      FT_METRICS, FT_RESULT, Frame, FrameReader,
+                      FramingError, encode_frame, pack_arrays,
+                      unpack_arrays)
 from .rate_control import (DEFAULT_LADDER, CodecBank, RateControlConfig,
                            RateController, Rung, as_rung, bank_cache_stats,
                            clear_bank_cache, rung_of_codec, shared_bank)
@@ -31,7 +32,7 @@ __all__ = [
     "Frame", "FrameReader", "FramingError", "encode_frame",
     "pack_arrays", "unpack_arrays",
     "FT_HEADER", "FT_CHUNK", "FT_END", "FT_RESULT", "FT_FEEDBACK",
-    "FT_ERROR",
+    "FT_ERROR", "FT_METRICS",
     "CodecBank", "RateControlConfig", "RateController", "DEFAULT_LADDER",
     "Rung", "as_rung", "rung_of_codec",
     "shared_bank", "bank_cache_stats", "clear_bank_cache",

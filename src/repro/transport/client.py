@@ -22,15 +22,18 @@ from __future__ import annotations
 
 import asyncio
 import dataclasses
+import json
 import threading
 import time
 
 import numpy as np
 
 from ..core.codec import FeatureCodec
+from ..obs.metrics import MetricsRegistry
+from ..obs.tracing import span
 from ..serving.batcher import TickConfig, encode_tick
-from .framing import (FT_ERROR, FT_FEEDBACK, FT_RESULT, FrameReader,
-                      unpack_arrays)
+from .framing import (FT_ERROR, FT_FEEDBACK, FT_METRICS, FT_RESULT,
+                      FrameReader, encode_frame, unpack_arrays)
 from .rate_control import CodecBank, RateController, rung_of_codec
 from .stream_codec import (DEFAULT_CHUNK_ELEMS, Feedback, payloads_to_frames,
                            tensor_to_frames)
@@ -59,7 +62,8 @@ class EdgeClient:
                  rate_controller: RateController | None = None,
                  chunk_elems: int = DEFAULT_CHUNK_ELEMS,
                  coder_mode: str = "auto",
-                 tick: TickConfig | None = None) -> None:
+                 tick: TickConfig | None = None,
+                 metrics: MetricsRegistry | None = None) -> None:
         if codec is None and codec_bank is None:
             raise ValueError("need a codec or a codec_bank")
         if rate_controller is not None and codec_bank is None:
@@ -86,10 +90,44 @@ class EdgeClient:
         self._encode_queue: list[tuple] = []
         self._encode_timer: asyncio.TimerHandle | None = None
         self._encode_lock = asyncio.Lock()
-        self.encode_counters = {"ticks": 0, "sessions": 0,
-                                "stacked_sessions": 0, "fused_launches": 0,
-                                "entropy_calls": 0, "elems": 0,
-                                "coded_bytes": 0, "encode_s": 0.0}
+        # awaiters of an on-demand cloud telemetry snapshot (FT_METRICS)
+        self._metrics_waiters: list[asyncio.Future] = []
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        m = self.metrics
+        self._m = {
+            "ticks": m.counter("repro_client_encode_ticks_total",
+                               "coalesced encode-tick launches"),
+            "sessions": m.counter("repro_client_sessions_total",
+                                  "tensors encoded"),
+            "stacked_sessions": m.counter(
+                "repro_client_stacked_sessions_total",
+                "tensors that shared a stacked fused launch"),
+            "fused_launches": m.counter(
+                "repro_client_fused_launches_total",
+                "fused quantize+pack kernel launches"),
+            "entropy_calls": m.counter(
+                "repro_client_entropy_calls_total",
+                "batched entropy-coder invocations"),
+            "elems": m.counter("repro_client_encoded_elements_total",
+                               "tensor elements encoded"),
+            "coded_bytes": m.counter("repro_client_coded_bytes_total",
+                                     "entropy-coded payload bytes produced"),
+        }
+        self._m_encode_s = m.counter("repro_client_encode_seconds_total",
+                                     "wall-clock spent inside encode ticks")
+        self._m_submit = m.histogram(
+            "repro_client_submit_latency_seconds",
+            "submit round-trip latency (encode -> RESULT)")
+        if rate_controller is not None:
+            rate_controller.bind_metrics(m)
+
+    @property
+    def encode_counters(self) -> dict:
+        """Legacy dict view of the ``repro_client_*`` instruments (same
+        keys the pre-registry counters dict had)."""
+        c = {k: int(v.value()) for k, v in self._m.items()}
+        c["encode_s"] = self._m_encode_s.value()
+        return c
 
     async def connect(self) -> "EdgeClient":
         self._reader, self._writer = await asyncio.open_connection(
@@ -147,6 +185,13 @@ class EdgeClient:
                         if self.rate_controller is not None:
                             self.rate_controller.on_feedback(
                                 fb.recv_bytes_per_s, fb.queue_depth)
+                    elif frame.ftype == FT_METRICS:
+                        snap = json.loads(frame.payload.decode())
+                        waiters, self._metrics_waiters = \
+                            self._metrics_waiters, []
+                        for fut in waiters:
+                            if not fut.done():
+                                fut.set_result(snap)
                     elif frame.ftype == FT_ERROR:
                         raise TransportError(frame.payload.decode())
         except asyncio.CancelledError:
@@ -163,6 +208,26 @@ class EdgeClient:
             if not fut.done():
                 fut.set_exception(err)
         self._pending.clear()
+        waiters, self._metrics_waiters = self._metrics_waiters, []
+        for fut in waiters:
+            if not fut.done():
+                fut.set_exception(err)
+
+    async def fetch_cloud_metrics(self) -> dict:
+        """Ask the cloud for a telemetry snapshot over the frame protocol
+        (an empty METRICS frame; the reply is JSON with the server's
+        ``counters`` dict and full registry ``metrics`` snapshot) -- lets
+        an edge observe cloud health without a separate scrape port."""
+        if self._writer is None:
+            raise TransportError("not connected")
+        if self._dead is not None:
+            raise TransportError(f"connection failed: {self._dead}")
+        fut = asyncio.get_running_loop().create_future()
+        self._metrics_waiters.append(fut)
+        async with self._write_lock:
+            self._writer.write(encode_frame(FT_METRICS, 0, 0, b""))
+            await self._writer.drain()
+        return await fut
 
     # -- send path ------------------------------------------------------------
 
@@ -212,22 +277,23 @@ class EdgeClient:
                     if not sent.done():
                         sent.set_exception(e)
                 return
-            c = self.encode_counters
-            c["ticks"] += 1
-            c["sessions"] += stats.sessions
-            c["stacked_sessions"] += stats.stacked_sessions
-            c["fused_launches"] += stats.fused_launches
-            c["entropy_calls"] += stats.entropy_calls
-            c["elems"] += stats.elems
-            c["coded_bytes"] += stats.coded_bytes
-            c["encode_s"] += stats.encode_s
+            self._m["ticks"].inc()
+            self._m["sessions"].inc(stats.sessions)
+            self._m["stacked_sessions"].inc(stats.stacked_sessions)
+            self._m["fused_launches"].inc(stats.fused_launches)
+            self._m["entropy_calls"].inc(stats.entropy_calls)
+            self._m["elems"].inc(stats.elems)
+            self._m["coded_bytes"].inc(stats.coded_bytes)
+            self._m_encode_s.inc(stats.encode_s)
             for (_, _, session, sent), payloads in zip(queue, payload_lists):
                 frames = payloads_to_frames(payloads, session)
                 try:
                     async with self._write_lock:
-                        for frame_bytes in frames:
-                            self._writer.write(frame_bytes)
-                        await self._writer.drain()
+                        with span("socket_write", session=str(session),
+                                  frames=len(frames)):
+                            for frame_bytes in frames:
+                                self._writer.write(frame_bytes)
+                            await self._writer.drain()
                 except Exception as e:              # noqa: BLE001
                     if not sent.done():
                         sent.set_exception(e)
@@ -275,8 +341,9 @@ class EdgeClient:
                     break
                 coded += len(frame_bytes)
                 async with self._write_lock:
-                    self._writer.write(frame_bytes)
-                    await self._writer.drain()
+                    with span("socket_write", session=str(session)):
+                        self._writer.write(frame_bytes)
+                        await self._writer.drain()
                 if self.rate_controller is not None:
                     buf = self._writer.transport.get_write_buffer_size()
                     self.rate_controller.on_queue_depth(buf // (1 << 16))
@@ -284,6 +351,7 @@ class EdgeClient:
 
         arrays = await fut
         total_s = time.perf_counter() - t0
+        self._m_submit.observe(total_s)
         fb = self._feedback.pop(session, None)
         if self.rate_controller is not None:
             self.rate_controller.on_tensor(rung, coded, x.size,
@@ -316,6 +384,17 @@ class SyncEdgeClient:
     def submit(self, x: np.ndarray,
                codec: FeatureCodec | None = None) -> SubmitResult:
         return self._run(self._client.submit(x, codec=codec))
+
+    def fetch_cloud_metrics(self) -> dict:
+        return self._run(self._client.fetch_cloud_metrics())
+
+    @property
+    def metrics(self) -> MetricsRegistry:
+        return self._client.metrics
+
+    @property
+    def encode_counters(self) -> dict:
+        return self._client.encode_counters
 
     def close(self) -> None:
         self._run(self._client.close())

@@ -14,7 +14,9 @@ Everything that crosses the edge<->cloud socket is a *frame*:
 * frame types: HEADER (stream meta + self-describing codec header),
   CHUNK (one entropy-coded chunk), END (end-of-tensor marker, payload =
   ``<I`` chunk count), RESULT (cloud -> edge arrays), FEEDBACK
-  (cloud -> edge link stats for the rate controller), ERROR (utf-8 text).
+  (cloud -> edge link stats for the rate controller), ERROR (utf-8 text),
+  METRICS (edge -> cloud: empty request; cloud -> edge: JSON snapshot of
+  the cloud's metrics registry -- telemetry only, never tensor bytes).
 
 :class:`FrameReader` is an incremental parser: feed it arbitrary byte
 slices (single bytes included) and iterate complete frames.  See
@@ -42,6 +44,7 @@ FT_END = 3
 FT_RESULT = 4
 FT_FEEDBACK = 5
 FT_ERROR = 6
+FT_METRICS = 7
 
 
 class FramingError(ValueError):

@@ -34,6 +34,8 @@ import math
 
 import numpy as np
 
+from ..obs.metrics import BPE_BUCKETS, MetricsRegistry, default_registry
+
 
 @dataclasses.dataclass(frozen=True, order=True)
 class Rung:
@@ -112,6 +114,34 @@ class RateController:
         self._throughput = None           # EWMA bytes/s of the link
         self._last_rung: Rung | None = None
         self.history: list[dict] = []
+        self._m = None                    # see bind_metrics
+
+    def bind_metrics(self, registry: MetricsRegistry) -> None:
+        """Register RD-telemetry instruments: the paper's central
+        trade-off (measured bits/element vs. the budget), per-tensor rate
+        distribution, rung occupancy, and the learned link state."""
+        m = {
+            "target": registry.gauge("repro_rate_target_bpe",
+                                     "bits/element budget"),
+            "measured": registry.gauge(
+                "repro_rate_measured_bpe",
+                "leaky-bucket running average of coded bits/element"),
+            "tensor_bpe": registry.histogram(
+                "repro_rate_tensor_rate_bpe",
+                "coded bits/element per tensor", labelnames=("rung",),
+                buckets=BPE_BUCKETS),
+            "rung_picks": registry.counter(
+                "repro_rate_rung_picks_total",
+                "next_rung decisions per ladder rung",
+                labelnames=("rung",)),
+            "throughput": registry.gauge(
+                "repro_rate_link_throughput_bytes",
+                "EWMA link throughput (bytes per second)"),
+            "queue": registry.gauge("repro_rate_queue_depth_count",
+                                    "last observed send-queue depth"),
+        }
+        m["target"].set(self.cfg.target_bpe)
+        self._m = m
 
     def _resolve(self, rung) -> Rung:
         """Accept a Rung or a bare n_levels int (legacy callers).
@@ -161,6 +191,11 @@ class RateController:
         self.history.append({"rung": str(rung), "n_levels": rung.n_levels,
                              "bpe": bpe, "cum_bpe": self.measured_bpe,
                              "queue_depth": self._queue_depth})
+        if self._m is not None:
+            self._m["measured"].set(self.measured_bpe)
+            self._m["tensor_bpe"].observe(bpe, rung=str(rung))
+            if self._throughput is not None:
+                self._m["throughput"].set(self._throughput)
 
     def seed_estimate(self, rung, bpe: float) -> None:
         """Prime a rung's expected rate with an *estimate* (e.g. the
@@ -176,6 +211,8 @@ class RateController:
 
     def on_queue_depth(self, depth: int) -> None:
         self._queue_depth = int(depth)
+        if self._m is not None:
+            self._m["queue"].set(self._queue_depth)
 
     def on_feedback(self, recv_bytes_per_s: float, queue_depth: int) -> None:
         """Cloud-side FEEDBACK frame: receiver-measured link throughput."""
@@ -242,6 +279,8 @@ class RateController:
                               key=self.estimate_bpe)
                 choice = cheaper
         self._last_rung = choice
+        if self._m is not None:
+            self._m["rung_picks"].inc(rung=str(choice))
         return choice
 
     def next_levels(self) -> int:
@@ -333,7 +372,15 @@ class CodecBank:
 # -- worker-level bank sharing ------------------------------------------------
 
 _BANKS: dict[tuple, CodecBank] = {}
-_BANK_STATS = {"hits": 0, "misses": 0}
+# worker-level instruments: bank reuse is per-process, so these live in
+# the process-wide default registry (scraped alongside every server)
+_BANK_HITS = default_registry().counter(
+    "repro_bank_cache_hits_total", "shared_bank cache hits")
+_BANK_MISSES = default_registry().counter(
+    "repro_bank_cache_misses_total",
+    "shared_bank cache misses (fresh calibration)")
+_BANK_ENTRIES = default_registry().gauge(
+    "repro_bank_cache_entries_count", "distinct cached codec banks")
 
 
 def _bank_key(base_config, samples: np.ndarray, ladder: tuple) -> tuple:
@@ -358,18 +405,24 @@ def shared_bank(base_config, samples: np.ndarray,
     key = _bank_key(base_config, samples, ladder)
     bank = _BANKS.get(key)
     if bank is not None:
-        _BANK_STATS["hits"] += 1
+        _BANK_HITS.inc()
         return bank
-    _BANK_STATS["misses"] += 1
+    _BANK_MISSES.inc()
     bank = _BANKS[key] = CodecBank(base_config, samples, ladder)
+    _BANK_ENTRIES.set(len(_BANKS))
     return bank
 
 
 def bank_cache_stats() -> dict:
-    return {**_BANK_STATS, "entries": len(_BANKS)}
+    """Legacy dict view of the ``repro_bank_cache_*`` instruments."""
+    return {"hits": int(_BANK_HITS.value()),
+            "misses": int(_BANK_MISSES.value()),
+            "entries": len(_BANKS)}
 
 
 def clear_bank_cache() -> None:
     """Tests only: drop cached banks and zero the counters."""
     _BANKS.clear()
-    _BANK_STATS.update(hits=0, misses=0)
+    _BANK_HITS.clear()
+    _BANK_MISSES.clear()
+    _BANK_ENTRIES.set(0)

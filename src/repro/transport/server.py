@@ -33,6 +33,7 @@ and other connections stay responsive while numpy/jax work runs.
 from __future__ import annotations
 
 import asyncio
+import json
 import logging
 import time
 from typing import Callable
@@ -40,9 +41,13 @@ from typing import Callable
 import numpy as np
 
 from ..core.codec import HeaderCache
+from ..obs.exposition import MetricsExposition
+from ..obs.metrics import MetricsRegistry, default_registry
+from ..obs.tracing import span
 from ..serving.batcher import DecodeBatcher, TickConfig
-from .framing import (FT_CHUNK, FT_END, FT_ERROR, FT_HEADER, FT_RESULT,
-                      FrameReader, FramingError, encode_frame, pack_arrays)
+from .framing import (FT_CHUNK, FT_END, FT_ERROR, FT_HEADER, FT_METRICS,
+                      FT_RESULT, FrameReader, FramingError, encode_frame,
+                      pack_arrays)
 from .stream_codec import Feedback, TensorAssembler
 
 log = logging.getLogger(__name__)
@@ -51,13 +56,15 @@ _DEFAULT_TICK = TickConfig()
 
 
 class _Session:
-    __slots__ = ("assembler", "t_first", "decode_s", "seq")
+    __slots__ = ("assembler", "t_first", "decode_s", "seq", "obs_key")
 
-    def __init__(self, assembler: TensorAssembler) -> None:
+    def __init__(self, assembler: TensorAssembler,
+                 obs_key: str = "") -> None:
         self.assembler = assembler
         self.t_first = time.perf_counter()
         self.decode_s = 0.0
         self.seq = 0
+        self.obs_key = obs_key      # per-session metrics label value
 
 
 class CloudServer:
@@ -73,13 +80,23 @@ class CloudServer:
     per-session decode-on-arrival path.
     ``header_cache``: share a :class:`HeaderCache` across servers of one
     worker (a fresh one is made per server otherwise).
+    ``metrics``: the :class:`MetricsRegistry` this server's
+    ``repro_server_*`` / ``repro_decode_*`` instruments register in
+    (fresh per server by default, so co-hosted servers and tests never
+    share series).
+    ``metrics_port``: when not None, :meth:`start` also serves a
+    Prometheus-text ``GET /metrics`` endpoint (plus the tracer's JSON
+    span log at ``/events``) on this port (0 = pick a free one; the
+    bound port lands back in ``metrics_port``).
     """
 
     def __init__(self, *, tail_fn: Callable | None = None,
                  echo_features: bool = False, host: str = "127.0.0.1",
                  port: int = 0, backend=None,
                  tick: TickConfig | None = _DEFAULT_TICK,
-                 header_cache: HeaderCache | None = None) -> None:
+                 header_cache: HeaderCache | None = None,
+                 metrics: MetricsRegistry | None = None,
+                 metrics_port: int | None = None) -> None:
         self.tail_fn = tail_fn
         self.echo_features = echo_features
         self.host = host
@@ -89,7 +106,8 @@ class CloudServer:
         self.sessions_served = 0
         self.open_connections = 0
         self.tick = tick
-        self._batcher = DecodeBatcher()
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._batcher = DecodeBatcher(metrics=self.metrics)
         self._header_cache = (header_cache if header_cache is not None
                               else HeaderCache())
         # tensors whose END arrived, awaiting the tick drain:
@@ -100,14 +118,73 @@ class CloudServer:
         # decoder id -> (sessions-dict, session_id, writer): lets a drain
         # failure evict + notify exactly the offending session
         self._dec_owner: dict[int, tuple] = {}
-        self._tallies = {"ticks": 0, "occupancy_sum": 0, "coded_bytes": 0,
-                         "elems": 0, "decode_errors": 0}
+        self._conn_seq = 0
+        self.metrics_port = metrics_port
+        self.metrics_exposition: MetricsExposition | None = None
+        m = self.metrics
+        self._m_sessions = m.counter("repro_server_sessions_served_total",
+                                     "tensors fully served (tail + RESULT)")
+        self._m_conns = m.gauge("repro_server_open_connections_count",
+                                "currently connected edge clients")
+        self._m_ticks = m.counter("repro_server_ticks_total",
+                                  "cross-session tick drains")
+        self._m_tick_sessions = m.counter(
+            "repro_server_tick_sessions_total",
+            "completed sessions summed over tick drains (occupancy "
+            "numerator)")
+        self._m_coded = m.counter("repro_server_coded_bytes_total",
+                                  "entropy-coded payload bytes received")
+        self._m_elems = m.counter("repro_server_decoded_elements_total",
+                                  "tensor elements reconstructed")
+        self._m_errors = m.counter(
+            "repro_server_decode_errors_total",
+            "sessions failed in decode/tail (or protocol errors)")
+        self._m_queue = m.gauge(
+            "repro_server_queue_depth_count",
+            "sessions with pending work (undrained chunks + awaiting "
+            "tail)")
+        self._m_pending = m.gauge(
+            "repro_server_session_pending_chunks_count",
+            "entropy-undecoded chunks per in-flight session",
+            labelnames=("session",))
+        self._m_bpe = m.gauge(
+            "repro_server_measured_bpe",
+            "running wire bits/element over served tensors")
+        self._m_hc_hits = m.gauge("repro_server_header_cache_hits_count",
+                                  "header-cache hits")
+        self._m_hc_misses = m.gauge(
+            "repro_server_header_cache_misses_count",
+            "header-cache misses (fresh header parses)")
+        self._m_hc_entries = m.gauge(
+            "repro_server_header_cache_entries_count",
+            "distinct parsed headers cached")
+
+    def _sync_gauges(self) -> None:
+        """Pull-style sources -> gauges (run per scrape / counters read)."""
+        self._m_conns.set(self.open_connections)
+        self._m_queue.set(self._batcher.pending_sessions + len(self._ready))
+        hc = self._header_cache.stats
+        self._m_hc_hits.set(hc["hits"])
+        self._m_hc_misses.set(hc["misses"])
+        self._m_hc_entries.set(hc["entries"])
+        coded, elems = self._m_coded.value(), self._m_elems.value()
+        self._m_bpe.set(8.0 * coded / max(elems, 1))
 
     async def start(self) -> "CloudServer":
         self._server = await asyncio.start_server(self._handle, self.host,
                                                   self.port)
         self.port = self._server.sockets[0].getsockname()[1]
         log.info("cloud server listening on %s:%d", self.host, self.port)
+        if self.metrics_port is not None:
+            # the scrape sees this server's registry plus the worker-wide
+            # default one (stage-latency histogram, bank cache)
+            self.metrics_exposition = await MetricsExposition(
+                [self.metrics, default_registry()],
+                collectors=[self._sync_gauges], host=self.host,
+                port=self.metrics_port).start()
+            self.metrics_port = self.metrics_exposition.port
+            log.info("metrics endpoint on %s:%d/metrics", self.host,
+                     self.metrics_port)
         return self
 
     async def __aenter__(self) -> "CloudServer":
@@ -120,6 +197,9 @@ class CloudServer:
         if self._drain_timer is not None:
             self._drain_timer.cancel()
             self._drain_timer = None
+        if self.metrics_exposition is not None:
+            await self.metrics_exposition.close()
+            self.metrics_exposition = None
         if self._server is not None:
             self._server.close()
             await self._server.wait_closed()
@@ -131,23 +211,29 @@ class CloudServer:
 
     @property
     def counters(self) -> dict:
-        """Structured per-tick metrics (the observability satellite)."""
+        """Legacy dict view of the ``repro_server_*`` / ``repro_decode_*``
+        registry instruments (the tick=None shape is pinned by
+        tests/test_batcher.py; registry-only telemetry such as
+        decode-error counts on the legacy path lives in
+        :attr:`metrics`)."""
+        self._sync_gauges()
         c = {"sessions_served": self.sessions_served,
              "open_connections": self.open_connections}
         if self.tick is None:
             return c
         b = self._batcher.counters
-        t = self._tallies
+        ticks = int(self._m_ticks.value())
         c.update(
-            ticks=t["ticks"],
-            batch_occupancy_avg=t["occupancy_sum"] / max(t["ticks"], 1),
-            queue_depth=self._batcher.pending_sessions + len(self._ready),
+            ticks=ticks,
+            batch_occupancy_avg=(self._m_tick_sessions.value()
+                                 / max(ticks, 1)),
+            queue_depth=int(self._m_queue.value()),
             entropy_calls=b["entropy_calls"],
             entropy_chunks=b["chunks"],
             entropy_melem_per_s=(b["elems"] / b["entropy_s"] / 1e6
                                  if b["entropy_s"] > 0 else 0.0),
-            bpe_avg=8.0 * t["coded_bytes"] / max(t["elems"], 1),
-            decode_errors=t["decode_errors"],
+            bpe_avg=self._m_bpe.value(),
+            decode_errors=int(self._m_errors.value()),
             header_cache=self._header_cache.stats,
         )
         return c
@@ -159,6 +245,8 @@ class CloudServer:
         peer = writer.get_extra_info("peername")
         log.info("edge connected: %s", peer)
         self.open_connections += 1
+        self._conn_seq += 1
+        conn_id = self._conn_seq
         frames = FrameReader()
         sessions: dict[int, _Session] = {}
         try:
@@ -169,11 +257,15 @@ class CloudServer:
                 frames.feed(data)
                 for frame in frames:
                     if frame.ftype in (FT_HEADER, FT_CHUNK, FT_END):
-                        await self._on_tensor_frame(frame, sessions, writer)
+                        await self._on_tensor_frame(frame, sessions, writer,
+                                                    conn_id)
+                    elif frame.ftype == FT_METRICS:
+                        await self._send_metrics(writer, frame.session)
                     else:
                         raise FramingError(
                             f"unexpected frame type {frame.ftype} from edge")
         except (FramingError, ValueError) as e:
+            self._m_errors.inc()
             log.error("protocol error from %s: %s", peer, e)
             try:
                 writer.write(encode_frame(FT_ERROR, 0, 0, str(e).encode()))
@@ -192,15 +284,18 @@ class CloudServer:
                 pass
             log.info("edge disconnected: %s", peer)
 
-    async def _on_tensor_frame(self, frame, sessions, writer) -> None:
+    async def _on_tensor_frame(self, frame, sessions, writer,
+                               conn_id: int = 0) -> None:
         if self.tick is None:
-            await self._on_tensor_frame_immediate(frame, sessions, writer)
+            await self._on_tensor_frame_immediate(frame, sessions, writer,
+                                                  conn_id)
             return
         sess = sessions.get(frame.session)
         if sess is None:
             sess = sessions[frame.session] = _Session(
                 TensorAssembler(backend=self._backend, defer=True,
-                                header_cache=self._header_cache))
+                                header_cache=self._header_cache),
+                obs_key=f"{conn_id}:{frame.session}")
         t0 = time.perf_counter()
         # deferred mode: no entropy work here, just buffering -- cheap
         # enough to run on-loop
@@ -209,6 +304,7 @@ class CloudServer:
         dec = sess.assembler.decoder
         if dec is not None:
             self._batcher.note(dec)
+            self._m_pending.set(dec.pending_chunks, session=sess.obs_key)
             if id(dec) not in self._dec_owner:
                 self._dec_owner[id(dec)] = (sessions, frame.session, writer)
         if sess.assembler.ready:
@@ -241,30 +337,42 @@ class CloudServer:
             ready, self._ready = self._ready, []
             if not ready and not self._batcher.pending_sessions:
                 return
-            # ONE batched entropy pass over every pending chunk of every
-            # session, across connections
-            failures = await asyncio.to_thread(self._batcher.drain)
-            for dec, exc in failures:
-                await self._evict_decoder(dec, exc)
-                ready = [e for e in ready if e[0].assembler.decoder is not dec]
-            outs = await asyncio.to_thread(self._finish_ready,
-                                           [e[0] for e in ready])
-            self._tallies["ticks"] += 1
-            self._tallies["occupancy_sum"] += len(ready)
-            for (sess, session_id, writer, sessions), out in zip(ready, outs):
-                dec = sess.assembler.decoder
-                self._dec_owner.pop(id(dec), None)
-                if isinstance(out, Exception):
-                    self._tallies["decode_errors"] += 1
-                    await self._send_error(writer, session_id, out)
-                    continue
-                arrays, work_s = out
-                sess.decode_s += work_s
-                self.sessions_served += 1
-                self._tallies["coded_bytes"] += sess.assembler.chunk_bytes
-                self._tallies["elems"] += sess.assembler.n_elems
-                await self._send_result(sess, session_id, writer, sessions,
-                                        arrays)
+            with span("tick_drain", sessions=len(ready)):
+                # ONE batched entropy pass over every pending chunk of
+                # every session, across connections
+                failures = await asyncio.to_thread(self._batcher.drain)
+                for dec, exc in failures:
+                    await self._evict_decoder(dec, exc)
+                    kept = []
+                    for e in ready:
+                        if e[0].assembler.decoder is dec:
+                            self._m_pending.remove(session=e[0].obs_key)
+                        else:
+                            kept.append(e)
+                    ready = kept
+                outs = await asyncio.to_thread(self._finish_ready,
+                                               [e[0] for e in ready])
+                self._m_ticks.inc()
+                self._m_tick_sessions.inc(len(ready))
+                for (sess, session_id, writer, sessions), out \
+                        in zip(ready, outs):
+                    dec = sess.assembler.decoder
+                    self._dec_owner.pop(id(dec), None)
+                    self._m_pending.remove(session=sess.obs_key)
+                    if isinstance(out, Exception):
+                        self._m_errors.inc()
+                        await self._send_error(writer, session_id, out)
+                        continue
+                    arrays, work_s = out
+                    sess.decode_s += work_s
+                    self.sessions_served += 1
+                    self._m_sessions.inc()
+                    self._m_coded.inc(sess.assembler.chunk_bytes)
+                    self._m_elems.inc(sess.assembler.n_elems)
+                    await self._send_result(sess, session_id, writer,
+                                            sessions, arrays)
+            self._m_queue.set(self._batcher.pending_sessions
+                              + len(self._ready))
 
     def _finish_ready(self, sesses: list[_Session]) -> list:
         """Reconstruct + run ``tail_fn`` for each drained session (worker
@@ -278,7 +386,8 @@ class CloudServer:
                 tensor = sess.assembler.finish()
                 arrays = [tensor] if self.echo_features else []
                 if self.tail_fn is not None:
-                    out = self.tail_fn(tensor)
+                    with span("tail", session=sess.obs_key):
+                        out = self.tail_fn(tensor)
                     arrays.extend(out if isinstance(out, (list, tuple))
                                   else [out])
                 outs.append((arrays, time.perf_counter() - t0))
@@ -289,15 +398,32 @@ class CloudServer:
     async def _evict_decoder(self, dec, exc) -> None:
         """A decoder failed the batched drain: evict + notify exactly
         that session, leave its tickmates untouched."""
-        self._tallies["decode_errors"] += 1
+        self._m_errors.inc()
         self._batcher.discard(dec)
         owner = self._dec_owner.pop(id(dec), None)
         if owner is None:
             return
         sessions, session_id, writer = owner
-        sessions.pop(session_id, None)
+        gone = sessions.pop(session_id, None)
+        if gone is not None:
+            self._m_pending.remove(session=gone.obs_key)
         log.error("decode failed for session %d: %s", session_id, exc)
         await self._send_error(writer, session_id, exc)
+
+    async def _send_metrics(self, writer, session_id: int) -> None:
+        """On-demand telemetry snapshot over the frame protocol: the edge
+        sends an empty METRICS frame, the cloud replies with a JSON
+        payload (never tensor bytes -- codec streams are untouched)."""
+        self._sync_gauges()
+        payload = json.dumps({
+            "counters": self.counters,
+            "metrics": self.metrics.snapshot(),
+        }).encode()
+        try:
+            writer.write(encode_frame(FT_METRICS, session_id, 0, payload))
+            await writer.drain()
+        except (ConnectionError, RuntimeError):
+            pass
 
     async def _send_error(self, writer, session_id: int, exc) -> None:
         try:
@@ -320,11 +446,13 @@ class CloudServer:
         # session on RESULT, so in-order delivery guarantees the submit
         # sees its own link stats
         try:
-            writer.write(fb.encode(session_id, sess.seq))
-            writer.write(encode_frame(FT_RESULT, session_id, sess.seq + 1,
-                                      pack_arrays([np.asarray(a)
-                                                   for a in arrays])))
-            await writer.drain()
+            with span("socket_write", session=sess.obs_key):
+                writer.write(fb.encode(session_id, sess.seq))
+                writer.write(encode_frame(FT_RESULT, session_id,
+                                          sess.seq + 1,
+                                          pack_arrays([np.asarray(a)
+                                                       for a in arrays])))
+                await writer.drain()
         except (ConnectionError, RuntimeError):
             pass
 
@@ -347,16 +475,19 @@ class CloudServer:
         if dec is not None:
             self._batcher.discard(dec)
             self._dec_owner.pop(id(dec), None)
+        if sess.obs_key:
+            self._m_pending.remove(session=sess.obs_key)
 
     # -- per-session (tick=None) path -----------------------------------------
 
-    async def _on_tensor_frame_immediate(self, frame, sessions,
-                                         writer) -> None:
+    async def _on_tensor_frame_immediate(self, frame, sessions, writer,
+                                         conn_id: int = 0) -> None:
         sess = sessions.get(frame.session)
         if sess is None:
             sess = sessions[frame.session] = _Session(
                 TensorAssembler(backend=self._backend,
-                                header_cache=self._header_cache))
+                                header_cache=self._header_cache),
+                obs_key=f"{conn_id}:{frame.session}")
         t0 = time.perf_counter()
         tensor = await asyncio.to_thread(sess.assembler.feed, frame)
         sess.decode_s += time.perf_counter() - t0
@@ -364,6 +495,9 @@ class CloudServer:
             return
         del sessions[frame.session]
         self.sessions_served += 1
+        self._m_sessions.inc()
+        self._m_coded.inc(sess.assembler.chunk_bytes)
+        self._m_elems.inc(sess.assembler.n_elems)
         arrays = [tensor] if self.echo_features else []
         if self.tail_fn is not None:
             t0 = time.perf_counter()

@@ -1,0 +1,384 @@
+"""Observability layer tests: metrics registry semantics, span tracing,
+the Prometheus exposition endpoint, the FT_METRICS in-band snapshot, and
+the counter-migration invariants (legacy dict shapes, per-session label
+series lifecycle across completion / eviction / disconnect)."""
+
+import asyncio
+import dataclasses
+import json
+import pathlib
+import sys
+import time
+import urllib.request
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+
+from repro.core import CodecConfig, calibrate
+from repro.obs import (BPE_BUCKETS, LATENCY_BUCKETS, MetricsExposition,
+                       MetricsRegistry, configure_tracing,
+                       parse_prometheus_text, tracer)
+from repro.obs.tracing import _NULL_SPAN, span
+from repro.serving import TickConfig
+from repro.transport import (CloudServer, EdgeClient, encode_frame,
+                             tensor_to_frames)
+from repro.transport.framing import FT_METRICS
+
+
+@pytest.fixture(scope="module")
+def features():
+    rng = np.random.default_rng(11)
+    mu = np.linspace(0.0, 6.0, 16).astype(np.float32)
+    return (mu[None, :] + rng.exponential(1.0, (512, 16))).astype(np.float32)
+
+
+def _live_codec(features, n_levels=8):
+    return calibrate(CodecConfig(n_levels=n_levels, clip_mode="minmax",
+                                 constrain_cmin_zero=False,
+                                 granularity="channel", channel_axis=-1,
+                                 channel_group_size=4), samples=features)
+
+
+def _series(snap: dict, name: str) -> dict:
+    """The single label series of ``name`` in a registry snapshot."""
+    series = snap[name]["series"]
+    assert len(series) == 1, (name, series)
+    return series[0]
+
+
+class TestRegistry:
+    def test_counter_gauge_histogram(self):
+        reg = MetricsRegistry()
+        c = reg.counter("repro_t_things_total", "things")
+        c.inc()
+        c.inc(4)
+        assert c.value() == 5
+        g = reg.gauge("repro_t_depth_count", "depth")
+        g.set(3)
+        g.dec()
+        assert g.value() == 2
+        h = reg.histogram("repro_t_lat_seconds", "lat")
+        for v in (0.001, 0.01, 0.01, 5.0):
+            h.observe(v)
+        assert h.count() == 4
+        assert h.sum() == pytest.approx(5.021)
+
+    def test_labels_and_removal(self):
+        reg = MetricsRegistry()
+        g = reg.gauge("repro_t_pending_count", "pending",
+                      labelnames=("session",))
+        g.set(2, session="1:0")
+        g.set(7, session="1:1")
+        assert g.value(session="1:1") == 7
+        assert len(g.series()) == 2
+        g.remove(session="1:0")
+        assert len(g.series()) == 1
+        g.remove(session="no-such")          # idempotent
+        assert len(g.series()) == 1
+
+    def test_get_or_create_conflicts(self):
+        reg = MetricsRegistry()
+        reg.counter("repro_t_x_total", "x")
+        # same name, same kind -> same instrument
+        assert reg.counter("repro_t_x_total", "x") is \
+            reg.counter("repro_t_x_total", "x")
+        with pytest.raises(ValueError):
+            reg.gauge("repro_t_x_total", "x")
+        with pytest.raises(ValueError):
+            reg.counter("repro_t_x_total", "x", labelnames=("a",))
+
+    def test_render_parse_roundtrip(self):
+        reg = MetricsRegistry()
+        reg.counter("repro_t_events_total", "evts",
+                    labelnames=("kind",)).inc(3, kind='a"b\\c')
+        reg.gauge("repro_t_level_count", "lvl").set(1.5)
+        h = reg.histogram("repro_t_bpe", "bpe", buckets=BPE_BUCKETS)
+        h.observe(2.0)
+        fams = parse_prometheus_text(reg.render())
+        assert fams["repro_t_events_total"]["type"] == "counter"
+        assert fams["repro_t_level_count"]["type"] == "gauge"
+        assert fams["repro_t_bpe"]["type"] == "histogram"
+        # cumulative buckets + +Inf
+        buckets = [(k, v) for (k, labels), v
+                   in fams["repro_t_bpe"]["samples"].items()
+                   if k == "repro_t_bpe_bucket"]
+        assert len(buckets) == len(BPE_BUCKETS) + 1
+        assert all(v <= 1.0 for _, v in buckets)
+
+    def test_quantile(self):
+        reg = MetricsRegistry()
+        h = reg.histogram("repro_t_q_seconds", "q", buckets=LATENCY_BUCKETS)
+        for _ in range(99):
+            h.observe(0.002)
+        h.observe(9.0)
+        assert h.quantile(0.5) <= 0.01
+        assert h.quantile(0.995) > 1.0
+
+
+class TestTracing:
+    def test_disabled_is_shared_noop(self):
+        configure_tracing(enabled=False)
+        assert span("anything") is _NULL_SPAN
+        assert span("other", k=1) is _NULL_SPAN
+
+    def test_events_nest_and_feed_histogram(self):
+        configure_tracing(enabled=True)
+        try:
+            tracer().reset()
+            with span("tick_drain", sessions=2):
+                with span("entropy_decode", chunks=3):
+                    time.sleep(0.001)
+            events = tracer().snapshot_events()
+        finally:
+            configure_tracing(enabled=False)
+        assert [e["stage"] for e in events] == ["entropy_decode",
+                                                "tick_drain"]
+        child, parent = events
+        assert child["parent_id"] == parent["span_id"]
+        assert parent["parent_id"] is None
+        assert child["chunks"] == 3
+        assert child["dur_s"] > 0
+        totals = tracer().stage_totals(stages={"entropy_decode"})
+        assert totals["entropy_decode"] >= child["dur_s"]
+        from repro.obs import default_registry
+        hist = default_registry().get(
+            "repro_pipeline_stage_latency_seconds")
+        assert hist.count(stage="entropy_decode") >= 1
+
+    def test_error_annotation_and_dump(self, tmp_path):
+        configure_tracing(enabled=True)
+        try:
+            tracer().reset()
+            with pytest.raises(RuntimeError):
+                with span("tail"):
+                    raise RuntimeError("boom")
+            path = tmp_path / "events.json"
+            n = tracer().dump_events(str(path))
+        finally:
+            configure_tracing(enabled=False)
+        assert n == 1
+        events = json.loads(path.read_text())["events"]
+        assert events[0]["error"] == "RuntimeError"
+
+
+class TestExposition:
+    def test_scrape_routes(self):
+        reg = MetricsRegistry()
+        reg.counter("repro_t_hits_total", "hits").inc(2)
+        pulled = []
+
+        async def run():
+            exp = MetricsExposition([reg],
+                                    collectors=[lambda: pulled.append(1)])
+            await exp.start()
+            url = f"http://127.0.0.1:{exp.port}"
+            try:
+                def get(path):
+                    with urllib.request.urlopen(url + path,
+                                                timeout=5) as r:
+                        return r.status, r.read().decode()
+                out = {p: await asyncio.to_thread(get, p)
+                       for p in ("/metrics", "/events", "/healthz")}
+                with pytest.raises(urllib.error.HTTPError):
+                    await asyncio.to_thread(get, "/nope")
+            finally:
+                await exp.close()
+            return out
+
+        out = asyncio.run(run())
+        fams = parse_prometheus_text(out["/metrics"][1])
+        assert fams["repro_t_hits_total"]["samples"][
+            ("repro_t_hits_total", frozenset())] == 2.0
+        assert pulled                       # collector ran before render
+        assert "events" in json.loads(out["/events"][1])
+        assert out["/healthz"] == (200, "ok\n")
+
+
+class TestServerTelemetry:
+    def test_metrics_port_scrape_and_ft_metrics(self, features):
+        codec = _live_codec(features)
+        tick = TickConfig(max_wait_s=0.01)
+
+        async def run():
+            async with CloudServer(echo_features=True, tick=tick,
+                                   metrics_port=0) as srv:
+                async with EdgeClient("127.0.0.1", srv.port,
+                                      codec=codec) as client:
+                    await client.submit(features)
+                    snap = await client.fetch_cloud_metrics()
+                url = f"http://127.0.0.1:{srv.metrics_port}/metrics"
+                text = await asyncio.to_thread(
+                    lambda: urllib.request.urlopen(url, timeout=5)
+                    .read().decode())
+            return snap, text
+
+        snap, text = asyncio.run(run())
+        assert snap["counters"]["sessions_served"] == 1
+        assert _series(snap["metrics"],
+                       "repro_server_ticks_total")["value"] >= 1
+        fams = parse_prometheus_text(text)
+        for name in ("repro_server_sessions_served_total",
+                     "repro_server_ticks_total",
+                     "repro_server_coded_bytes_total",
+                     "repro_server_measured_bpe",
+                     "repro_server_header_cache_hits_count",
+                     "repro_decode_entropy_calls_total",
+                     "repro_bank_cache_hits_total"):
+            assert name in fams, name
+        served = fams["repro_server_sessions_served_total"]["samples"]
+        assert served[("repro_server_sessions_served_total",
+                       frozenset())] == 1.0
+
+    def test_legacy_tick_none_registry_counts_errors(self, features):
+        codec = _live_codec(features)
+
+        async def run():
+            async with CloudServer(echo_features=True, tick=None) as srv:
+                async with EdgeClient("127.0.0.1", srv.port, codec=codec,
+                                      chunk_elems=600) as client:
+                    await client.submit(features)
+                # a second connection sends garbage: CHUNK before HEADER
+                reader, writer = await asyncio.open_connection(
+                    "127.0.0.1", srv.port)
+                from repro.transport.framing import FT_CHUNK
+                writer.write(encode_frame(FT_CHUNK, 9, 0, b"\x00\x01"))
+                await writer.drain()
+                await reader.read()         # server replies ERROR+closes
+                writer.close()
+                for _ in range(50):         # until the close is observed
+                    if srv.open_connections == 0:
+                        break
+                    await asyncio.sleep(0.05)
+                return srv.counters, srv.metrics.snapshot()
+
+        counters, snap = asyncio.run(run())
+        # the legacy dict shape is pinned: registry-only telemetry must
+        # not leak new keys into it
+        assert set(counters) == {"sessions_served", "open_connections"}
+        assert counters["sessions_served"] == 1
+        assert _series(snap,
+                       "repro_server_sessions_served_total")["value"] == 1
+        assert _series(snap,
+                       "repro_server_decode_errors_total")["value"] == 1
+
+    def test_eviction_clears_per_session_series(self, features):
+        codec = _live_codec(features)
+        tick = TickConfig(max_wait_s=0.05, max_chunks=1 << 30)
+
+        async def run():
+            async with CloudServer(echo_features=True, tick=tick) as srv:
+                # half a stream, then vanish mid-tick
+                frames = list(tensor_to_frames(codec, features, session=0,
+                                               chunk_elems=600))
+                _, writer = await asyncio.open_connection(
+                    "127.0.0.1", srv.port)
+                for fb in frames[:max(2, len(frames) // 2)]:
+                    writer.write(fb)
+                await writer.drain()
+                await asyncio.sleep(0.01)
+                pending_mid = len(srv.metrics.get(
+                    "repro_server_session_pending_chunks_count").series())
+                writer.close()
+                await writer.wait_closed()
+                # a healthy session completes alongside
+                async with EdgeClient("127.0.0.1", srv.port, codec=codec,
+                                      chunk_elems=600) as client:
+                    await client.submit(0.5 * features)
+                await asyncio.sleep(0.2)
+                srv._sync_gauges()
+                return pending_mid, srv.metrics.snapshot()
+
+        pending_mid, snap = asyncio.run(run())
+        assert pending_mid == 1             # tracked while in flight
+        # disconnect + completion both drop their label series: nothing
+        # leaks across sessions
+        assert snap["repro_server_session_pending_chunks_count"][
+            "series"] == []
+        assert _series(snap,
+                       "repro_server_queue_depth_count")["value"] == 0
+        assert _series(snap,
+                       "repro_server_sessions_served_total")["value"] == 1
+
+    def test_ft_metrics_frame_raw(self, features):
+        # protocol level: an empty METRICS frame gets a JSON METRICS
+        # frame back, no client machinery required
+        codec = _live_codec(features)
+
+        async def run():
+            async with CloudServer(echo_features=True, tick=None) as srv:
+                reader, writer = await asyncio.open_connection(
+                    "127.0.0.1", srv.port)
+                writer.write(encode_frame(FT_METRICS, 0, 0, b""))
+                await writer.drain()
+                from repro.transport import FrameReader
+                frames = FrameReader()
+                while True:
+                    data = await asyncio.wait_for(reader.read(1 << 16),
+                                                  timeout=10)
+                    frames.feed(data)
+                    for frame in frames:
+                        writer.close()
+                        return frame
+
+        frame = asyncio.run(run())
+        assert frame.ftype == FT_METRICS
+        snap = json.loads(frame.payload.decode())
+        assert "counters" in snap and "metrics" in snap
+
+
+class TestClientTelemetry:
+    def test_encode_counters_backed_by_registry(self, features):
+        codec = _live_codec(features)
+        tick = TickConfig(max_wait_s=0.01, max_batch=8)
+
+        async def run():
+            async with CloudServer(echo_features=True) as srv:
+                async with EdgeClient("127.0.0.1", srv.port, codec=codec,
+                                      chunk_elems=600,
+                                      tick=tick) as client:
+                    await asyncio.gather(*[
+                        client.submit(t)
+                        for t in (features, 0.5 * features)])
+                    return dict(client.encode_counters), \
+                        client.metrics.snapshot()
+
+        counters, snap = asyncio.run(run())
+        assert set(counters) == {"ticks", "sessions", "stacked_sessions",
+                                 "fused_launches", "entropy_calls",
+                                 "elems", "coded_bytes", "encode_s"}
+        assert counters["sessions"] == 2
+        assert _series(snap, "repro_client_sessions_total")["value"] == 2
+        assert _series(snap,
+                       "repro_client_submit_latency_seconds")["count"] == 2
+
+
+class TestEngineTelemetry:
+    def test_latency_ring_and_percentiles(self):
+        import jax
+
+        from repro.configs import ARCHS, reduced
+        from repro.models import init_params
+        from repro.serving import Request, ServeEngine
+        cfg = dataclasses.replace(reduced(ARCHS["codeqwen1.5-7b"]),
+                                  vocab_size=128, d_model=32, d_ff=64,
+                                  num_heads=2, num_kv_heads=2, head_dim=16)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        eng = ServeEngine(cfg, params, slots=2, max_seq=64,
+                          latency_log_size=3)
+        rng = np.random.default_rng(0)
+        reqs = [Request(prompt=rng.integers(0, 128, size=4)
+                        .astype(np.int32), max_new_tokens=2)
+                for _ in range(5)]
+        eng.generate(reqs)
+        assert all(r.done for r in reqs)
+        # ring buffer: bounded at latency_log_size, not len(reqs)
+        assert len(eng.latency_log) == 3
+        c = eng.counters
+        assert c["requests_done"] == 5
+        assert c["request_latency_p99_s"] >= c["request_latency_p50_s"] > 0
+        snap = eng.metrics.snapshot()
+        assert _series(snap, "repro_engine_requests_total")["value"] == 5
+        assert _series(
+            snap, "repro_engine_request_latency_seconds")["count"] == 5
