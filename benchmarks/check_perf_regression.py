@@ -17,7 +17,10 @@ baseline and fails when the hot path regressed.  Two kinds:
   * boolean gates (``encode_speedup_ge_20x``, ``decode_speedup_ge_20x``,
     ``fused_identical``, ``channel_le_tensor``,
     ``tiled_beats_tensor_ge_2_levels``,
-    ``conv2d_beats_flat_ge_2_levels``) must hold outright.
+    ``conv2d_beats_flat_ge_2_levels``, and the device-entropy gates
+    ``device_entropy.device_e2e_ge_1_3x_baseline`` /
+    ``device_entropy.device_d2h_reduction_ge_4x`` /
+    ``device_entropy.device_stream_identical``) must hold outright.
 
 ``--kind transport`` gates ``BENCH_transport.json`` against
 ``benchmarks/BENCH_transport.baseline.json`` with the same tolerance
@@ -59,11 +62,16 @@ KINDS = {
         # throughputs
         "abs": ("encode_Melem_per_s", "decode_Melem_per_s",
                 "fused_encode_Melem_per_s", "stream_batch_speedup",
-                "stream_decode_batch_speedup"),
+                "stream_decode_batch_speedup",
+                "device_entropy.device_fused_Melem_per_s",
+                "device_entropy.d2h_reduction"),
         "bool": ("encode_speedup_ge_20x", "decode_speedup_ge_20x",
                  "fused_identical", "channel_le_tensor",
                  "tiled_beats_tensor_ge_2_levels",
-                 "conv2d_beats_flat_ge_2_levels"),
+                 "conv2d_beats_flat_ge_2_levels",
+                 "device_entropy.device_e2e_ge_1_3x_baseline",
+                 "device_entropy.device_d2h_reduction_ge_4x",
+                 "device_entropy.device_stream_identical"),
         "size_key": "n_elements",
         "baseline": "benchmarks/BENCH_codec.baseline.json",
     },

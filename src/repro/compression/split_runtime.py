@@ -48,26 +48,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from ..configs.base import ModelConfig
 from ..core.codec import FeatureCodec
 from ..models import transformer as T
-from ..models.context import DistContext
-
-
-def _shard_map_pod(body, mesh, in_specs, out_specs):
-    """shard_map over the 'pod' axis only, other mesh axes left automatic.
-
-    jax >= 0.6 exposes this as ``jax.shard_map(..., axis_names=...)``
-    with the other mesh axes left to GSPMD.  Older releases (the pinned
-    container has 0.4.x) only support fully-manual
-    ``jax.experimental.shard_map.shard_map`` reliably (the ``auto=``
-    subgroup mode trips the old SPMD partitioner), so there every axis
-    goes manual: replicated in_specs hand each device the full operand
-    and the body simply runs replicated across data/model shards.
-    """
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs,
-                             axis_names=frozenset({"pod"}), check_vma=False)
-    from ..models.context import shard_map_compat
-    return shard_map_compat(body, mesh, in_specs, out_specs)
+from ..models.context import (DistContext, SHARD_MAP_PARTIAL_AUTO,
+                              shard_map)
 
 
 def split_supported(cfg: ModelConfig) -> bool:
@@ -117,11 +99,11 @@ def make_split_decode_step(cfg: ModelConfig, mesh, codec: FeatureCodec,
     but full-width transfer, the ablation), or 'raw' (bf16 baseline).
     """
     assert "pod" in mesh.axis_names, "split runtime needs the multi-pod mesh"
-    # Sharding-constraint hints inside the manual 'pod' region are only
-    # understood by the modern shard_map; the 0.4.x auto-subgroup
-    # partitioner rejects full-mesh NamedShardings there, and they are
-    # perf hints, not correctness, so the fallback path drops them.
-    inner_ctx = DistContext(mesh, ("data",)) if hasattr(jax, "shard_map") \
+    # Sharding-constraint hints inside the manual 'pod' region need the
+    # partially-automatic region mode; fully-manual regions reject
+    # full-mesh NamedShardings.  They are perf hints, not correctness,
+    # so the fully-manual path drops them.
+    inner_ctx = DistContext(mesh, ("data",)) if SHARD_MAP_PARTIAL_AUTO \
         else None
     half, tail = stage_layout(cfg)
     d = cfg.d_model
@@ -197,8 +179,8 @@ def make_split_decode_step(cfg: ModelConfig, mesh, codec: FeatureCodec,
                     rep(tail_cache) if tail_cache is not None else None, P())
         out_specs = (P(), pod_spec(stage_cache),
                      rep(tail_cache) if tail_cache is not None else None, P())
-        logits, sc, tc, rate = _shard_map_pod(
-            body, mesh, in_specs, out_specs,
+        logits, sc, tc, rate = shard_map(
+            body, mesh, in_specs, out_specs, manual_axes={"pod"},
         )(pod_ids, params["stages"], params["tail"], params["embed"],
           params["final_norm"], head, token, stage_cache, tail_cache, pos)
         return logits, (sc, tc), rate

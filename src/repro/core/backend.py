@@ -26,6 +26,20 @@ contract with its vectorized formulas (on CPU there is no transfer to
 save).  Both return bit-identical coded-order indices, which keeps the
 entropy payload byte-identical to the unfused reference path.
 
+``encode_fused(..., emit_wire=True)`` moves the *entropy stage itself*
+onto the device: quantize, coded-order permute and the interleaved-rANS
+bit-plane coder (``repro.kernels.rans_coder``) all run in-graph, and the
+call returns ``(payload, None)`` where ``payload`` is a finished
+coder-id-4 bitstream (or a list of per-chunk payloads when
+``chunk_bounds`` is given).  Only the coded wire bytes plus the small
+per-span probability side info cross device->host.  Payloads are
+byte-identical to the host coder id 2 single-shard stream past the id
+byte, and shapes the device coder cannot take (``n_levels`` above
+:data:`~repro.kernels.rans_coder.MAX_DEVICE_LEVELS`, oversize tensors)
+fall back to the host step loop inside the same container -- the wire
+format never depends on where the blob was coded.  ``want_hist`` is
+incompatible with ``emit_wire`` (histograms live on the index path).
+
 Selection: ``get_backend()`` picks "kernel" when JAX's default backend is
 TPU and "jnp" otherwise; override per-codec via ``CodecConfig.backend`` or
 globally with the ``REPRO_QUANT_BACKEND`` environment variable
@@ -135,6 +149,61 @@ def _coded_order(idx: np.ndarray, spec: QuantSpec) -> np.ndarray:
     if spec.plan is not None:
         return spec.plan.to_coded_order(idx)
     return np.asarray(idx).ravel()
+
+
+def _coded_order_device(q, spec: QuantSpec):
+    """In-graph mirror of :func:`_coded_order`: device coded-order indices
+    with no host round-trip (the spatial permutation is a static gather)."""
+    plan = spec.plan
+    if plan is None:
+        return q.reshape(-1)
+    axis, c, m = plan.resolve(q.shape)
+    rows = jnp.moveaxis(q, axis, 0).reshape(c, m)
+    perm = plan.spatial_perm(m)
+    if perm is not None:
+        rows = jnp.take(rows, jnp.asarray(perm), axis=1)
+    return rows.reshape(-1)
+
+
+def _unpack_bytes_device(packed, bits: int):
+    """In-graph mirror of ``ops.unpack_bytes`` (uint8 -> int32 indices)."""
+    per = 8 // bits if bits in (1, 2, 4) else 1
+    if per == 1:
+        return packed.astype(jnp.int32)
+    shifts = (jnp.arange(per, dtype=jnp.uint8) * bits)[None, :]
+    mask = jnp.uint8((1 << bits) - 1)
+    vals = (packed.reshape(-1, 1) >> shifts) & mask
+    return vals.reshape(packed.shape[:-1] + (-1,)).astype(jnp.int32)
+
+
+def _unpack_layout_device(idx2d, lay):
+    """In-graph mirror of ``PaddedLayout.unpack_indices``: strip the
+    megakernel's padded (rows, cols) view down to flat coded order using
+    only static slices and gathers."""
+    idx2d = idx2d.reshape(lay.rows, lay.cols)
+    if lay.flat_n is not None:
+        return idx2d.reshape(-1)[:lay.flat_n]
+    if lay.band_valid is not None:
+        return jnp.take(idx2d[:lay.ch], jnp.asarray(lay.coded_cols()),
+                        axis=1).reshape(-1)
+    a = idx2d[:lay.ch].reshape(lay.ch, lay.n_sblocks, lay.sb_cols)
+    a = a[:, :, :lay.bs].reshape(lay.ch, -1)[:, :lay.m]
+    return a.reshape(-1)
+
+
+def _encode_wire(coded, spec: QuantSpec, chunk_bounds, *, use_kernel: bool,
+                 interpret):
+    """Device entropy stage: coded-order indices (on device) -> finished
+    coder-id-4 payload bytes (one, or one per ``chunk_bounds`` range)."""
+    from ..kernels import rans_coder
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    if chunk_bounds is None:
+        return rans_coder.encode_indices_device(
+            coded, spec.n_levels, use_kernel=use_kernel, interpret=interpret)
+    return rans_coder.encode_index_chunks_device(
+        coded, spec.n_levels, list(chunk_bounds),
+        use_kernel=use_kernel, interpret=interpret)
 
 
 def _tile_hists_np(coded: np.ndarray, spec: QuantSpec) -> np.ndarray:
@@ -265,12 +334,31 @@ class JnpBackend:
             .at[tid, im].add(1)
         return hist.reshape(plan.n_cgroups, plan.n_sblocks, spec.n_levels)
 
+    def coded_indices_device(self, x, spec: QuantSpec, bits: int):
+        """Device coded-order indices, no host transfer: quantize +
+        coded-order permute stay in-graph (the emit_wire intermediate,
+        exposed for cross-session batching)."""
+        spec = _normalize(spec)
+        return _coded_order_device(self.quantize(x, spec), spec)
+
     def encode_fused(self, x, spec: QuantSpec, bits: int,
-                     want_hist: bool = False):
+                     want_hist: bool = False, emit_wire: bool = False,
+                     chunk_bounds=None):
         """Fused-encode contract on the reference path: coded-order
-        indices plus (optionally) host per-tile histograms."""
+        indices plus (optionally) host per-tile histograms; with
+        ``emit_wire`` the device entropy stage returns finished payload
+        bytes instead (see the module docstring)."""
         spec = _normalize(spec)
         tr = tracer()
+        if emit_wire:
+            if want_hist:
+                raise ValueError("emit_wire returns wire bytes; per-tile "
+                                 "histograms need the index path")
+            with tr.span("fused_launch", backend=self.name), \
+                    tr.annotate("repro.encode_fused"):
+                coded = self.coded_indices_device(x, spec, bits)
+            return _encode_wire(coded, spec, chunk_bounds,
+                                use_kernel=False, interpret=False), None
         with tr.span("fused_launch", backend=self.name), \
                 tr.annotate("repro.encode_fused"):
             q = self.quantize(x, spec)
@@ -385,15 +473,56 @@ class KernelBackend:
             idx, n_levels=spec.n_levels, plan=plan,
             interpret=self.interpret)
 
+    def coded_indices_device(self, x, spec: QuantSpec, bits: int):
+        """Device coded-order indices, no host transfer: the megakernel's
+        packed output is unpacked and layout-stripped in-graph (the
+        emit_wire intermediate, exposed for cross-session batching)."""
+        from ..kernels import ops
+        from ..kernels.fused_clip_quant import HIST_WIDTH
+        spec = _normalize(spec)
+        if spec.ecsq is not None or spec.n_levels > HIST_WIDTH:
+            return _coded_order_device(self.quantize(x, spec), spec)
+        if spec.plan is None:
+            packed, _, lay = ops.encode_fused(
+                x, float(spec.cmin), float(spec.cmax),
+                n_levels=spec.n_levels, bits=bits, interpret=self.interpret)
+        else:
+            plan = spec.plan
+            plan.resolve(x.shape)
+            lo = np.asarray(spec.cmin, np.float32).reshape(
+                plan.n_cgroups, plan.n_sblocks)
+            hi = np.asarray(spec.cmax, np.float32).reshape(
+                plan.n_cgroups, plan.n_sblocks)
+            packed, _, lay = ops.encode_fused(
+                x, lo, hi, n_levels=spec.n_levels, bits=bits,
+                plan=plan, interpret=self.interpret)
+        return _unpack_layout_device(_unpack_bytes_device(packed, bits), lay)
+
     def encode_fused(self, x, spec: QuantSpec, bits: int,
-                     want_hist: bool = False):
+                     want_hist: bool = False, emit_wire: bool = False,
+                     chunk_bounds=None):
         """One megakernel pass -> (packed bytes + tile hists) on device;
         the np.asarray fetches here are the path's single transfer, and
-        the host only unpacks wire-width bytes back to indices."""
+        the host only unpacks wire-width bytes back to indices.
+
+        ``emit_wire=True`` keeps going on device: the packed megakernel
+        output is unpacked and layout-stripped in-graph and fed straight
+        into the device rANS stage, so the only device->host traffic is
+        the finished coder-id-4 payload."""
         from ..kernels import ops
         from ..kernels.fused_clip_quant import HIST_WIDTH
         spec = _normalize(spec)
         tr = tracer()
+        if emit_wire:
+            if want_hist:
+                raise ValueError("emit_wire returns wire bytes; per-tile "
+                                 "histograms need the index path")
+            with tr.span("fused_launch", backend=self.name), \
+                    tr.annotate("repro.encode_fused"):
+                coded = self.coded_indices_device(x, spec, bits)
+            return _encode_wire(coded, spec, chunk_bounds,
+                                use_kernel=True,
+                                interpret=self.interpret), None
         if spec.ecsq is not None or spec.n_levels > HIST_WIDTH:
             # no fused kernel for designed quantizers / wide histograms:
             # kernel-quantize, then the host fallback of the contract

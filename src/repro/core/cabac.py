@@ -146,6 +146,7 @@ _CODER_SERIAL = 0
 _CODER_RANS = 1
 _CODER_RANS_SHARDED = 2
 _CODER_RANS_PROC = 3    # same shard layout as 2, coded on a process pool
+_CODER_RANS_DEVICE = 4  # single-shard coder-2 layout, coded on device
 # Below this many TU bits the serial coder's 4-byte flush undercuts the
 # vectorized coder's per-lane state overhead, and the python loop is cheap.
 _SERIAL_CUTOFF_BITS = 1 << 16
@@ -238,6 +239,18 @@ def _split_shards(body: bytes, n_elems: int, n_levels: int) -> list:
     return jobs
 
 
+def wrap_device_blob(blob: bytes) -> bytes:
+    """Coder-4 container for one device-coded (or host-fallback) rANS
+    blob: the single-shard coder-2 layout under a distinct id byte, so
+    device-coded streams are byte-identical to
+    ``_encode_rans_sharded(idx, n_levels, n_shards=1)`` past the id.
+    An empty ``blob`` means an empty stream (zero shards, like coder 2's
+    empty payload)."""
+    if not blob:
+        return bytes([_CODER_RANS_DEVICE]) + struct.pack("<H", 0)
+    return bytes([_CODER_RANS_DEVICE]) + _shard_header([blob]) + blob
+
+
 def _encode_rans_sharded(idx: np.ndarray, n_levels: int, n_shards: int,
                          coder_id: int = _CODER_RANS_SHARDED) -> bytes:
     """Shard elements into independent rANS streams coded on the thread
@@ -313,6 +326,12 @@ def encode_indices(idx: np.ndarray, n_levels: int, mode: str = "auto") -> bytes:
         return _encode_rans_sharded(idx, n_levels,
                                     max(2, rans.proc_workers()),
                                     coder_id=_CODER_RANS_PROC)
+    if mode == "rans_device":
+        # in-graph coder (id 4); on host arrays this round-trips through
+        # the device, so it is mainly the backends' emit_wire path that
+        # reaches it with data already resident
+        from ..kernels.rans_coder import encode_indices_device
+        return encode_indices_device(idx, n_levels)
     raise ValueError(f"unknown coder mode {mode!r}")
 
 
@@ -373,7 +392,7 @@ def decode_indices(data: bytes, n_elems: int, n_levels: int) -> np.ndarray:
         dec = rans.PlaneStreamDecoder(body)
         return _decode_planes(lambda n, j: dec.next_plane(n),
                               n_elems, n_levels)
-    if coder == _CODER_RANS_SHARDED:
+    if coder in (_CODER_RANS_SHARDED, _CODER_RANS_DEVICE):
         return _decode_rans_sharded(body, n_elems, n_levels)
     if coder == _CODER_RANS_PROC:
         return _decode_rans_sharded(body, n_elems, n_levels, use_procs=True)
@@ -397,22 +416,29 @@ def decode_indices_batch(payloads: list[bytes], counts: list[int],
     """
     levels = _levels_list(n_levels, len(payloads))
     out: list[np.ndarray | None] = [None] * len(payloads)
-    groups: dict[int, list[int]] = {}
+    groups: dict[int, list[tuple[int, int]]] = {}
     for i, data in enumerate(payloads):
-        if len(data) and data[0] == _CODER_RANS and len(data) > 1:
-            (lanes,) = struct.unpack_from("<H", data, 1)
+        # a device-coded payload is a single-shard container, so past
+        # the 7-byte prefix it batches like a plain rANS blob
+        off = 1 if len(data) > 1 and data[0] == _CODER_RANS else None
+        if off is None and len(data) > 7 \
+                and data[0] == _CODER_RANS_DEVICE \
+                and struct.unpack_from("<H", data, 1)[0] == 1:
+            off = 7
+        if off is not None:
+            (lanes,) = struct.unpack_from("<H", data, off)
             if lanes:
-                groups.setdefault(lanes, []).append(i)
+                groups.setdefault(lanes, []).append((i, off))
                 continue
         out[i] = decode_indices(data, counts[i], levels[i])
     for lanes, members in groups.items():
         if len(members) == 1:
-            i = members[0]
+            i = members[0][0]
             out[i] = decode_indices(payloads[i], counts[i], levels[i])
             continue
-        dec = rans.BatchPlaneDecoder([payloads[i][1:] for i in members])
-        n = [counts[i] for i in members]
-        rounds = [levels[i] - 1 for i in members]
+        dec = rans.BatchPlaneDecoder([payloads[i][o:] for i, o in members])
+        n = [counts[i] for i, _ in members]
+        rounds = [levels[i] - 1 for i, _ in members]
         idxs = [np.zeros(c, dtype=np.int32) for c in n]
         poss = [np.arange(c, dtype=np.int64) for c in n]
         for r in range(max(rounds)):
@@ -426,6 +452,6 @@ def decode_indices_batch(payloads: list[bytes], counts: list[int],
                     continue
                 poss[s] = poss[s][_as_bool(bits)]
                 idxs[s][poss[s]] += 1
-        for i, idx in zip(members, idxs):
+        for (i, _), idx in zip(members, idxs):
             out[i] = idx
     return out

@@ -41,6 +41,7 @@ the layout.  Legacy v2 per-channel and v1 seed streams still decode.
 from __future__ import annotations
 
 import dataclasses
+import os
 import struct
 from typing import Literal
 
@@ -665,17 +666,39 @@ class FeatureCodec:
                                          self.bits_per_index(),
                                          want_hist=want_hist)
 
+    def _device_entropy(self, device_entropy, coder_mode: str) -> bool:
+        """Resolve the device-resident entropy opt-in: an explicit
+        argument wins; otherwise ``REPRO_ENTROPY_DEVICE=1`` turns it on
+        whenever the coder choice is ours (``coder_mode == "auto"``) --
+        pinned coder modes keep their exact wire bytes."""
+        if device_entropy is not None:
+            return bool(device_entropy)
+        return coder_mode == "auto" \
+            and os.environ.get("REPRO_ENTROPY_DEVICE") == "1"
+
     def encode(self, x: np.ndarray, coder_mode: str = "auto",
-               fused: bool = True) -> bytes:
+               fused: bool = True, device_entropy: bool | None = None
+               ) -> bytes:
         """Full host encode: clip+quantize+TU+entropy coding with header.
 
         ``fused=True`` (default) runs the single-pass fused device encode;
         ``fused=False`` forces the unfused reference path.  Both produce
         byte-identical streams -- the entropy payload is a pure function
         of the coded-order indices, which the two paths share bit-exactly.
+
+        ``device_entropy=True`` (default: the ``REPRO_ENTROPY_DEVICE``
+        env opt-in, only with ``coder_mode="auto"``) keeps the entropy
+        stage on device too (``encode_fused(emit_wire=True)``): the
+        payload is a coder-id-4 stream and only wire bytes cross to the
+        host.
         """
         x = np.asarray(x, np.float32)
         header, _ = self._header(x)
+        if fused and self._device_entropy(device_entropy, coder_mode):
+            payload, _ = self.backend.encode_fused(
+                jnp.asarray(x), self.spec(), self.bits_per_index(),
+                emit_wire=True)
+            return header + payload
         coded = self._fused_indices(x)[0] if fused \
             else self._coded_indices(x)
         with span("entropy_encode", n_elems=int(coded.size)):
@@ -710,7 +733,8 @@ class FeatureCodec:
 
     def encode_stream(self, x: np.ndarray, chunk_elems: int = 1 << 18,
                       coder_mode: str = "auto",
-                      chunk_batch: int = STREAM_CHUNK_BATCH):
+                      chunk_batch: int = STREAM_CHUNK_BATCH,
+                      device_entropy: bool | None = None):
         """Chunked encode: yields the header payload, then chunk payloads.
 
         The first payload is the stream header: ``<II>`` (chunk_elems,
@@ -731,12 +755,36 @@ class FeatureCodec:
         through the batched rANS loop (one python step loop per batch, not
         per chunk); framing for the wire (session ids, CRC, end-of-tensor)
         lives in :mod:`repro.transport.framing`.
+
+        ``device_entropy`` (see :meth:`encode`) swaps the host entropy
+        batches for one device emit_wire pass producing every chunk's
+        coder-id-4 payload -- same chunk boundaries, and each payload's
+        rANS blob is byte-identical to the host coder id 2 single-shard
+        stream past the id byte.
         """
         if chunk_elems <= 0:
             raise ValueError("chunk_elems must be positive")
         x = np.asarray(x, np.float32)
         if self.plan is not None:
             chunk_elems = self.plan.align_chunk_elems(chunk_elems, x.shape)
+        if self._device_entropy(device_entropy, coder_mode):
+            # device-resident entropy: one emit_wire pass yields every
+            # chunk's coder-id-4 payload; no index tensor ever crosses
+            n = int(x.size)
+            n_chunks = max(1, -(-n // chunk_elems))
+            header, _ = self._header(x)
+            meta = struct.pack(_STREAM_META_FMT, chunk_elems, n_chunks,
+                               x.ndim)
+            meta += np.asarray(x.shape, "<u4").tobytes()
+            yield meta + header
+            bounds = [(c * chunk_elems, min((c + 1) * chunk_elems, n))
+                      for c in range(n_chunks)]
+            blobs, _ = self.backend.encode_fused(
+                jnp.asarray(x), self.spec(), self.bits_per_index(),
+                emit_wire=True, chunk_bounds=bounds)
+            for c, blob in enumerate(blobs):
+                yield struct.pack("<I", c) + blob
+            return
         idx = self._fused_indices(x)[0]
         header, _ = self._header(x)
         n_chunks = max(1, -(-idx.size // chunk_elems))

@@ -14,9 +14,10 @@ stream header.
 
 ``--transport loopback`` wires the split boundary through a real socket
 pair: a CloudServer thread on localhost receives the streamed, framed
-bitstream and echoes the reconstruction, and the engine's split-layer
-callback (``jax.experimental.io_callback``) round-trips every boundary
-tensor through it -- the transport stack under a live serving load.
+bitstream and echoes the reconstruction, and the engine round-trips
+every boundary tensor through it *between* its two jitted halves
+(``ServeEngine(codec_host_fn=...)``) -- the transport stack under a live
+serving load, safe on single-CPU hosts.
 """
 
 from __future__ import annotations
@@ -94,33 +95,28 @@ def _calibrate_warmup(cfg, params, args):
 
 def _loopback_codec_fn(codec, chunk_elems: int, tick_ms: float = 0.0,
                        metrics_port: int | None = None):
-    """Split-boundary hook that streams every tensor over localhost.
+    """Split-boundary host hook that streams every tensor over localhost.
 
     Starts a CloudServer (echoing reconstructions) on a daemon thread and
-    returns a codec_fn whose io_callback submits the boundary activations
-    through the framed streaming client and feeds the *socket-round-
-    tripped* reconstruction back into the jitted step.  The reported rate
-    is the true wire bits/element (frames, headers and all).
+    returns a *host* round-trip ``x -> (recon, bits_per_elem)`` for
+    ``ServeEngine(codec_host_fn=...)``: the engine runs each stage as two
+    jitted halves split at the boundary and calls this eagerly in
+    between, so the client's own jax encode never executes beneath an
+    in-flight jitted program.  (The old ``io_callback`` hookup deadlocked
+    on single-CPU hosts: the callback held XLA's only dispatch thread
+    while the nested encode waited for it.  Running the round-trip
+    *between* programs removes that cycle structurally --
+    tests/test_serve_loopback.py pins it on 1 CPU.)  The reported rate is
+    the true wire bits/element (frames, headers and all).
 
     The server always runs the cross-session tick drain (one batched
     entropy call per tick); ``tick_ms`` sets the tick window.  The
-    ordered io_callback keeps one tensor in flight per engine, so the
+    engine keeps one tensor in flight per boundary crossing, so the
     default window is 0 (drain as soon as the loop is idle) and client-
     side encode coalescing only engages for ``tick_ms > 0``.
-
-    Needs a multi-core host: the client's encode is itself a jax
-    computation, and on a single-CPU box the ordered io_callback holds
-    XLA's only dispatch thread while that nested encode waits for it --
-    a deadlock that predates the tick path (same hang at the seed
-    revision).  CI exercises the socket stack via
-    ``examples/edge_cloud_demo.py`` instead.
     """
     import asyncio
     import threading
-
-    import jax
-    import jax.numpy as jnp
-    from jax.experimental import io_callback
 
     from ..serving import TickConfig
     from ..transport import CloudServer, SyncEdgeClient
@@ -143,15 +139,7 @@ def _loopback_codec_fn(codec, chunk_elems: int, tick_ms: float = 0.0,
     def host_roundtrip(x):
         res = client.submit(np.asarray(x, np.float32))
         recon = np.asarray(res.arrays[0], np.float32).reshape(x.shape)
-        return recon, np.float32(res.bits_per_elem)
-
-    def codec_fn(x):
-        recon, rate = io_callback(
-            host_roundtrip,
-            (jax.ShapeDtypeStruct(x.shape, jnp.float32),
-             jax.ShapeDtypeStruct((), jnp.float32)),
-            x, ordered=True)
-        return recon.astype(x.dtype), rate
+        return recon, float(res.bits_per_elem)
 
     def cleanup():
         counters = server.counters
@@ -164,7 +152,7 @@ def _loopback_codec_fn(codec, chunk_elems: int, tick_ms: float = 0.0,
               f"bpe {counters.get('bpe_avg', 0.0):.3f}, header cache "
               f"{counters.get('header_cache', {})})")
 
-    return codec_fn, cleanup
+    return host_roundtrip, cleanup
 
 
 def main():
@@ -202,9 +190,9 @@ def main():
     ap.add_argument("--tick-ms", type=float, default=0.0,
                     help="cross-session batching tick window for the "
                          "loopback transport (0 = drain immediately; the "
-                         "ordered io_callback keeps one tensor in "
-                         "flight, so >0 only helps with several engines "
-                         "sharing the worker)")
+                         "engine keeps one tensor in flight per boundary "
+                         "crossing, so >0 only helps with several "
+                         "engines sharing the worker)")
     ap.add_argument("--metrics-port", type=int, default=None,
                     help="serve Prometheus-text telemetry on this port "
                          "alongside the loopback CloudServer (0 = pick a "
@@ -234,12 +222,12 @@ def main():
     params = init_params(cfg, jax.random.PRNGKey(0))
 
     codec = None
-    codec_fn = None
+    codec_host_fn = None
     cleanup = None
     if args.codec_levels:
         codec = _calibrate_warmup(cfg, params, args)
         if args.transport == "loopback":
-            codec_fn, cleanup = _loopback_codec_fn(
+            codec_host_fn, cleanup = _loopback_codec_fn(
                 codec, args.chunk_elems, args.tick_ms,
                 metrics_port=args.metrics_port)
             codec = None
@@ -248,7 +236,7 @@ def main():
 
     eng = ServeEngine(cfg, params, slots=4,
                       max_seq=args.prompt_len + args.new_tokens + 8,
-                      codec=codec, codec_fn=codec_fn)
+                      codec=codec, codec_host_fn=codec_host_fn)
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
                                         size=args.prompt_len).astype(np.int32),

@@ -1,8 +1,11 @@
 from .context import DistContext
-from .transformer import (build_groups, decode_step, forward,
-                          forward_from_boundary, forward_head, init_cache,
-                          init_params, loss_fn, prefill)
+from .transformer import (build_groups, decode_from_boundary, decode_step,
+                          decode_to_boundary, forward, forward_from_boundary,
+                          forward_head, init_cache, init_params, loss_fn,
+                          prefill, prefill_from_boundary, prefill_to_boundary)
 
-__all__ = ["DistContext", "build_groups", "decode_step", "forward",
+__all__ = ["DistContext", "build_groups", "decode_from_boundary",
+           "decode_step", "decode_to_boundary", "forward",
            "forward_from_boundary", "forward_head",
-           "init_cache", "init_params", "loss_fn", "prefill"]
+           "init_cache", "init_params", "loss_fn", "prefill",
+           "prefill_from_boundary", "prefill_to_boundary"]

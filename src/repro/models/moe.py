@@ -149,8 +149,8 @@ def moe_expert_parallel(x, p, cfg, mesh, dp_axes, ep_axis="model"):
                 contrib.astype(jnp.float32) * w_sorted[:, None])
             return out.reshape(bl, sl, d).astype(xl.dtype)
 
-        from .context import shard_map_compat
-        return shard_map_compat(
+        from .context import shard_map
+        return shard_map(
             body, mesh=mesh,
             in_specs=(P(dp_axes, ep_axis, None), P(), P(ep_axis), P(ep_axis),
                       P(ep_axis)),
@@ -185,8 +185,8 @@ def moe_expert_parallel(x, p, cfg, mesh, dp_axes, ep_axis="model"):
         out = lax.psum(out, ep_axis)
         return out.reshape(bl, sl, d).astype(xl.dtype)
 
-    from .context import shard_map_compat
-    return shard_map_compat(
+    from .context import shard_map
+    return shard_map(
         body_psum, mesh=mesh,
         in_specs=(P(dp_axes, None, None), P(), P(ep_axis), P(ep_axis),
                   P(ep_axis)),

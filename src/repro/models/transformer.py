@@ -550,6 +550,90 @@ def prefill(cfg: ModelConfig, params, batch_in, cache, *, ctx=None,
     return logits[:, 0], new_caches
 
 
+def prefill_to_boundary(cfg: ModelConfig, params, batch_in, cache, *,
+                        ctx=None):
+    """Edge half of a split prefill: embed + the pre-boundary groups.
+
+    Returns (split-layer activations (B, S, d), pre-boundary caches).
+    Together with :func:`prefill_from_boundary` this is :func:`prefill`
+    cut at the collaborative-intelligence boundary, so a host round-trip
+    (e.g. a real transport socket) can run *between* two jitted programs
+    instead of inside one -- no host callback ever blocks an in-flight
+    program while nested jax work waits for the dispatch thread.
+    """
+    groups, boundary = build_groups(cfg, split=True)
+    if not boundary:
+        raise ValueError(f"{cfg.name}: no split boundary (needs >= 2 "
+                         "full periods)")
+    pgroups = _align_param_groups(params, groups)
+    x = _embed_in(cfg, params, batch_in, ctx=ctx)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    new_caches = []
+    for gi in range(boundary):
+        x, nc = _apply_group(x, pgroups[gi], groups[gi], cfg, pos=0,
+                             gcache=cache[gi], ctx=ctx, positions=positions)
+        new_caches.append(nc)
+    return x, new_caches
+
+
+def prefill_from_boundary(cfg: ModelConfig, params, x, cache, *, ctx=None):
+    """Cloud half of a split prefill: post-boundary groups + head.
+
+    ``x`` is the (possibly codec-round-tripped) boundary tensor from
+    :func:`prefill_to_boundary`; ``cache`` is the full per-group cache
+    list (only the post-boundary entries are read).  Returns
+    (last-token logits (B, V), post-boundary caches)."""
+    groups, boundary = build_groups(cfg, split=True)
+    pgroups = _align_param_groups(params, groups)
+    x = jnp.asarray(x, jnp.dtype(cfg.dtype))
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    new_caches = []
+    for gi in range(boundary, len(groups)):
+        x, nc = _apply_group(x, pgroups[gi], groups[gi], cfg, pos=0,
+                             gcache=cache[gi], ctx=ctx, positions=positions)
+        new_caches.append(nc)
+    logits = _logits_out(cfg, params, x[:, -1:], ctx=ctx)
+    return logits[:, 0], new_caches
+
+
+def decode_to_boundary(cfg: ModelConfig, params, token_in, cache, pos, *,
+                       ctx=None):
+    """Edge half of a split decode step (see :func:`prefill_to_boundary`).
+
+    Returns (boundary activations (B, 1, d), pre-boundary caches)."""
+    groups, boundary = build_groups(cfg, split=True)
+    if not boundary:
+        raise ValueError(f"{cfg.name}: no split boundary (needs >= 2 "
+                         "full periods)")
+    pgroups = _align_param_groups(params, groups)
+    batch_in = token_in[:, None] if token_in.ndim == 1 else token_in
+    x = _embed_in(cfg, params, batch_in, pos0=pos, ctx=ctx)
+    positions = jnp.full((1,), pos, dtype=jnp.int32)
+    new_caches = []
+    for gi in range(boundary):
+        x, nc = _apply_group(x, pgroups[gi], groups[gi], cfg, pos=pos,
+                             gcache=cache[gi], ctx=ctx, positions=positions)
+        new_caches.append(nc)
+    return x, new_caches
+
+
+def decode_from_boundary(cfg: ModelConfig, params, x, cache, pos, *,
+                         ctx=None):
+    """Cloud half of a split decode step: post-boundary groups + head.
+    Returns (logits (B, V), post-boundary caches)."""
+    groups, boundary = build_groups(cfg, split=True)
+    pgroups = _align_param_groups(params, groups)
+    x = jnp.asarray(x, jnp.dtype(cfg.dtype))
+    positions = jnp.full((1,), pos, dtype=jnp.int32)
+    new_caches = []
+    for gi in range(boundary, len(groups)):
+        x, nc = _apply_group(x, pgroups[gi], groups[gi], cfg, pos=pos,
+                             gcache=cache[gi], ctx=ctx, positions=positions)
+        new_caches.append(nc)
+    logits = _logits_out(cfg, params, x, ctx=ctx)
+    return logits[:, 0], new_caches
+
+
 def decode_step(cfg: ModelConfig, params, token_in, cache, pos, *, ctx=None,
                 codec_fn=None, split: bool = False):
     """One decode step.  token_in: (B,) int32 or (B,1,d) embeddings;

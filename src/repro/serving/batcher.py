@@ -57,6 +57,7 @@ single entropy call.
 from __future__ import annotations
 
 import dataclasses
+import os
 import struct
 import time
 
@@ -92,6 +93,9 @@ class TickConfig:
     max_chunks: int = 512
     chunk_elems: int = DEFAULT_CHUNK_ELEMS
     coder_mode: str = "auto"
+    # device-resident entropy (coder id 4): None defers to the
+    # REPRO_ENTROPY_DEVICE env opt-in (only with coder_mode "auto")
+    device_entropy: bool | None = None
 
     def __post_init__(self):
         if self.max_wait_s < 0:
@@ -205,6 +209,20 @@ def split_coded(codec: FeatureCodec, coded: np.ndarray,
             for i in range(len(xs))]
 
 
+def split_coded_device(codec: FeatureCodec, coded,
+                       xs: list[np.ndarray]) -> list:
+    """:func:`split_coded` staying in-graph: device slices of a stacked
+    launch's device coded-order output (the device-entropy tick path)."""
+    plan = codec.plan
+    if plan is None:
+        bounds = np.cumsum([0] + [int(np.asarray(x).size) for x in xs])
+        return [coded[int(bounds[i]):int(bounds[i + 1])]
+                for i in range(len(xs))]
+    _, c, m = plan.resolve(xs[0].shape)
+    rows = coded.reshape(c, len(xs), m)
+    return [rows[:, i, :].reshape(-1) for i in range(len(xs))]
+
+
 # -- encode tick -------------------------------------------------------------
 
 
@@ -222,7 +240,10 @@ def encode_tick(items, cfg: TickConfig = TickConfig()
     t0 = time.perf_counter()
     stats = TickStats(sessions=len(items))
     items = [(codec, np.asarray(x, np.float32)) for codec, x in items]
-    coded: list[np.ndarray | None] = [None] * len(items)
+    coded: list = [None] * len(items)
+    dev = cfg.device_entropy if cfg.device_entropy is not None else (
+        cfg.coder_mode == "auto"
+        and os.environ.get("REPRO_ENTROPY_DEVICE") == "1")
 
     groups: dict[tuple, list[int]] = {}
     for i, (codec, x) in enumerate(items):
@@ -241,48 +262,82 @@ def encode_tick(items, cfg: TickConfig = TickConfig()
                 stacked = stack_group(codec, xs) if len(batch) > 1 else None
             if stacked is None:
                 for i in batch:
-                    coded[i] = codec._fused_indices(items[i][1])[0]
+                    if dev:
+                        coded[i] = codec.backend.coded_indices_device(
+                            jnp.asarray(items[i][1]), codec.spec(),
+                            codec.bits_per_index())
+                    else:
+                        coded[i] = codec._fused_indices(items[i][1])[0]
                     stats.fused_launches += 1
                 continue
             x_s, spec_s = stacked
-            out = codec.backend.encode_fused(jnp.asarray(x_s), spec_s,
-                                             codec.bits_per_index())[0]
+            if dev:
+                out = codec.backend.coded_indices_device(
+                    jnp.asarray(x_s), spec_s, codec.bits_per_index())
+            else:
+                out = codec.backend.encode_fused(jnp.asarray(x_s), spec_s,
+                                                 codec.bits_per_index())[0]
             stats.fused_launches += 1
             stats.stacked_sessions += len(batch)
             with span("stack_scatter", sessions=len(batch)):
-                for i, part in zip(batch, split_coded(codec, out, xs)):
+                split = split_coded_device if dev else split_coded
+                for i, part in zip(batch, split(codec, out, xs)):
                     coded[i] = part
 
     # every chunk segment of the tick through one batched entropy call;
     # payloads are per-segment independent, so this is byte-identical to
-    # encode_stream's per-stream batches
+    # encode_stream's per-stream batches.  The device-entropy path keeps
+    # the same shape as one dispatch-all + finalize-all pass: every
+    # session's chunk stages launch before any payload's (bytes-only)
+    # D2H drains, so each transfer overlaps the next chunk's step loops.
     segments: list[np.ndarray] = []
     seg_levels: list[int] = []
     seg_owner: list[int] = []
     headers: list[bytes] = []
     chunking: list[tuple[int, int]] = []      # (chunk_elems, n_chunks)
+    bounds_per: list[list[tuple[int, int]]] = []
     with span("framing", sessions=len(items)):
         for i, (codec, x) in enumerate(items):
             chunk_elems = cfg.chunk_elems
             if codec.plan is not None:
                 chunk_elems = codec.plan.align_chunk_elems(chunk_elems,
                                                            x.shape)
-            idx = coded[i]
-            n_chunks = max(1, -(-idx.size // chunk_elems))
+            n = int(x.size)
+            n_chunks = max(1, -(-n // chunk_elems))
             header, _ = codec._header(x)
             meta = struct.pack(_STREAM_META_FMT, chunk_elems, n_chunks,
                                x.ndim)
             meta += np.asarray(x.shape, "<u4").tobytes()
             headers.append(meta + header)
             chunking.append((chunk_elems, n_chunks))
-            for c in range(n_chunks):
-                segments.append(idx[c * chunk_elems:(c + 1) * chunk_elems])
-                seg_levels.append(codec.config.n_levels)
-                seg_owner.append(i)
-            stats.elems += int(x.size)
-    with span("entropy_encode", chunks=len(segments)):
-        blobs = cabac.encode_indices_batch(segments, seg_levels,
-                                           mode=cfg.coder_mode)
+            if dev:
+                bounds_per.append(
+                    [(c * chunk_elems, min((c + 1) * chunk_elems, n))
+                     for c in range(n_chunks)])
+            else:
+                idx = coded[i]
+                for c in range(n_chunks):
+                    segments.append(
+                        idx[c * chunk_elems:(c + 1) * chunk_elems])
+                    seg_levels.append(codec.config.n_levels)
+                    seg_owner.append(i)
+            stats.elems += n
+    if dev:
+        from ..kernels import rans_coder
+        with span("entropy_encode",
+                  chunks=sum(len(b) for b in bounds_per)):
+            pend = [rans_coder.dispatch_index_chunks(
+                coded[i], codec.config.n_levels, bounds_per[i],
+                use_kernel=codec.backend.name == "kernel",
+                interpret=getattr(codec.backend, "interpret", None))
+                for i, (codec, _) in enumerate(items)]
+            blobs = [b for p in pend
+                     for b in rans_coder.finalize_index_chunks(p)]
+        seg_owner = [i for i, bl in enumerate(bounds_per) for _ in bl]
+    else:
+        with span("entropy_encode", chunks=len(segments)):
+            blobs = cabac.encode_indices_batch(segments, seg_levels,
+                                               mode=cfg.coder_mode)
     stats.entropy_calls = 1
 
     with span("framing", sessions=len(items)):

@@ -29,7 +29,9 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..core.codec import FeatureCodec
-from ..models import decode_step, init_cache, prefill
+from ..models import (decode_from_boundary, decode_step, decode_to_boundary,
+                      init_cache, prefill, prefill_from_boundary,
+                      prefill_to_boundary)
 from ..obs.metrics import BPE_BUCKETS, MetricsRegistry
 from ..obs.tracing import span
 
@@ -55,7 +57,8 @@ class Request:
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_seq: int = 256, ctx=None, codec_fn=None,
-                 codec: FeatureCodec | None = None, refill_align: int = 1,
+                 codec: FeatureCodec | None = None, codec_host_fn=None,
+                 refill_align: int = 1,
                  metrics: MetricsRegistry | None = None,
                  latency_log_size: int = 4096):
         """``codec`` is the preferred split-layer hookup: a calibrated
@@ -63,6 +66,17 @@ class ServeEngine:
         fake-quant + rate estimate is applied at the boundary.  The raw
         ``codec_fn`` callable ``x -> (x', rate_bits)`` remains for custom
         transforms.
+
+        ``codec_host_fn`` is the *host round-trip* variant for codecs
+        that leave jax entirely (socket transports, subprocess codecs):
+        a plain ``numpy (B, S, d) -> (numpy recon, rate_bits)`` callable.
+        The engine then compiles each stage as two jitted halves split
+        at the collaborative-intelligence boundary and runs the callable
+        eagerly between them.  Unlike an ``io_callback`` codec_fn, no
+        host work ever executes beneath an in-flight jitted program --
+        which deadlocks on a single-CPU host when the callback itself
+        dispatches jax computations (the callback holds XLA's only
+        dispatch thread while the nested work waits for it).
 
         ``refill_align``: admit mid-epoch refills only at positions that
         are multiples of this.  Every refill prefills at the current
@@ -78,11 +92,13 @@ class ServeEngine:
         long-lived serving process keeps the recent window (p50/p99 are
         exposed via the registry), not an unbounded list."""
         self.cfg, self.params, self.ctx = cfg, params, ctx
+        if sum(x is not None for x in (codec, codec_fn, codec_host_fn)) > 1:
+            raise ValueError("pass at most one of codec, codec_fn, "
+                             "codec_host_fn")
         if codec is not None:
-            if codec_fn is not None:
-                raise ValueError("pass either codec or codec_fn, not both")
             codec_fn = codec.apply_with_rate
         self.codec_fn = codec_fn
+        self.codec_host_fn = codec_host_fn
         self.slots = slots
         self.max_seq = max_seq
         self.refill_align = max(1, refill_align)
@@ -122,11 +138,41 @@ class ServeEngine:
             "split-layer coded bits/element per decode step",
             buckets=BPE_BUCKETS)
 
-        self._prefill = jax.jit(
-            lambda p, t, c: prefill(cfg, p, t, c, ctx=ctx, codec_fn=codec_fn))
-        self._decode = jax.jit(
-            lambda p, t, c, pos: decode_step(cfg, p, t, c, pos, ctx=ctx,
-                                             codec_fn=codec_fn))
+        if codec_host_fn is not None:
+            self._prefill_pre = jax.jit(
+                lambda p, t, c: prefill_to_boundary(cfg, p, t, c, ctx=ctx))
+            self._prefill_post = jax.jit(
+                lambda p, x, c: prefill_from_boundary(cfg, p, x, c, ctx=ctx))
+            self._decode_pre = jax.jit(
+                lambda p, t, c, pos: decode_to_boundary(cfg, p, t, c, pos,
+                                                        ctx=ctx))
+            self._decode_post = jax.jit(
+                lambda p, x, c, pos: decode_from_boundary(cfg, p, x, c, pos,
+                                                          ctx=ctx))
+            self._prefill = self._split_prefill
+            self._decode = self._split_decode
+        else:
+            self._prefill = jax.jit(
+                lambda p, t, c: prefill(cfg, p, t, c, ctx=ctx,
+                                        codec_fn=codec_fn))
+            self._decode = jax.jit(
+                lambda p, t, c, pos: decode_step(cfg, p, t, c, pos, ctx=ctx,
+                                                 codec_fn=codec_fn))
+
+    def _split_prefill(self, p, toks, cache):
+        """Prefill as two jitted halves with the host codec round-trip
+        run eagerly in between (``codec_host_fn`` mode)."""
+        x, pre = self._prefill_pre(p, toks, cache)
+        recon, _ = self.codec_host_fn(np.asarray(x, np.float32))
+        logits, post = self._prefill_post(p, jnp.asarray(recon), cache)
+        return logits, list(pre) + list(post)
+
+    def _split_decode(self, p, cur, cache, pos):
+        x, pre = self._decode_pre(p, cur, cache, pos)
+        recon, rate = self.codec_host_fn(np.asarray(x, np.float32))
+        logits, post = self._decode_post(p, jnp.asarray(recon), cache, pos)
+        return logits, list(pre) + list(post), \
+            {"codec_rate_bits": np.float32(rate)}
 
     # -- scheduling -----------------------------------------------------------
 
@@ -233,7 +279,8 @@ class ServeEngine:
             r.t_admit = t_admit
             active[i] = r
         cache = init_cache(self.cfg, batch=self.slots, max_seq=self.max_seq,
-                           split=self.codec_fn is not None)
+                           split=self.codec_fn is not None
+                           or self.codec_host_fn is not None)
         self._m["epochs"].inc()
         self._m["prefills"].inc()
         with span("prefill", batch=len(batch)):
@@ -271,7 +318,8 @@ class ServeEngine:
         toks = np.zeros((1, pos), np.int32)
         toks[0, pos - len(r.prompt):] = r.prompt
         one = init_cache(self.cfg, batch=1, max_seq=self.max_seq,
-                         split=self.codec_fn is not None)
+                         split=self.codec_fn is not None
+                         or self.codec_host_fn is not None)
         r.t_admit = time.perf_counter()
         self._m["refills"].inc()
         self._m["prefills"].inc()

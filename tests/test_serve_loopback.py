@@ -1,0 +1,125 @@
+"""Loopback serving regression: the split-boundary socket round-trip must
+complete on a single-CPU host.
+
+The seed's ``--transport loopback`` hookup ran the round-trip inside the
+jitted step via an ordered ``io_callback``; the client's own jax encode
+then deadlocked on 1-CPU hosts (the callback holds XLA's only dispatch
+thread while the nested encode waits for it).  The engine now splits each
+stage into two jitted halves at the boundary (``codec_host_fn``) and runs
+the round-trip eagerly in between -- these tests pin both the numerics of
+the split halves and, via a subprocess wall-clock timeout, the absence of
+the deadlock itself.
+"""
+
+import dataclasses
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.models import init_params
+
+
+@pytest.fixture()
+def tiny_cfg():
+    return dataclasses.replace(reduced(ARCHS["codeqwen1.5-7b"]),
+                               vocab_size=128, d_model=32, d_ff=64,
+                               num_heads=2, num_kv_heads=2, head_dim=16)
+
+
+class TestSplitHalves:
+    def test_host_fn_engine_matches_inline_codec_fn(self, tiny_cfg):
+        """The two-jitted-halves engine (codec_host_fn) generates the
+        same tokens as the single-program engine with an equivalent
+        in-graph codec_fn."""
+        from repro.core import CodecConfig, calibrate
+        from repro.serving import Request, ServeEngine
+
+        codec = calibrate(CodecConfig(n_levels=8, clip_mode="manual",
+                                      manual_cmin=-6.0, manual_cmax=6.0))
+        params = init_params(tiny_cfg, jax.random.PRNGKey(0))
+
+        def host_fn(x):
+            # host fake-quant round-trip: same reconstruction the
+            # in-graph codec_fn computes
+            return np.asarray(codec.apply(x), np.float32), 1.0
+
+        def mk_reqs():
+            rng = np.random.default_rng(0)
+            return [Request(prompt=rng.integers(0, 128, 5).astype(np.int32),
+                            max_new_tokens=m) for m in (3, 2, 4)]
+
+        eng_a = ServeEngine(tiny_cfg, params, slots=2, max_seq=64,
+                            codec_fn=lambda x: (codec.apply(x), 1.0))
+        eng_b = ServeEngine(tiny_cfg, params, slots=2, max_seq=64,
+                            codec_host_fn=host_fn)
+        out_a = eng_a.generate(mk_reqs())
+        out_b = eng_b.generate(mk_reqs())
+        for ra, rb in zip(out_a, out_b):
+            assert ra.out_tokens == rb.out_tokens
+        assert len(eng_b.rate_log) > 0
+
+    def test_host_fn_refill_path(self, tiny_cfg):
+        """Mid-epoch refills go through the split prefill halves too."""
+        from repro.serving import Request, ServeEngine
+
+        params = init_params(tiny_cfg, jax.random.PRNGKey(0))
+        eng = ServeEngine(tiny_cfg, params, slots=2, max_seq=64,
+                          codec_host_fn=lambda x: (x, 0.5))
+        rng = np.random.default_rng(1)
+        reqs = [Request(prompt=rng.integers(0, 128, 5).astype(np.int32),
+                        max_new_tokens=m) for m in (2, 7, 3, 1)]
+        eng.generate(reqs)
+        for r in reqs:
+            assert r.done and len(r.out_tokens) == r.max_new_tokens
+        assert eng.counters["refills"] >= 1
+
+
+_LOOPBACK_SCRIPT = """
+import dataclasses
+import jax
+import numpy as np
+from repro.configs import ARCHS, reduced
+from repro.core import CodecConfig, calibrate
+from repro.launch.serve import _loopback_codec_fn
+from repro.models import init_params
+from repro.serving import Request, ServeEngine
+
+cfg = dataclasses.replace(reduced(ARCHS["codeqwen1.5-7b"]),
+                          vocab_size=128, d_model=32, d_ff=64,
+                          num_heads=2, num_kv_heads=2, head_dim=16)
+params = init_params(cfg, jax.random.PRNGKey(0))
+codec = calibrate(CodecConfig(n_levels=4, clip_mode="manual",
+                              manual_cmin=-6.0, manual_cmax=6.0))
+host_fn, cleanup = _loopback_codec_fn(codec, chunk_elems=1 << 12)
+eng = ServeEngine(cfg, params, slots=2, max_seq=32,
+                  codec_host_fn=host_fn)
+rng = np.random.default_rng(0)
+reqs = [Request(prompt=rng.integers(0, 128, 6).astype(np.int32),
+                max_new_tokens=3) for _ in range(2)]
+eng.generate(reqs)
+assert all(r.done and len(r.out_tokens) == 3 for r in reqs)
+assert len(eng.rate_log) > 0 and all(r > 0 for r in eng.rate_log)
+cleanup()
+print("LOOPBACK_OK")
+"""
+
+
+class TestLoopbackNoDeadlock:
+    def test_loopback_roundtrip_completes_on_one_cpu(self):
+        """Full socket loopback under a hard wall-clock budget, pinned to
+        one CPU: every boundary tensor streams through the framed client/
+        server stack (the client runs its own jax encode) and the run
+        must finish -- the seed hookup deadlocked here indefinitely."""
+        env = {"JAX_PLATFORMS": "cpu",
+               "XLA_FLAGS": "--xla_force_host_platform_device_count=1"}
+        import os
+        env = {**os.environ, **env}
+        proc = subprocess.run(
+            [sys.executable, "-c", _LOOPBACK_SCRIPT],
+            capture_output=True, text=True, timeout=300, env=env)
+        assert proc.returncode == 0, proc.stderr[-2000:]
+        assert "LOOPBACK_OK" in proc.stdout

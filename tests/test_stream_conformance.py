@@ -120,3 +120,132 @@ class TestGoldenCoverage:
         rans = (GOLDEN_DIR / "v2_uniform_rans.stream.bin").read_bytes()
         hdr = parse_header(rans)
         assert rans[hdr.payload_off] == 1            # vectorized rANS
+
+
+_ENCODABLE = [c for c in CASES if not c.decode_only]
+_BACKENDS = ["jnp", "kernel_interpret"]
+
+
+def _with_backend(codec, backend):
+    import dataclasses
+    codec.config = dataclasses.replace(codec.config, backend=backend)
+    return codec
+
+
+def _host_single_shard(codec, x):
+    """The host reference for coder 4: coder-2 layout with exactly one
+    shard over the same coded-order indices."""
+    import jax.numpy as jnp
+
+    from repro.core import cabac
+
+    coded = np.asarray(codec.backend.coded_indices_device(
+        jnp.asarray(x), codec.spec(), codec.bits_per_index()))
+    return cabac._encode_rans_sharded(coded, codec.config.n_levels, 1)
+
+
+@pytest.mark.parametrize("backend", _BACKENDS)
+class TestDeviceEntropyConformance:
+    """Coder id 4 (device-resident interleaved rANS): the device stream
+    must be byte-identical to the host coder-2 single-shard stream past
+    the coder-id byte, and decode bit-exact to the committed golden
+    reconstructions -- the fused encode path may emit wire bytes on
+    device only because these hold on every shipped format."""
+
+    @pytest.mark.parametrize("case", _ENCODABLE,
+                             ids=[c.name for c in _ENCODABLE])
+    def test_payload_byte_identity_vs_host_coder2(self, case, backend):
+        import jax.numpy as jnp
+
+        x = _load(case)[0]
+        codec = _with_backend(case.make_codec(x), backend)
+        host2 = _host_single_shard(codec, x)
+        dev, hist = codec.backend.encode_fused(
+            jnp.asarray(x), codec.spec(), codec.bits_per_index(),
+            emit_wire=True)
+        assert hist is None
+        assert dev[0] == 4 and host2[0] == 2
+        assert dev[1:] == host2[1:], (
+            f"{case.name}: device rANS payload diverged from the host "
+            "single-shard reference")
+
+    @pytest.mark.parametrize("case", _ENCODABLE,
+                             ids=[c.name for c in _ENCODABLE])
+    def test_device_stream_decodes_to_golden(self, case, backend):
+        """encode(device_entropy=True) decodes bit-exact to the same
+        committed reconstruction the host stream decodes to."""
+        from golden_cases import pack_payloads
+
+        x, _, decoded = _load(case)
+        codec = _with_backend(case.make_codec(x), backend)
+        if case.streamed:
+            stream = pack_payloads(list(codec.encode_stream(
+                x, chunk_elems=case.chunk_elems,
+                coder_mode=case.coder_mode, device_entropy=True)))
+            got = codec.decode_stream(unpack_payloads(stream))
+        else:
+            stream = codec.encode(x, coder_mode=case.coder_mode,
+                                  device_entropy=True)
+            got = codec.decode(stream, shape=x.shape)
+        np.testing.assert_array_equal(np.asarray(got, np.float32), decoded)
+
+    def test_random_tile_plans_byte_identity(self, backend):
+        """Fresh (non-golden) TilePlan geometries: device payload stays
+        byte-identical to the host reference on randomly drawn 1-D and
+        2-D tilings."""
+        import jax.numpy as jnp
+
+        from repro.core import CodecConfig, calibrate
+
+        rng = np.random.default_rng(20260808)
+        for trial in range(4):
+            c = 2 * int(rng.integers(1, 4))
+            h = int(rng.integers(4, 13))
+            w = int(rng.integers(4, 13))
+            x = rng.normal(0.0, 2.0, (1, c, h, w)).astype(np.float32)
+            if trial % 2 == 0:
+                tiling = dict(spatial_block_size=int(rng.integers(2, 5)))
+            else:
+                tiling = dict(spatial_block_hw=(
+                    int(rng.integers(2, min(5, h + 1))),
+                    int(rng.integers(2, min(5, w + 1)))))
+            codec = calibrate(
+                CodecConfig(n_levels=int(rng.choice([2, 4, 8])),
+                            clip_mode="minmax",
+                            constrain_cmin_zero=False,
+                            granularity="tile", channel_axis=1,
+                            channel_group_size=2, backend=backend,
+                            **tiling), samples=x)
+            host2 = _host_single_shard(codec, x)
+            dev, _ = codec.backend.encode_fused(
+                jnp.asarray(x), codec.spec(), codec.bits_per_index(),
+                emit_wire=True)
+            assert dev[0] == 4 and dev[1:] == host2[1:], (
+                f"trial {trial}: tiling {tiling} diverged")
+
+    def test_unsupported_levels_fall_back_to_host_same_container(
+            self, backend):
+        """n_levels above the device coder's lane budget host-codes the
+        planes but ships the identical coder-4 container bytes."""
+        from repro.core import CodecConfig, calibrate
+        from repro.kernels.rans_coder import MAX_DEVICE_LEVELS, \
+            device_supported
+
+        n_levels = MAX_DEVICE_LEVELS + 1
+        rng = np.random.default_rng(7)
+        x = rng.exponential(1.0, 513).astype(np.float32)
+        assert not device_supported(x.size, n_levels)
+        codec = calibrate(CodecConfig(n_levels=n_levels,
+                                      clip_mode="minmax",
+                                      constrain_cmin_zero=False,
+                                      backend=backend), samples=x)
+        host2 = _host_single_shard(codec, x)
+        stream = codec.encode(x, device_entropy=True)
+        hdr = parse_header(stream)
+        payload = stream[hdr.payload_off:]
+        assert payload[0] == 4 and payload[1:] == host2[1:]
+        np.testing.assert_array_equal(
+            np.asarray(codec.decode(stream, shape=x.shape), np.float32),
+            np.asarray(codec.decode(
+                stream[:hdr.payload_off] + host2, shape=x.shape),
+                np.float32))
