@@ -37,6 +37,12 @@
    leaf-stage span durations of a full encode+decode roundtrip must sum
    to within 10% of its end-to-end wall time.
 
+5. **Degraded**: hardened-serving throughput (the ISSUE-9 gate) -- a
+   4-subprocess-worker Dispatcher serves concurrent sessions while one
+   worker is SIGKILLed mid-run; the retrying client must land every
+   session bit-exactly on the survivors and the monitor must restart
+   the victim.
+
 Writes ``BENCH_transport.json`` and prints CSV rows.
 
     PYTHONPATH=src python -m benchmarks.bench_transport [--quick]
@@ -510,14 +516,95 @@ def bench_obs(quick: bool) -> dict:
     }
 
 
+def bench_degraded(quick: bool) -> dict:
+    """Degraded-mode serving (the ISSUE-9 gate): aggregate throughput
+    over a 4-subprocess-worker Dispatcher with 1 worker SIGKILLed
+    mid-run.  The client carries a RetryPolicy, so sessions that were
+    in flight on the victim come back as retryable WORKER_RESTART
+    errors and replay onto the survivors; the gate is that every
+    session still reconstructs bit-exactly (vs the in-process codec
+    round trip) and the monitor restarts the victim."""
+    import asyncio
+
+    from repro.transport import Dispatcher, EdgeClient, RetryPolicy
+
+    elems = 1 << 15
+    n_sessions = 12 if quick else 32
+    rng = np.random.default_rng(4)
+    m = resnet50_layer21_model()
+    samples = m.sample(200_000, rng).astype(np.float32)
+    codec = calibrate(CodecConfig(n_levels=8, clip_mode="model"),
+                      samples=samples)
+    xs = [m.sample(elems, rng).astype(np.float32)
+          for _ in range(n_sessions)]
+    refs = [np.asarray(codec.decode_stream(codec.encode_stream(x)))
+            for x in xs]
+    warm = [m.sample(elems, rng).astype(np.float32) for _ in range(4)]
+
+    async def run():
+        async with Dispatcher(
+                workers=4,
+                worker_cmd=[sys.executable, "-m",
+                            "repro.transport.worker", "--echo"]) as disp:
+            async with EdgeClient("127.0.0.1", disp.port, codec=codec,
+                                  chunk_elems=1 << 13,
+                                  retry=RetryPolicy()) as client:
+                # one warm session per worker: the measured window is
+                # steady-state serving, not 4 cold jax imports
+                await asyncio.gather(*[client.submit(w) for w in warm])
+                t0 = time.perf_counter()
+                tasks = [asyncio.ensure_future(
+                    client.submit(x, deadline_s=120.0)) for x in xs]
+                # kill once the run is genuinely mid-flight
+                while sum(t.done() for t in tasks) < len(tasks) // 4:
+                    await asyncio.sleep(0.01)
+                disp.kill_worker(1)
+                outs = await asyncio.gather(*tasks)
+                total = time.perf_counter() - t0
+                for _ in range(200):        # monitor restarts the victim
+                    if disp.healthy_workers == 4:
+                        break
+                    await asyncio.sleep(0.05)
+                snap = disp.metrics.snapshot()
+                return outs, total, disp.healthy_workers, snap
+
+    outs, total, healthy, snap = asyncio.run(run())
+
+    def counter(name):
+        s = snap.get(name, {}).get("series", [])
+        return float(s[0]["value"]) if s else 0.0
+
+    ok = all(np.array_equal(np.asarray(res.arrays[0]).reshape(x.shape),
+                            ref.reshape(x.shape))
+             for res, x, ref in zip(outs, xs, refs))
+    retries = sum(res.retries for res in outs)
+    return {
+        "workers": 4,
+        "killed_workers": 1,
+        "sessions": n_sessions,
+        "n_elems_per_tensor": elems,
+        "total_s": total,
+        "melem_per_s": n_sessions * elems / total / 1e6,
+        "session_retries": retries,
+        "worker_restarts": counter(
+            "repro_dispatcher_worker_restarts_total"),
+        "failed_over_sessions": counter(
+            "repro_dispatcher_failed_sessions_total"),
+        "recovered_healthy_workers": healthy,
+        "all_sessions_ok": bool(ok),
+        "pool_recovered": bool(healthy == 4),
+    }
+
+
 def main() -> None:
     quick = "--quick" in sys.argv
     overlap = bench_overlap(quick)
     rate = bench_rate_control(quick)
     sessions = bench_sessions(quick)
     obs = bench_obs(quick)
+    degraded = bench_degraded(quick)
     result = {"overlap": overlap, "rate_control": rate,
-              "sessions": sessions, "obs": obs}
+              "sessions": sessions, "obs": obs, "degraded": degraded}
     with open("BENCH_transport.json", "w") as f:
         json.dump(result, f, indent=2)
     print("name,value,derived")
@@ -554,6 +641,12 @@ def main() -> None:
           f"within_10pct={obs['span_sum_within_10pct']},"
           f"e2e_s={obs['roundtrip_e2e_s']:.4f},"
           f"leaf_s={obs['leaf_span_s']:.4f}")
+    print(f"degraded_melem_per_s,{degraded['melem_per_s']:.2f},"
+          f"workers={degraded['workers']}-{degraded['killed_workers']},"
+          f"all_ok={degraded['all_sessions_ok']},"
+          f"restarts={degraded['worker_restarts']:.0f},"
+          f"retries={degraded['session_retries']},"
+          f"recovered={degraded['pool_recovered']}")
 
 
 if __name__ == "__main__":

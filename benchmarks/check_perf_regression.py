@@ -28,10 +28,14 @@ scheme; nested result dicts are addressed with dotted keys
 (``sessions.batched_speedup_64``).  The ISSUE-6 acceptance gates --
 batched==per-session byte identity, the <= ceil(K/max_batch)
 launch bound, and the >= 2x aggregate-throughput win at 64 sessions --
-are boolean, so they must hold outright on every run.  The overlap gain
-and raw Melem/s sit in the loose absolute bucket (timing-noisy on
-shared runners); ``overlap_gain_ge_1p2`` is deliberately *not* a
-boolean gate here because paced-link timing flakes on loaded CI boxes.
+are boolean, so they must hold outright on every run, as are the
+ISSUE-9 hardened-serving gates (``degraded.all_sessions_ok`` /
+``degraded.pool_recovered``: every session bit-exact with 1-of-4
+workers killed mid-run, and the pool restarted back to full strength).
+The overlap gain and raw Melem/s (including the degraded-mode
+throughput) sit in the loose absolute bucket (timing-noisy on shared
+runners); ``overlap_gain_ge_1p2`` is deliberately *not* a boolean gate
+here because paced-link timing flakes on loaded CI boxes.
 
 Failures are reported per metric (a summary line naming every regressed
 metric, then one detail line each); metrics missing from the baseline --
@@ -79,10 +83,16 @@ KINDS = {
         "ratio": (),
         "abs": ("overlap.overlap_gain", "sessions.batched_speedup_64",
                 "sessions.batched.64.melem_per_s",
-                "sessions.per_session.64.melem_per_s"),
+                "sessions.per_session.64.melem_per_s",
+                # degraded-mode (1-of-4 workers killed mid-run)
+                # throughput is retry/restart-timing noisy: loose bucket
+                "degraded.melem_per_s"),
         "bool": ("rate_control.within_10pct", "sessions.batched_identical",
                  "sessions.launch_bound_ok",
-                 "sessions.batched_speedup_ge_2x"),
+                 "sessions.batched_speedup_ge_2x",
+                 # ISSUE-9 hardened-serving gates: every session lands
+                 # bit-exactly despite the kill, and the pool recovers
+                 "degraded.all_sessions_ok", "degraded.pool_recovered"),
         "size_key": "sessions.n_elems_per_tensor",
         "baseline": "benchmarks/BENCH_transport.baseline.json",
     },

@@ -22,7 +22,9 @@ exercise the frame-level multiplexing.
 
 Run:  PYTHONPATH=src python examples/edge_cloud_demo.py [--smoke]
 (spawns the cloud half itself; or run --role cloud / --role edge in two
-terminals with a fixed --port)
+terminals with a fixed --port).  ``--tls [--secret S]`` runs the link
+over TLS with a throwaway self-signed cert and the authenticated HELLO
+handshake; split-role runs pass ``--tls-cert/--tls-key`` explicitly.
 """
 
 import argparse
@@ -48,6 +50,25 @@ def build_model(args):
     return cfg, params
 
 
+def _server_ssl(args):
+    if not args.tls_cert:
+        return None
+    import ssl
+    ctx = ssl.SSLContext(ssl.PROTOCOL_TLS_SERVER)
+    ctx.load_cert_chain(args.tls_cert, args.tls_key or args.tls_cert)
+    return ctx
+
+
+def _client_ssl(args):
+    if not args.tls_cert:
+        return None
+    import ssl
+    # self-signed deployment: the cert itself is the pinned CA
+    ctx = ssl.create_default_context(cafile=args.tls_cert)
+    ctx.check_hostname = False
+    return ctx
+
+
 def run_cloud(args):
     """Cloud half: decode streamed features, run the tail, reply."""
     from repro.models import forward_from_boundary
@@ -65,9 +86,14 @@ def run_cloud(args):
     async def main():
         server = CloudServer(tail_fn=tail_fn, echo_features=True,
                              port=args.port,
-                             metrics_port=args.metrics_port)
+                             metrics_port=args.metrics_port,
+                             ssl=_server_ssl(args), secret=args.secret)
         await server.start()
-        print(f"[cloud] serving on 127.0.0.1:{server.port}", flush=True)
+        hardened = "".join([" TLS" if args.tls_cert else "",
+                            " auth" if args.secret else ""])
+        print(f"[cloud] serving on 127.0.0.1:{server.port}"
+              f"{' (' + hardened.strip() + ')' if hardened else ''}",
+              flush=True)
         if server.metrics_port is not None:
             print(f"[cloud] metrics on "
                   f"http://127.0.0.1:{server.metrics_port}/metrics",
@@ -126,7 +152,9 @@ def run_edge(args):
 
     async def main():
         async with EdgeClient("127.0.0.1", args.port, codec=codec,
-                              chunk_elems=args.chunk_elems) as client:
+                              chunk_elems=args.chunk_elems,
+                              ssl=_client_ssl(args),
+                              secret=args.secret) as client:
             t0 = time.perf_counter()
             results = await asyncio.gather(
                 *[client.submit(f) for f in feats])
@@ -217,9 +245,39 @@ def main():
     ap.add_argument("--obs-events", metavar="PATH", default=None,
                     help="enable stage tracing; dump the JSON span log "
                          "to PATH (edge) and PATH.cloud.json (cloud)")
+    ap.add_argument("--tls", action="store_true",
+                    help="--role both only: generate a throwaway "
+                         "self-signed cert (openssl CLI) and run the "
+                         "link over TLS")
+    ap.add_argument("--tls-cert", default=None, metavar="PEM",
+                    help="serve/dial TLS with this cert (the edge pins "
+                         "it as the CA; use with split --role runs)")
+    ap.add_argument("--tls-key", default=None, metavar="PEM",
+                    help="private key for --tls-cert (default: key is "
+                         "in the cert PEM)")
+    ap.add_argument("--secret", default=None,
+                    help="shared secret for the authenticated HELLO "
+                         "handshake (both halves must agree)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes for CI")
     args = ap.parse_args()
+    if args.tls:
+        if args.role != "both":
+            ap.error("--tls generates a per-run cert, so it needs "
+                     "--role both; split roles pass --tls-cert/--tls-key")
+        if args.tls_cert is None:
+            import tempfile
+            d = tempfile.mkdtemp(prefix="edge_cloud_tls_")
+            args.tls_cert = f"{d}/cert.pem"
+            args.tls_key = f"{d}/key.pem"
+            subprocess.run(
+                ["openssl", "req", "-x509", "-newkey", "rsa:2048",
+                 "-nodes", "-keyout", args.tls_key, "-out", args.tls_cert,
+                 "-subj", "/CN=127.0.0.1",
+                 "-addext", "subjectAltName=IP:127.0.0.1", "-days", "2"],
+                check=True, capture_output=True)
+            print(f"[demo] generated self-signed cert: {args.tls_cert}",
+                  flush=True)
     if args.smoke:
         args.sessions, args.batch, args.seq, args.d_model = 2, 2, 16, 32
 
@@ -249,6 +307,12 @@ def main():
             flags.append(f"--metrics-port={args.metrics_port}")
         if args.obs_events:
             flags.append(f"--obs-events={args.obs_events}")
+        if args.tls_cert:
+            flags.append(f"--tls-cert={args.tls_cert}")
+        if args.tls_key:
+            flags.append(f"--tls-key={args.tls_key}")
+        if args.secret:
+            flags.append(f"--secret={args.secret}")
         cloud = subprocess.Popen(
             [sys.executable, __file__, "--role=cloud"] + flags)
         try:
@@ -256,8 +320,13 @@ def main():
             while time.time() < deadline:  # wait for the listener
                 import socket
                 try:
-                    socket.create_connection(("127.0.0.1", args.port),
-                                             timeout=0.2).close()
+                    probe = socket.create_connection(
+                        ("127.0.0.1", args.port), timeout=0.2)
+                    if args.tls_cert:
+                        # complete a real handshake so the cloud's log
+                        # stays free of handshake-abort noise
+                        probe = _client_ssl(args).wrap_socket(probe)
+                    probe.close()
                     break
                 except OSError:
                     if cloud.poll() is not None:

@@ -94,7 +94,11 @@ def _calibrate_warmup(cfg, params, args):
 
 
 def _loopback_codec_fn(codec, chunk_elems: int, tick_ms: float = 0.0,
-                       metrics_port: int | None = None):
+                       metrics_port: int | None = None,
+                       workers: int = 1, max_queue: int | None = None,
+                       tls_cert: str | None = None,
+                       tls_key: str | None = None,
+                       secret: str | None = None):
     """Split-boundary host hook that streams every tensor over localhost.
 
     Starts a CloudServer (echoing reconstructions) on a daemon thread and
@@ -114,26 +118,62 @@ def _loopback_codec_fn(codec, chunk_elems: int, tick_ms: float = 0.0,
     engine keeps one tensor in flight per boundary crossing, so the
     default window is 0 (drain as soon as the loop is idle) and client-
     side encode coalescing only engages for ``tick_ms > 0``.
+
+    Hardened-serving knobs (DESIGN.md, "Hardened scale-out serving"):
+    ``workers > 1`` puts a session-affine :class:`Dispatcher` over a
+    pool of in-process CloudServers (worker kill/restart tolerant; the
+    client gets a retry policy so restarts replay transparently);
+    ``max_queue`` bounds in-flight sessions (BUSY shedding);
+    ``tls_cert``/``tls_key`` wrap the edge-facing socket in TLS; and
+    ``secret`` requires the authenticated HELLO handshake.
     """
     import asyncio
+    import ssl as ssl_mod
     import threading
 
     from ..serving import TickConfig
-    from ..transport import CloudServer, SyncEdgeClient
+    from ..transport import (CloudServer, Dispatcher, RetryPolicy,
+                             SyncEdgeClient)
 
     loop = asyncio.new_event_loop()
     threading.Thread(target=loop.run_forever, name="cloud-server",
                      daemon=True).start()
     tick = TickConfig(max_wait_s=tick_ms / 1e3)
-    server = CloudServer(echo_features=True, tick=tick,
-                         metrics_port=metrics_port)
+
+    server_ssl = client_ssl = None
+    if tls_cert is not None:
+        server_ssl = ssl_mod.SSLContext(ssl_mod.PROTOCOL_TLS_SERVER)
+        server_ssl.load_cert_chain(tls_cert, tls_key or tls_cert)
+        # self-signed deployments pin the cert itself as the CA; the
+        # hostname check is skipped (loopback certs rarely carry SANs)
+        client_ssl = ssl_mod.create_default_context(cafile=tls_cert)
+        client_ssl.check_hostname = False
+
+    retry = None
+    if workers > 1:
+        server = Dispatcher(
+            workers=workers,
+            worker_factory=lambda i: CloudServer(echo_features=True,
+                                                 tick=tick),
+            max_queue=max_queue, ssl=server_ssl, secret=secret)
+        retry = RetryPolicy()      # worker restarts replay transparently
+    else:
+        server = CloudServer(echo_features=True, tick=tick,
+                             metrics_port=metrics_port,
+                             max_queue=max_queue, ssl=server_ssl,
+                             secret=secret)
     asyncio.run_coroutine_threadsafe(server.start(), loop).result()
     client = SyncEdgeClient("127.0.0.1", server.port, codec=codec,
                             chunk_elems=chunk_elems,
-                            tick=tick if tick_ms > 0 else None)
-    print(f"loopback transport: streaming split tensors via "
-          f"127.0.0.1:{server.port} (tick window {tick_ms:.1f}ms)")
-    if server.metrics_port is not None:
+                            tick=tick if tick_ms > 0 else None,
+                            ssl=client_ssl, secret=secret, retry=retry)
+    kind = (f"dispatcher x{workers} workers" if workers > 1
+            else "cloud server")
+    print(f"loopback transport: streaming split tensors via {kind} on "
+          f"127.0.0.1:{server.port} (tick window {tick_ms:.1f}ms"
+          f"{', TLS' if server_ssl is not None else ''}"
+          f"{', authenticated' if secret is not None else ''})")
+    if getattr(server, "metrics_port", None) is not None:
         print(f"metrics: http://127.0.0.1:{server.metrics_port}/metrics")
 
     def host_roundtrip(x):
@@ -142,6 +182,23 @@ def _loopback_codec_fn(codec, chunk_elems: int, tick_ms: float = 0.0,
         return recon, float(res.bits_per_elem)
 
     def cleanup():
+        if workers > 1:
+            snap = server.metrics.snapshot()
+
+            def val(name):
+                s = snap.get(name, {}).get("series", [])
+                return s[0]["value"] if s else 0
+
+            client.close()
+            asyncio.run_coroutine_threadsafe(server.close(), loop).result()
+            loop.call_soon_threadsafe(loop.stop)
+            print(f"dispatcher: "
+                  f"{val('repro_dispatcher_routed_sessions_total'):.0f} "
+                  f"sessions routed, "
+                  f"{val('repro_dispatcher_worker_restarts_total'):.0f} "
+                  f"worker restarts, "
+                  f"{val('repro_dispatcher_shed_sessions_total'):.0f} shed")
+            return
         counters = server.counters
         client.close()
         asyncio.run_coroutine_threadsafe(server.close(), loop).result()
@@ -197,6 +254,25 @@ def main():
                     help="serve Prometheus-text telemetry on this port "
                          "alongside the loopback CloudServer (0 = pick a "
                          "free one); needs --transport loopback")
+    ap.add_argument("--workers", type=int, default=1,
+                    help=">1 puts a session-affine Dispatcher over a "
+                         "pool of in-process cloud workers (heartbeats, "
+                         "crash restart, client-side retry); needs "
+                         "--transport loopback")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="admission-control bound on concurrently open "
+                         "sessions; saturated servers answer new streams "
+                         "with a retryable BUSY error")
+    ap.add_argument("--tls-cert", default=None, metavar="PEM",
+                    help="serve the loopback transport over TLS with "
+                         "this certificate (also pinned as the client "
+                         "CA -- self-signed certs work)")
+    ap.add_argument("--tls-key", default=None, metavar="PEM",
+                    help="private key for --tls-cert (default: key is "
+                         "in the cert PEM)")
+    ap.add_argument("--secret", default=None,
+                    help="require the authenticated HELLO handshake "
+                         "with this shared secret")
     ap.add_argument("--trace", metavar="PATH", default=None,
                     help="enable pipeline stage tracing and mirror the "
                          "JSON span log to PATH")
@@ -205,6 +281,20 @@ def main():
 
     if args.metrics_port is not None and args.transport != "loopback":
         ap.error("--metrics-port needs --transport loopback")
+    if args.transport != "loopback":
+        for flag, val in (("--workers", args.workers != 1),
+                          ("--max-queue", args.max_queue is not None),
+                          ("--tls-cert", args.tls_cert is not None),
+                          ("--secret", args.secret is not None)):
+            if val:
+                ap.error(f"{flag} needs --transport loopback")
+    if args.workers < 1:
+        ap.error("--workers must be >= 1")
+    if args.tls_key is not None and args.tls_cert is None:
+        ap.error("--tls-key needs --tls-cert")
+    if args.workers > 1 and args.metrics_port is not None:
+        ap.error("--metrics-port is per-worker; not supported with "
+                 "--workers > 1 (scrape the dispatcher registry instead)")
     if args.trace is not None:
         from ..obs import configure_tracing
         configure_tracing(enabled=True, event_log_path=args.trace)
@@ -229,7 +319,10 @@ def main():
         if args.transport == "loopback":
             codec_host_fn, cleanup = _loopback_codec_fn(
                 codec, args.chunk_elems, args.tick_ms,
-                metrics_port=args.metrics_port)
+                metrics_port=args.metrics_port,
+                workers=args.workers, max_queue=args.max_queue,
+                tls_cert=args.tls_cert, tls_key=args.tls_key,
+                secret=args.secret)
             codec = None
     elif args.transport == "loopback":
         ap.error("--transport loopback needs --codec-levels")

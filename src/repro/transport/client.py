@@ -13,6 +13,23 @@ benchmark measures.  With a :class:`RateController` + :class:`CodecBank`
 attached, every submit re-picks the quantizer rung against the
 bits/element budget and the link state fed back by the cloud.
 
+Hardening (see DESIGN.md, "Hardened scale-out serving"):
+
+* **Retry + reconnect**: with a :class:`RetryPolicy`, a submit that dies
+  on a *retryable* failure (connection loss, BUSY shed, worker restart)
+  reconnects with exponential backoff + jitter and replays the session
+  -- same session id, SAME codec (rate control is *not* re-consulted on
+  a replay, so the re-encoded bytes are identical) -- and the server
+  dedups replayed frames by seq, yielding a bit-exact result.  Fatal
+  errors (corrupt stream, auth) raise immediately.
+* **Deadlines**: ``submit(..., deadline_s=...)`` bounds the whole
+  attempt+retry loop; expiry raises a typed ``DEADLINE`` error, never a
+  hang.
+* **HELLO / resume / TLS**: when a shared ``secret`` or a retry policy
+  is configured, connect() performs a HELLO handshake (resume token +
+  HMAC auth proof, :func:`~repro.transport.server.hello_auth`) before
+  any tensor frame; ``ssl`` takes an ``ssl.SSLContext`` for TLS.
+
 :class:`SyncEdgeClient` runs the event loop on a background thread so
 blocking callers (the serving engine's loopback transport, scripts) get
 a plain ``submit(x) -> arrays`` call.
@@ -23,6 +40,8 @@ from __future__ import annotations
 import asyncio
 import dataclasses
 import json
+import os
+import random
 import threading
 import time
 
@@ -32,15 +51,46 @@ from ..core.codec import FeatureCodec
 from ..obs.metrics import MetricsRegistry
 from ..obs.tracing import span
 from ..serving.batcher import TickConfig, encode_tick
-from .framing import (FT_ERROR, FT_FEEDBACK, FT_METRICS, FT_RESULT,
-                      FrameReader, encode_frame, unpack_arrays)
+from .errors import E_DEADLINE, TransportError, decode_error
+from .faultinject import FaultPlan, wrap_writer
+from .framing import (FT_ERROR, FT_FEEDBACK, FT_HELLO, FT_METRICS,
+                      FT_RESULT, FrameReader, encode_frame, unpack_arrays)
 from .rate_control import CodecBank, RateController, rung_of_codec
 from .stream_codec import (DEFAULT_CHUNK_ELEMS, Feedback, payloads_to_frames,
                            tensor_to_frames)
 
+_HELLO_TIMEOUT_S = 10.0
 
-class TransportError(RuntimeError):
-    pass
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Backoff schedule for retryable submit failures.
+
+    Delay before retry *k* (0-based) is
+    ``min(base_delay_s * 2**k, max_delay_s)`` shrunk by up to ``jitter``
+    (a uniform fraction), so a fleet of clients bounced by one worker
+    restart doesn't reconnect in lockstep.
+    """
+
+    max_retries: int = 4
+    base_delay_s: float = 0.05
+    max_delay_s: float = 2.0
+    jitter: float = 0.5
+
+    def delay_s(self, attempt: int, rng: random.Random) -> float:
+        d = min(self.base_delay_s * (2.0 ** attempt), self.max_delay_s)
+        return d * (1.0 - self.jitter * rng.random())
+
+
+def _as_transport_error(e: BaseException) -> TransportError:
+    """Classify a raw client-side failure.  Connection loss is retryable
+    (reconnect + replay is exactly what the retry path is for); framing
+    errors mean the inbound stream is corrupt -- fatal."""
+    if isinstance(e, TransportError):
+        return e
+    if isinstance(e, (ConnectionError, asyncio.IncompleteReadError)):
+        return TransportError(f"connection lost: {e}", retryable=True)
+    return TransportError(str(e) or type(e).__name__, retryable=False)
 
 
 @dataclasses.dataclass
@@ -53,6 +103,7 @@ class SubmitResult:
     send_s: float                 # time spent encoding+writing frames
     total_s: float                # submit round-trip time
     feedback: Feedback | None = None
+    retries: int = 0              # attempts beyond the first
 
 
 class EdgeClient:
@@ -63,6 +114,11 @@ class EdgeClient:
                  chunk_elems: int = DEFAULT_CHUNK_ELEMS,
                  coder_mode: str = "auto",
                  tick: TickConfig | None = None,
+                 retry: RetryPolicy | None = None,
+                 secret: str | None = None,
+                 ssl=None,
+                 resume_token: str | None = None,
+                 fault_plan: FaultPlan | None = None,
                  metrics: MetricsRegistry | None = None) -> None:
         if codec is None and codec_bank is None:
             raise ValueError("need a codec or a codec_bank")
@@ -76,14 +132,31 @@ class EdgeClient:
         self.chunk_elems = chunk_elems
         self.coder_mode = coder_mode
         self.tick = tick
+        self.retry = retry
+        self.secret = secret
+        self.ssl_context = ssl
+        # the resume token identifies this client across reconnects; the
+        # server parks a token'd connection's in-flight sessions on
+        # disconnect instead of dropping them
+        self.resume_token = (resume_token if resume_token is not None
+                             else os.urandom(16).hex())
+        self._fault_plan = fault_plan
+        self._rng = random.Random()
         self._reader: asyncio.StreamReader | None = None
         self._writer: asyncio.StreamWriter | None = None
         self._write_lock = asyncio.Lock()
+        self._conn_lock = asyncio.Lock()
         self._pending: dict[int, asyncio.Future] = {}
         self._feedback: dict[int, Feedback] = {}
-        self._next_session = 0
+        # session 0 is reserved for connection-scoped control frames
+        # (HELLO, connection-level errors), so tensors start at 1
+        self._next_session = 1
         self._reader_task: asyncio.Task | None = None
-        self._dead: Exception | None = None
+        self._dead: TransportError | None = None
+        self._hello_fut: asyncio.Future | None = None
+        # per-session frame seqs the server acked in the last resume
+        # HELLO (replay skips these)
+        self._acked: dict[int, set[int]] = {}
         # encode-tick coalescing state (tick is not None):
         # (codec, tensor, session, sent-bytes future) entries await one
         # shared encode_tick launch
@@ -118,22 +191,117 @@ class EdgeClient:
         self._m_submit = m.histogram(
             "repro_client_submit_latency_seconds",
             "submit round-trip latency (encode -> RESULT)")
+        self._m_retries = m.counter(
+            "repro_client_retries_total",
+            "submit attempts retried after a retryable failure")
+        self._m_reconnects = m.counter(
+            "repro_client_reconnects_total",
+            "connections re-established after a failure")
+        self._m_resumed = m.counter(
+            "repro_client_resumed_sessions_total",
+            "sessions the server reported revived on reconnect")
+        self._m_skipped = m.counter(
+            "repro_client_replay_skipped_frames_total",
+            "replay frames skipped because the server acked their seqs")
+        self._m_deadlines = m.counter(
+            "repro_client_deadline_expired_total",
+            "submits failed by their deadline")
         if rate_controller is not None:
             rate_controller.bind_metrics(m)
 
     @property
     def encode_counters(self) -> dict:
         """Legacy dict view of the ``repro_client_*`` instruments (same
-        keys the pre-registry counters dict had)."""
+        keys the pre-registry counters dict had; hardening telemetry --
+        retries, reconnects, resumes -- is registry-only)."""
         c = {k: int(v.value()) for k, v in self._m.items()}
         c["encode_s"] = self._m_encode_s.value()
         return c
 
+    @property
+    def _wants_hello(self) -> bool:
+        return self.secret is not None or self.retry is not None
+
     async def connect(self) -> "EdgeClient":
-        self._reader, self._writer = await asyncio.open_connection(
-            self.host, self.port)
-        self._reader_task = asyncio.ensure_future(self._read_loop())
+        await self._open_connection()
         return self
+
+    async def _open_connection(self) -> None:
+        self._reader, writer = await asyncio.open_connection(
+            self.host, self.port, ssl=self.ssl_context)
+        self._writer = wrap_writer(writer, "client", self._fault_plan)
+        self._dead = None
+        self._reader_task = asyncio.ensure_future(self._read_loop())
+        if self._wants_hello:
+            await self._send_hello()
+
+    async def _send_hello(self) -> None:
+        """Resume-token + auth handshake; must complete before the first
+        tensor frame when the server requires a secret.  The ack lists
+        revived sessions and their server-seen frame seqs."""
+        from .server import hello_auth   # local: avoid import cycle cost
+        hello = {"token": self.resume_token}
+        if self.secret is not None:
+            hello["auth"] = hello_auth(self.secret, self.resume_token)
+        self._hello_fut = asyncio.get_running_loop().create_future()
+        async with self._write_lock:
+            self._writer.write(encode_frame(FT_HELLO, 0, 0,
+                                            json.dumps(hello).encode()))
+            await self._writer.drain()
+        ack = await asyncio.wait_for(self._hello_fut, _HELLO_TIMEOUT_S)
+        self._hello_fut = None
+        self._acked = {int(sid): set(seqs)
+                       for sid, seqs in ack.get("acked", {}).items()}
+        resumed = ack.get("resumed", [])
+        if resumed:
+            self._m_resumed.inc(len(resumed))
+
+    async def _ensure_connected(self) -> None:
+        """Reconnect (once) if the connection is dead; concurrent submits
+        coalesce on the lock and reuse the first success."""
+        async with self._conn_lock:
+            if (self._dead is None and self._writer is not None
+                    and not self._writer.is_closing()):
+                return
+            await self._teardown_connection()
+            try:
+                await self._open_connection()
+            except (OSError, asyncio.TimeoutError) as e:
+                self._dead = _as_transport_error(
+                    e if isinstance(e, ConnectionError)
+                    else ConnectionError(str(e) or type(e).__name__))
+                raise self._dead from e
+            self._m_reconnects.inc()
+
+    async def _settle_reader(self, timeout_s: float = 1.0) -> None:
+        """Wait briefly for the read loop to finish when the connection
+        is going down, so any final typed FT_ERROR is classified before
+        a retry decision."""
+        task = self._reader_task
+        if task is None or (self._dead is None and self._writer is not None
+                            and not self._writer.is_closing()):
+            return
+        try:
+            await asyncio.wait_for(asyncio.shield(task), timeout_s)
+        except (asyncio.TimeoutError, asyncio.CancelledError,
+                ConnectionError):
+            pass
+
+    async def _teardown_connection(self) -> None:
+        if self._reader_task is not None:
+            self._reader_task.cancel()
+            try:
+                await self._reader_task
+            except (asyncio.CancelledError, ConnectionError):
+                pass
+            self._reader_task = None
+        if self._writer is not None:
+            self._writer.close()
+            try:
+                await self._writer.wait_closed()
+            except ConnectionError:
+                pass
+            self._writer = None
 
     async def __aenter__(self) -> "EdgeClient":
         return await self.connect()
@@ -149,20 +317,7 @@ class EdgeClient:
         for *_, sent in queue:
             if not sent.done():
                 sent.set_exception(TransportError("client closed"))
-        if self._reader_task is not None:
-            self._reader_task.cancel()
-            try:
-                await self._reader_task
-            except (asyncio.CancelledError, ConnectionError):
-                pass
-            self._reader_task = None
-        if self._writer is not None:
-            self._writer.close()
-            try:
-                await self._writer.wait_closed()
-            except ConnectionError:
-                pass
-            self._writer = None
+        await self._teardown_connection()
 
     # -- receive path ---------------------------------------------------------
 
@@ -192,22 +347,39 @@ class EdgeClient:
                         for fut in waiters:
                             if not fut.done():
                                 fut.set_result(snap)
+                    elif frame.ftype == FT_HELLO:
+                        if self._hello_fut is not None \
+                                and not self._hello_fut.done():
+                            self._hello_fut.set_result(
+                                json.loads(frame.payload.decode()))
                     elif frame.ftype == FT_ERROR:
-                        raise TransportError(frame.payload.decode())
+                        err = decode_error(frame.payload)
+                        fut = self._pending.pop(frame.session, None)
+                        if fut is not None:
+                            # session-scoped failure (shed, decode error):
+                            # fail exactly that submit, tickmates live on
+                            if not fut.done():
+                                fut.set_exception(err)
+                        else:
+                            # connection-scoped (session 0 / unknown):
+                            # the whole connection is unusable
+                            raise err
         except asyncio.CancelledError:
             self._fail_pending(TransportError("client closed"))
             raise
         except Exception as e:  # framing errors, connection loss, ...
             # fail in-flight AND future submits: a dead reader must never
             # leave a submit() awaiting a result that cannot arrive
-            self._fail_pending(TransportError(str(e)))
+            self._fail_pending(_as_transport_error(e))
 
-    def _fail_pending(self, err: Exception) -> None:
+    def _fail_pending(self, err: TransportError) -> None:
         self._dead = err
         for fut in self._pending.values():
             if not fut.done():
                 fut.set_exception(err)
         self._pending.clear()
+        if self._hello_fut is not None and not self._hello_fut.done():
+            self._hello_fut.set_exception(err)
         waiters, self._metrics_waiters = self._metrics_waiters, []
         for fut in waiters:
             if not fut.done():
@@ -221,7 +393,7 @@ class EdgeClient:
         if self._writer is None:
             raise TransportError("not connected")
         if self._dead is not None:
-            raise TransportError(f"connection failed: {self._dead}")
+            raise self._dead
         fut = asyncio.get_running_loop().create_future()
         self._metrics_waiters.append(fut)
         async with self._write_lock:
@@ -287,11 +459,15 @@ class EdgeClient:
             self._m_encode_s.inc(stats.encode_s)
             for (_, _, session, sent), payloads in zip(queue, payload_lists):
                 frames = payloads_to_frames(payloads, session)
+                acked = self._acked.get(session, ())
                 try:
                     async with self._write_lock:
                         with span("socket_write", session=str(session),
                                   frames=len(frames)):
-                            for frame_bytes in frames:
+                            for seq, frame_bytes in enumerate(frames):
+                                if seq in acked:
+                                    self._m_skipped.inc()
+                                    continue
                                 self._writer.write(frame_bytes)
                             await self._writer.drain()
                 except Exception as e:              # noqa: BLE001
@@ -302,12 +478,17 @@ class EdgeClient:
                     sent.set_result(sum(len(f) for f in frames))
 
     async def submit(self, x: np.ndarray,
-                     codec: FeatureCodec | None = None) -> SubmitResult:
-        """Stream one tensor; resolves when the cloud's RESULT arrives."""
+                     codec: FeatureCodec | None = None,
+                     deadline_s: float | None = None) -> SubmitResult:
+        """Stream one tensor; resolves when the cloud's RESULT arrives.
+
+        With a :class:`RetryPolicy` attached, retryable failures
+        reconnect + replay the session (same id, same codec) until the
+        policy or ``deadline_s`` runs out.  ``deadline_s`` bounds the
+        whole call; expiry raises ``TransportError`` code ``DEADLINE``.
+        """
         if self._writer is None:
             raise TransportError("not connected")
-        if self._dead is not None:
-            raise TransportError(f"connection failed: {self._dead}")
         if codec is None:
             codec, rung = self._pick_codec()
         else:
@@ -318,21 +499,77 @@ class EdgeClient:
             rung = (self.codec_bank.rung_for(codec)
                     if self.codec_bank is not None else None) \
                 or rung_of_codec(codec)
-        n_levels = codec.config.n_levels
         session = self._next_session
         self._next_session += 1
-        fut = asyncio.get_running_loop().create_future()
-        self._pending[session] = fut
-
         x = np.asarray(x, np.float32)
         t0 = time.perf_counter()
+        deadline = (time.monotonic() + deadline_s
+                    if deadline_s is not None else None)
+        attempt = 0
+        while True:
+            try:
+                if attempt > 0 or self._dead is not None:
+                    if self.retry is None and self._dead is not None:
+                        raise self._dead
+                    await self._ensure_connected()
+                budget = (None if deadline is None
+                          else deadline - time.monotonic())
+                if budget is not None and budget <= 0:
+                    raise TransportError(
+                        f"submit deadline ({deadline_s}s) expired",
+                        code=E_DEADLINE, retryable=False)
+                return await asyncio.wait_for(
+                    self._submit_once(codec, rung, x, session, t0, attempt),
+                    budget)
+            except asyncio.TimeoutError:
+                self._pending.pop(session, None)
+                self._m_deadlines.inc()
+                raise TransportError(
+                    f"submit deadline ({deadline_s}s) expired",
+                    code=E_DEADLINE, retryable=False) from None
+            except Exception as e:                  # noqa: BLE001
+                stale = self._pending.pop(session, None)
+                if stale is not None and stale.done() \
+                        and not stale.cancelled():
+                    stale.exception()   # mark observed (no warning noise)
+                err = _as_transport_error(e)
+                if err.retryable and self.retry is not None:
+                    # a write failure can race the server's typed error
+                    # frame: let the reader drain to EOF, then prefer the
+                    # structured verdict (a fatal error must not be
+                    # laundered into a retryable connection loss)
+                    await self._settle_reader()
+                    if self._dead is not None and not self._dead.retryable:
+                        err = self._dead
+                if (self.retry is None or not err.retryable
+                        or attempt >= self.retry.max_retries):
+                    raise err from e
+                self._m_retries.inc()
+                delay = self.retry.delay_s(attempt, self._rng)
+                if deadline is not None \
+                        and time.monotonic() + delay >= deadline:
+                    self._m_deadlines.inc()
+                    raise TransportError(
+                        f"submit deadline ({deadline_s}s) expired "
+                        f"(last error: {err})",
+                        code=E_DEADLINE, retryable=False) from e
+                attempt += 1
+                await asyncio.sleep(delay)
+
+    async def _submit_once(self, codec: FeatureCodec, rung,
+                           x: np.ndarray, session: int, t0: float,
+                           attempt: int) -> SubmitResult:
+        fut = asyncio.get_running_loop().create_future()
+        self._pending[session] = fut
         if self.tick is not None:
             coded = await self._submit_tick(codec, x, session)
         else:
             coded = 0
+            acked = self._acked.get(session, ()) if attempt else ()
             gen = tensor_to_frames(codec, x, session,
                                    chunk_elems=self.chunk_elems,
                                    coder_mode=self.coder_mode)
+            seq = 0
             while True:
                 # chunk entropy-coding runs off-loop, overlapping the
                 # socket
@@ -340,6 +577,14 @@ class EdgeClient:
                 if frame_bytes is None:
                     break
                 coded += len(frame_bytes)
+                if seq in acked:
+                    # server already holds this frame from before the
+                    # reconnect: replay skips it (still costs the encode,
+                    # which keeps the byte accounting identical)
+                    self._m_skipped.inc()
+                    seq += 1
+                    continue
+                seq += 1
                 async with self._write_lock:
                     with span("socket_write", session=str(session)):
                         self._writer.write(frame_bytes)
@@ -356,10 +601,11 @@ class EdgeClient:
         if self.rate_controller is not None:
             self.rate_controller.on_tensor(rung, coded, x.size,
                                            send_seconds=send_s)
-        return SubmitResult(arrays=arrays, n_levels=n_levels,
+        return SubmitResult(arrays=arrays, n_levels=codec.config.n_levels,
                             coded_bytes=coded, n_elems=int(x.size),
                             bits_per_elem=8.0 * coded / max(x.size, 1),
-                            send_s=send_s, total_s=total_s, feedback=fb)
+                            send_s=send_s, total_s=total_s, feedback=fb,
+                            retries=attempt)
 
 
 class SyncEdgeClient:
@@ -382,8 +628,10 @@ class SyncEdgeClient:
         return asyncio.run_coroutine_threadsafe(coro, self._loop).result()
 
     def submit(self, x: np.ndarray,
-               codec: FeatureCodec | None = None) -> SubmitResult:
-        return self._run(self._client.submit(x, codec=codec))
+               codec: FeatureCodec | None = None,
+               deadline_s: float | None = None) -> SubmitResult:
+        return self._run(self._client.submit(x, codec=codec,
+                                             deadline_s=deadline_s))
 
     def fetch_cloud_metrics(self) -> dict:
         return self._run(self._client.fetch_cloud_metrics())

@@ -14,9 +14,12 @@ Everything that crosses the edge<->cloud socket is a *frame*:
 * frame types: HEADER (stream meta + self-describing codec header),
   CHUNK (one entropy-coded chunk), END (end-of-tensor marker, payload =
   ``<I`` chunk count), RESULT (cloud -> edge arrays), FEEDBACK
-  (cloud -> edge link stats for the rate controller), ERROR (utf-8 text),
-  METRICS (edge -> cloud: empty request; cloud -> edge: JSON snapshot of
-  the cloud's metrics registry -- telemetry only, never tensor bytes).
+  (cloud -> edge link stats for the rate controller), ERROR (structured
+  code + retryable flag + message, see :mod:`repro.transport.errors`;
+  legacy bare utf-8 text still parses), METRICS (edge -> cloud: empty
+  request; cloud -> edge: JSON snapshot of the cloud's metrics
+  registry -- telemetry only, never tensor bytes), HELLO (authenticated
+  session establishment + resume handshake), PING (liveness echo).
 
 :class:`FrameReader` is an incremental parser: feed it arbitrary byte
 slices (single bytes included) and iterate complete frames.  See
@@ -45,6 +48,13 @@ FT_RESULT = 4
 FT_FEEDBACK = 5
 FT_ERROR = 6
 FT_METRICS = 7
+# session establishment + resume (edge -> cloud: JSON {token, auth};
+# cloud -> edge: JSON ack {ok, resumed, acked}) -- must precede the
+# first HEADER when the server requires authentication
+FT_HELLO = 8
+# liveness probe: the receiver echoes the payload back in an FT_PING
+# frame (dispatcher <-> worker heartbeats)
+FT_PING = 9
 
 
 class FramingError(ValueError):

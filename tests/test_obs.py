@@ -301,6 +301,55 @@ class TestServerTelemetry:
         assert _series(snap,
                        "repro_server_sessions_served_total")["value"] == 1
 
+    def test_kill_paths_clear_per_session_series(self, features):
+        """PR-9 kill paths: a mid-stream disconnect of a *resumable*
+        (token'd) connection parks its sessions -- and the parked TTL
+        expiry must release the pending-chunks series and the inflight
+        accounting exactly like a plain disconnect does."""
+        import json
+
+        from repro.transport.framing import FT_HELLO
+        codec = _live_codec(features)
+        tick = TickConfig(max_wait_s=0.05, max_chunks=1 << 30)
+
+        async def run():
+            async with CloudServer(echo_features=True, tick=tick,
+                                   resume_ttl_s=0.1) as srv:
+                frames = list(tensor_to_frames(codec, features, session=1,
+                                               chunk_elems=600))
+                _, writer = await asyncio.open_connection(
+                    "127.0.0.1", srv.port)
+                writer.write(encode_frame(
+                    FT_HELLO, 0, 0,
+                    json.dumps({"token": "obs-kill"}).encode()))
+                for fb in frames[:max(2, len(frames) // 2)]:
+                    writer.write(fb)
+                await writer.drain()
+                await asyncio.sleep(0.02)
+                pending_mid = len(srv.metrics.get(
+                    "repro_server_session_pending_chunks_count").series())
+                writer.close()                 # vanish mid-tick
+                await writer.wait_closed()
+                await asyncio.sleep(0.05)
+                srv._sync_gauges()
+                parked_mid = srv.metrics.get(
+                    "repro_server_parked_sessions_count").value()
+                await asyncio.sleep(0.25)      # resume TTL expires
+                srv._sync_gauges()
+                return pending_mid, parked_mid, srv.metrics.snapshot(), \
+                    srv.load
+
+        pending_mid, parked_mid, snap, load = asyncio.run(run())
+        assert pending_mid == 1
+        assert parked_mid == 1
+        assert snap["repro_server_session_pending_chunks_count"][
+            "series"] == []
+        assert _series(snap,
+                       "repro_server_parked_sessions_count")["value"] == 0
+        assert _series(snap,
+                       "repro_server_queue_depth_count")["value"] == 0
+        assert load == 0
+
     def test_ft_metrics_frame_raw(self, features):
         # protocol level: an empty METRICS frame gets a JSON METRICS
         # frame back, no client machinery required
