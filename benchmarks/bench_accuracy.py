@@ -1,0 +1,117 @@
+"""Accuracy benchmark: the scenario matrix's paper-claim gates (ISSUE-10).
+
+Runs the pinned default mini-matrix (one scenario per activation family:
+transformer boundary, MoE expert outputs, rwkv6 state stream, rglru
+state stream) through the end-to-end accuracy harness -- real
+``forward_head`` -> codec round trip -> ``forward_from_boundary`` --
+and distills the sweep into boolean gates.  Everything here is
+deterministic (seeded params, seeded tokens, deterministic codec), so
+the gates are exact, not timing-noisy:
+
+* ``top_rung_zero``: the transformer / rwkv / rglru scenarios show ZERO
+  decisive-token degradation at the top rung (N=256) for every clip
+  mode -- the paper's "compression is task-free at ~8 bits" claim.
+* ``moe_top_rung_le_5pct``: the MoE scenario stays <= 5% at the top
+  rung.  MoE tails are discontinuous -- half-step boundary noise can
+  flip top-k expert *routing* -- so zero is not achievable there even
+  with perfect-to-half-step reconstruction; the gate bounds it instead.
+* ``rmse_ladder_monotone``: logit RMSE grows monotonically as the rung
+  ladder descends, for every scenario x clip mode (the finer-grained
+  monotone signal; top-1 agreement saturates).
+* ``empirical_beats_minmax_mid_rung``: at the middle rung, empirical
+  optimal clipping degrades no more than naive minmax -- the paper's
+  core argument for clipped quantization at low rates.
+* ``families_covered_ge_3``: the matrix spans >= 3 activation families.
+
+Writes ``BENCH_accuracy.json`` and prints CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.bench_accuracy [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.eval import load_matrix, run_matrix  # noqa: E402
+
+#: families whose tails are continuous enough for an exact-zero gate
+ZERO_FAMILIES = ("transformer-tensor", "rwkv-state", "rglru-state")
+MOE_SCENARIO = "moe-expert"
+
+
+def run(matrix_spec: str = "default", backend: str | None = None) -> dict:
+    scenarios = load_matrix(matrix_spec)
+    reports = run_matrix(scenarios, backend=backend)
+
+    top_rung_zero = True
+    moe_ok = True
+    rmse_monotone = True
+    clipping_wins = True
+    for name, rep in reports.items():
+        top = rep.scenario.rungs[0]
+        for mode in rep.scenario.clip_modes:
+            ladder = [rep.case(r, mode) for r in rep.scenario.rungs]
+            if any(a.logit_rmse > b.logit_rmse
+                   for a, b in zip(ladder, ladder[1:])):
+                rmse_monotone = False
+            if name in ZERO_FAMILIES and ladder[0].degradation != 0.0:
+                top_rung_zero = False
+            if name == MOE_SCENARIO and ladder[0].degradation > 0.05:
+                moe_ok = False
+        if len(rep.scenario.rungs) >= 3 and \
+                {"minmax", "empirical"} <= set(rep.scenario.clip_modes):
+            mid = rep.scenario.rungs[len(rep.scenario.rungs) // 2]
+            if rep.case(mid, "empirical").degradation > \
+                    rep.case(mid, "minmax").degradation:
+                clipping_wins = False
+
+    return {
+        "n_tokens": next(iter(reports.values())).n_tokens,
+        "matrix": [sc.name for sc in scenarios],
+        "top_rung_zero": top_rung_zero,
+        "moe_top_rung_le_5pct": moe_ok,
+        "rmse_ladder_monotone": rmse_monotone,
+        "empirical_beats_minmax_mid_rung": clipping_wins,
+        "families_covered_ge_3": len(reports) >= 3,
+        "scenarios": {name: rep.to_dict() for name, rep in reports.items()},
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="single-scenario smoke (transformer only; the "
+                         "family gates degrade to that scenario)")
+    ap.add_argument("--matrix", default=None,
+                    help="override the scenario matrix spec")
+    ap.add_argument("--backend", default=None,
+                    choices=("jnp", "kernel", "kernel_interpret"))
+    ap.add_argument("--out", default="BENCH_accuracy.json")
+    args = ap.parse_args()
+    spec = args.matrix or ("transformer-tensor" if args.quick else "default")
+    results = run(spec, backend=args.backend)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+
+    for name, rep in results["scenarios"].items():
+        for c in rep["cases"]:
+            print(f"accuracy,{name},{c['clip_mode']},{c['rung']},"
+                  f"bpe={c['bits_per_elem']:.3f},"
+                  f"deg={c['degradation']:.4f},"
+                  f"raw_deg={c['raw_degradation']:.4f},"
+                  f"rmse={c['logit_rmse']:.4f}")
+    print(f"gates,top_rung_zero={results['top_rung_zero']},"
+          f"moe_le_5pct={results['moe_top_rung_le_5pct']},"
+          f"rmse_monotone={results['rmse_ladder_monotone']},"
+          f"clipping_wins={results['empirical_beats_minmax_mid_rung']},"
+          f"families_ge_3={results['families_covered_ge_3']}")
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -37,6 +37,14 @@ throughput) sit in the loose absolute bucket (timing-noisy on shared
 runners); ``overlap_gain_ge_1p2`` is deliberately *not* a boolean gate
 here because paced-link timing flakes on loaded CI boxes.
 
+``--kind accuracy`` gates ``BENCH_accuracy.json`` against
+``benchmarks/BENCH_accuracy.baseline.json``.  The accuracy harness is
+deterministic end to end, so all of its gates are exact booleans: zero
+decisive-token degradation at the top rung for the continuous-tail
+families, bounded (<= 5%) for the MoE scenario (router top-k is
+discontinuous under half-step noise), a monotone logit-RMSE rung
+ladder, and empirical clipping beating minmax at the middle rung.
+
 Failures are reported per metric (a summary line naming every regressed
 metric, then one detail line each); metrics missing from the baseline --
 i.e. added by a newer bench revision -- are noted and skipped instead of
@@ -95,6 +103,20 @@ KINDS = {
                  "degraded.all_sessions_ok", "degraded.pool_recovered"),
         "size_key": "sessions.n_elems_per_tensor",
         "baseline": "benchmarks/BENCH_transport.baseline.json",
+    },
+    # ``--kind accuracy`` gates BENCH_accuracy.json (the ISSUE-10
+    # scenario-matrix bench).  The harness is fully deterministic
+    # (seeded params/tokens, deterministic codec), so every gate is an
+    # exact boolean -- there is no timing-noisy bucket here.
+    "accuracy": {
+        "ratio": (),
+        "abs": (),
+        "bool": ("top_rung_zero", "moe_top_rung_le_5pct",
+                 "rmse_ladder_monotone",
+                 "empirical_beats_minmax_mid_rung",
+                 "families_covered_ge_3"),
+        "size_key": "n_tokens",
+        "baseline": "benchmarks/BENCH_accuracy.baseline.json",
     },
 }
 

@@ -47,8 +47,13 @@ def compress_grads(cfg: GradCompressionConfig, grads, ef_state):
         std = jnp.std(gf) + 1e-12
         c = cfg.clip_sigmas * std
         deq = uniform.quantize_dequantize(gf, -c, c, cfg.n_levels)
-        new_e = gf - deq
-        return deq.astype(g.dtype), new_e
+        # the residual must be measured against what is actually summed
+        # in the reduction -- the value *after* the cast back to g.dtype.
+        # Under bf16 the cast rounds deq, and EF only preserves the
+        # convergence guarantee when cg + new_e == gf exactly (in f32).
+        cg = deq.astype(g.dtype)
+        new_e = gf - cg.astype(jnp.float32)
+        return cg, new_e
 
     flat_g, tree = jax.tree.flatten(grads)
     flat_e = tree.flatten_up_to(ef_state)

@@ -24,16 +24,28 @@ from scipy import special
 from .distributions import FeatureModel
 
 
+# floor for the Laplace scale estimate: a dead (all-zero / constant)
+# tile has b = 0, which would yield a zero clip range and a
+# divide-by-zero step size downstream.  The floor keeps c_max positive
+# and tiny, so a dead tile quantizes exactly to its constant.
+B_FLOOR = 1e-8
+
+
 def aciq_cmax(b: float, n_levels: int) -> float:
     """Eq. (13) with M = log2(n_levels) (fractional bit widths allowed)."""
+    if not np.isfinite(b) or b < 0.0:
+        raise ValueError(f"Laplace scale must be finite and >= 0, got {b}")
     m = np.log2(n_levels)
-    return float(b * special.lambertw(12.0 * 2.0 ** (2.0 * m)).real)
+    return float(max(b, B_FLOOR)
+                 * special.lambertw(12.0 * 2.0 ** (2.0 * m)).real)
 
 
 def laplace_b_from_samples(samples: np.ndarray) -> float:
-    """Laplace MLE scale: mean |x - median(x)|."""
+    """Laplace MLE scale: mean |x - median(x)|, floored at ``B_FLOOR``."""
     x = np.asarray(samples, dtype=np.float64).ravel()
-    return float(np.mean(np.abs(x - np.median(x))))
+    if x.size == 0:
+        raise ValueError("cannot estimate Laplace scale from empty samples")
+    return float(max(np.mean(np.abs(x - np.median(x))), B_FLOOR))
 
 
 def laplace_b_from_model(model: FeatureModel) -> float:

@@ -92,8 +92,14 @@ def empirical_optimal_cmax(samples: np.ndarray, n_levels: int, cmin: float = 0.0
                            grid: np.ndarray | None = None) -> float:
     """Grid-search c_max minimizing measured MSRE (the paper's 'empirical' mode)."""
     x = np.asarray(samples, dtype=np.float64)
+    if x.size == 0:
+        raise ValueError("cannot calibrate clip range from empty samples")
     if grid is None:
-        grid = np.linspace(max(cmin + 1e-3, 0.1), float(np.quantile(x, 0.9999)) * 1.5, 200)
+        lo = max(cmin + 1e-3, 0.1)
+        # a dead / near-constant tile collapses the quantile anchor; keep
+        # the grid non-degenerate so the search stays well-defined
+        hi = max(float(np.quantile(x, 0.9999)) * 1.5, lo + 1e-6)
+        grid = np.linspace(lo, hi, 200)
     errs = [empirical_e_total(x, cmin, c, n_levels) for c in grid]
     return float(grid[int(np.argmin(errs))])
 
@@ -109,6 +115,8 @@ def empirical_optimal_range(samples: np.ndarray, n_levels: int,
     are small.
     """
     x = np.asarray(samples, dtype=np.float64)
+    if x.size == 0:
+        raise ValueError("cannot calibrate clip range from empty samples")
     lo0, hi0 = float(np.min(x)), float(np.max(x))
     if hi0 - lo0 < 1e-9:
         return lo0, lo0 + 1e-6

@@ -111,6 +111,12 @@ class CodecConfig:
     # v4 header.
     spatial_block_hw: tuple[int, int] | None = None
     backend: str | None = None   # None = auto (kernel on TPU, jnp on CPU)
+    # calibration-sample budget per clip-range fit (0 = use everything).
+    # Scenario sweeps calibrate hundreds of (rung x clip-mode x tile)
+    # combinations from the same activation batch; an evenly-strided,
+    # deterministic subsample keeps the empirical grid searches O(cap)
+    # without a randomness source that would make sweeps unrepeatable.
+    calib_sample_cap: int = 0
 
 
 @dataclasses.dataclass
@@ -826,6 +832,18 @@ def _calibrate_range(cfg: CodecConfig,
                      sample_var: float | None = None):
     """One (cmin, cmax, model) from calibration data -- the scalar core
     reused per channel group in per-channel mode."""
+    if samples is not None:
+        s = np.asarray(samples)
+        if s.size == 0:
+            raise ValueError(
+                "calibration samples are empty (a tile plan that slices "
+                "to zero elements, or an empty calibration batch)")
+        if cfg.calib_sample_cap and s.size > cfg.calib_sample_cap:
+            # deterministic even-stride subsample: repeatable sweeps, no
+            # RNG, and the extremes of a sorted-ish activation layout
+            # still land in the sample
+            stride = -(-s.size // cfg.calib_sample_cap)
+            samples = s.ravel()[::stride]
     model = None
     if cfg.clip_mode == "manual":
         cmin, cmax = cfg.manual_cmin, cfg.manual_cmax
@@ -868,6 +886,13 @@ def _calibrate_range(cfg: CodecConfig,
             else float(s.min())
     else:
         raise ValueError(f"unknown clip mode {cfg.clip_mode}")
+    # NaN compares False against everything, so it would sail through the
+    # degenerate-range lift below and poison the step size -- fail loudly
+    if not (np.isfinite(cmin) and np.isfinite(cmax)):
+        raise ValueError(
+            f"non-finite clip range ({cmin}, {cmax}) from "
+            f"clip_mode={cfg.clip_mode!r}; calibration samples likely "
+            "contain NaN/Inf")
     if cmax <= cmin:
         cmax = cmin + 1e-6
     return float(cmin), float(cmax), model

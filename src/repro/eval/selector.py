@@ -1,0 +1,98 @@
+"""Auto split-point selection (arXiv:1802.03931 via the accuracy sweep).
+
+The edge wants to run as little of the network as possible; the paper's
+constraint is that compression at the boundary must not cost task
+accuracy.  :func:`select_split_point` sweeps every legal boundary tap of
+a scenario through the same accuracy harness, prices each tap's *edge*
+cost with the static HLO analyzer (``launch.hlo_analysis`` over the
+jitted ``forward_head`` program -- measured FLOPs of the compiled
+module, not a layer-count proxy), and returns the cheapest tap whose
+worst-case degradation across the scenario's codec matrix stays within
+the budget.
+
+Everything is deterministic: the harness's token batches and parameter
+init are seeded by the scenario, and HLO FLOPs are a property of the
+compiled program, so repeated selection returns the same tap.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+from .. import models
+from ..launch.hlo_analysis import analyze
+from .harness import ScenarioReport, run_scenario
+from .scenarios import Scenario
+
+__all__ = ["SplitCandidate", "SplitSelection", "head_flops",
+           "select_split_point"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitCandidate:
+    split_after: int
+    head_flops: float
+    worst_degradation: float     # max over the scenario's codec matrix
+    meets_budget: bool
+    report: ScenarioReport
+
+    def to_dict(self) -> dict[str, Any]:
+        return {"split_after": self.split_after,
+                "head_flops": self.head_flops,
+                "worst_degradation": self.worst_degradation,
+                "meets_budget": self.meets_budget}
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitSelection:
+    scenario: str
+    budget: float
+    chosen: SplitCandidate | None    # None: no tap meets the budget
+    candidates: tuple[SplitCandidate, ...]
+
+    def to_dict(self) -> dict[str, Any]:
+        return {"scenario": self.scenario, "budget": self.budget,
+                "chosen": (self.chosen.to_dict()
+                           if self.chosen is not None else None),
+                "candidates": [c.to_dict() for c in self.candidates]}
+
+
+def head_flops(sc: Scenario, split_after: int) -> float:
+    """Edge-side cost of one boundary tap: dot/conv FLOPs of the
+    compiled ``forward_head`` program (the dryrun idiom: jit -> lower ->
+    compile -> analyze the optimized HLO text)."""
+    cfg = sc.model_config()
+    params = models.init_params(cfg, jax.random.PRNGKey(sc.seed))
+    tokens = jax.numpy.zeros((sc.batch, sc.seq_len), jax.numpy.int32)
+    txt = (jax.jit(lambda p, t: models.forward_head(
+        cfg, p, t, split_after=split_after))
+        .lower(params, tokens).compile().as_text())
+    return analyze(txt, 1).flops
+
+
+def select_split_point(sc: Scenario, *, budget: float = 0.01,
+                       backend: str | None = None) -> SplitSelection:
+    """Cheapest boundary tap meeting the degradation budget.
+
+    Sweeps ``split_after`` in 1..n_periods-1, runs the scenario's full
+    codec matrix at each tap, and picks the tap with the lowest
+    edge-side FLOPs among those whose *worst* case degradation is
+    <= ``budget``.  Ties (identical FLOPs) break toward the shallower
+    tap.  Returns every candidate so callers can inspect the frontier.
+    """
+    candidates = []
+    for sa in sc.split_points:
+        report = run_scenario(sc, split_after=sa, backend=backend)
+        worst = max(c.degradation for c in report.cases)
+        candidates.append(SplitCandidate(
+            split_after=sa, head_flops=head_flops(sc, sa),
+            worst_degradation=worst, meets_budget=worst <= budget,
+            report=report))
+    eligible = [c for c in candidates if c.meets_budget]
+    chosen = (min(eligible, key=lambda c: (c.head_flops, c.split_after))
+              if eligible else None)
+    return SplitSelection(scenario=sc.name, budget=budget, chosen=chosen,
+                          candidates=tuple(candidates))

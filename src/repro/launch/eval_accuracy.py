@@ -1,0 +1,100 @@
+"""Accuracy scenario-matrix CLI: the paper's <1% claim, end to end.
+
+Runs real split inference (``models.forward_head`` -> FeatureCodec
+round trip, optionally through the loopback socket transport ->
+``models.forward_from_boundary``) over a declarative scenario matrix and
+reports task-metric degradation against the measured wire rate.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.eval_accuracy \
+        [--matrix default|all|name,name,...|file.json] \
+        [--backend jnp|kernel|kernel_interpret] \
+        [--select [--budget 0.01]] [--out report.json]
+
+``--matrix`` accepts the pinned default mini-matrix, every registered
+scenario, a comma-separated list of registry names, or a JSON file of
+scenario dicts (see ``repro.eval.scenarios.Scenario``).  ``--select``
+runs the auto split-point selector instead of a plain sweep: for each
+scenario it sweeps every legal boundary tap and reports the cheapest
+(HLO-measured head FLOPs) tap whose worst-case degradation stays within
+``--budget``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from ..eval import load_matrix, run_scenario, select_split_point
+
+
+def _print_report(rep) -> None:
+    print(f"scenario={rep.scenario.name} split_after={rep.split_after} "
+          f"n_tokens={rep.n_tokens} "
+          f"n_decisive={rep.cases[0].n_decisive} "
+          f"elapsed_s={rep.elapsed_s:.1f}")
+    for c in rep.cases:
+        print(f"  {c.clip_mode:10s} N={c.rung:5d} "
+              f"bpe={c.bits_per_elem:7.3f} deg={c.degradation:.4f} "
+              f"raw_deg={c.raw_degradation:.4f} "
+              f"logit_rmse={c.logit_rmse:.4f} bytes={c.coded_bytes}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="accuracy scenario matrix over real split inference")
+    ap.add_argument("--matrix", default="default",
+                    help="'default', 'all', comma-separated scenario "
+                         "names, or a .json scenario file")
+    ap.add_argument("--backend", default=None,
+                    choices=("jnp", "kernel", "kernel_interpret"),
+                    help="pin the quantizer backend (default: codec "
+                         "auto-detect)")
+    ap.add_argument("--split-after", type=int, default=None,
+                    help="override every scenario's boundary tap")
+    ap.add_argument("--select", action="store_true",
+                    help="run the auto split-point selector per scenario "
+                         "instead of a plain sweep")
+    ap.add_argument("--budget", type=float, default=0.01,
+                    help="degradation budget for --select (default: the "
+                         "paper's 1%%)")
+    ap.add_argument("--out", default=None,
+                    help="write the full JSON report here")
+    args = ap.parse_args(argv)
+
+    scenarios = load_matrix(args.matrix)
+    out: dict = {"matrix": [sc.name for sc in scenarios]}
+    if args.select:
+        out["budget"] = args.budget
+        out["selections"] = {}
+        for sc in scenarios:
+            sel = select_split_point(sc, budget=args.budget,
+                                     backend=args.backend)
+            out["selections"][sc.name] = sel.to_dict()
+            chosen = (f"split_after={sel.chosen.split_after} "
+                      f"(head_flops={sel.chosen.head_flops:.3g}, "
+                      f"worst_deg={sel.chosen.worst_degradation:.4f})"
+                      if sel.chosen is not None
+                      else "NONE (no tap meets the budget)")
+            print(f"scenario={sc.name} budget={args.budget}: {chosen}")
+            for c in sel.candidates:
+                print(f"  sa={c.split_after} flops={c.head_flops:.3g} "
+                      f"worst_deg={c.worst_degradation:.4f} "
+                      f"meets={c.meets_budget}")
+    else:
+        out["reports"] = {}
+        for sc in scenarios:
+            rep = run_scenario(sc, split_after=args.split_after,
+                               backend=args.backend)
+            out["reports"][sc.name] = rep.to_dict()
+            _print_report(rep)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+        print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

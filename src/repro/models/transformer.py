@@ -41,15 +41,29 @@ class Group:
     n_periods: int
 
 
-def build_groups(cfg: ModelConfig, split: bool = False) -> tuple[list[Group], int]:
+def build_groups(cfg: ModelConfig, split: bool = False,
+                 split_after: int | None = None) -> tuple[list[Group], int]:
     """Partition layers into scan groups.  Returns (groups, split_boundary)
-    where the codec applies after ``groups[:split_boundary]`` (0 = no split)."""
+    where the codec applies after ``groups[:split_boundary]`` (0 = no split).
+
+    ``split_after`` overrides ``cfg.split_after_period`` for this call:
+    the boundary lands after that many full periods.  Explicit values
+    are validated (1 <= split_after <= n_full_periods - 1) rather than
+    clamped, so a scenario sweep over split depths fails loudly on an
+    out-of-range tap instead of silently evaluating a different one."""
     n_main = cfg.n_full_periods
     groups: list[Group] = []
     boundary = 0
     if split and n_main >= 2:
-        sp = cfg.split_after_period or max(1, n_main // 4)
-        sp = min(sp, n_main - 1)
+        if split_after is not None:
+            if not 1 <= split_after <= n_main - 1:
+                raise ValueError(
+                    f"{cfg.name}: split_after={split_after} out of range "
+                    f"(need 1 <= split_after <= {n_main - 1})")
+            sp = split_after
+        else:
+            sp = cfg.split_after_period or max(1, n_main // 4)
+            sp = min(sp, n_main - 1)
         groups.append(Group(cfg.pattern, sp))
         groups.append(Group(cfg.pattern, n_main - sp))
         boundary = 1
@@ -428,12 +442,14 @@ def forward(cfg: ModelConfig, params, batch_in, *, ctx: DistContext | None = Non
 
 
 def forward_head(cfg: ModelConfig, params, batch_in, *,
-                 ctx: DistContext | None = None):
+                 ctx: DistContext | None = None,
+                 split_after: int | None = None):
     """Edge half of the split forward: embed + the groups before the
     collaborative-intelligence boundary.  Returns the raw split-layer
     activations (B, S, d) that cross the edge->cloud link (the transport
-    subsystem streams exactly this tensor)."""
-    groups, boundary = build_groups(cfg, split=True)
+    subsystem streams exactly this tensor).  ``split_after`` taps the
+    boundary after that many full periods (default: the config's)."""
+    groups, boundary = build_groups(cfg, split=True, split_after=split_after)
     if not boundary:
         raise ValueError(f"{cfg.name}: no split boundary (needs >= 2 "
                          "full periods)")
@@ -447,14 +463,16 @@ def forward_head(cfg: ModelConfig, params, batch_in, *,
 
 
 def forward_from_boundary(cfg: ModelConfig, params, x, *,
-                          ctx: DistContext | None = None):
+                          ctx: DistContext | None = None,
+                          split_after: int | None = None):
     """Cloud half: the groups after the boundary + final norm/head.
 
     ``x`` is the (possibly decompressed) split-layer tensor from
-    :func:`forward_head`; returns logits (B, S, V).  Together the two
-    halves are numerically identical to :func:`forward` with an identity
-    ``codec_fn`` -- asserted in tests/test_transport.py."""
-    groups, boundary = build_groups(cfg, split=True)
+    :func:`forward_head` (same ``split_after``); returns logits
+    (B, S, V).  Together the two halves are numerically identical to
+    :func:`forward` with an identity ``codec_fn`` -- asserted in
+    tests/test_transport.py."""
+    groups, boundary = build_groups(cfg, split=True, split_after=split_after)
     if not boundary:
         raise ValueError(f"{cfg.name}: no split boundary (needs >= 2 "
                          "full periods)")

@@ -16,7 +16,15 @@ frames to N workers speaking the ordinary frame protocol:
   exponential backoff.
 * **Admission**: with ``max_queue`` set, new sessions beyond that many
   in flight across the pool are shed with a retryable ``BUSY`` error;
-  no healthy worker at all sheds the same way.
+  no healthy worker at all sheds the same way.  With ``shed_depth``
+  set, admission additionally tracks the *decode-stage* saturation
+  signal: the workers' tick-drain queue depth (the
+  ``repro_server_queue_depth_count`` gauge, read live from in-process
+  workers and polled over FT_METRICS for subprocesses).  When the
+  pool-wide depth reaches ``shed_depth`` new sessions shed BUSY until
+  it drains back below ``shed_resume_depth`` (hysteresis, so admission
+  does not flap at the threshold).  ``max_queue`` stays as the static
+  hard cap on in-flight sessions.
 * **Resume**: the edge's HELLO is forwarded to every healthy worker and
   the acks merge, so sessions parked on any worker after an edge
   disconnect revive on reconnect, wherever they live.
@@ -62,8 +70,8 @@ _SPAWN_TIMEOUT_S = 60.0
 
 class _Worker:
     __slots__ = ("idx", "port", "healthy", "misses", "restarts", "active",
-                 "proc", "server", "hb_reader", "hb_writer", "hb_frames",
-                 "hb_seq")
+                 "depth", "proc", "server", "hb_reader", "hb_writer",
+                 "hb_frames", "hb_seq")
 
     def __init__(self, idx: int) -> None:
         self.idx = idx
@@ -72,6 +80,7 @@ class _Worker:
         self.misses = 0
         self.restarts = 0          # lifetime restarts (drives backoff)
         self.active = 0            # sessions currently routed here
+        self.depth = 0             # last observed decode-stage queue depth
         self.proc: subprocess.Popen | None = None
         self.server = None         # in-process CloudServer
         self.hb_reader = None
@@ -112,6 +121,8 @@ class Dispatcher:
                  host: str = "127.0.0.1", port: int = 0,
                  ssl=None, secret: str | None = None,
                  max_queue: int | None = None,
+                 shed_depth: int | None = None,
+                 shed_resume_depth: int | None = None,
                  hb_interval_s: float = 0.25,
                  hb_timeout_s: float = 1.0,
                  hb_misses: int = 3,
@@ -129,6 +140,16 @@ class Dispatcher:
         self.ssl_context = ssl
         self.secret = secret
         self.max_queue = max_queue
+        if shed_resume_depth is not None and shed_depth is not None \
+                and shed_resume_depth >= shed_depth:
+            raise ValueError("shed_resume_depth must be < shed_depth "
+                             "(hysteresis band)")
+        self.shed_depth = shed_depth
+        self.shed_resume_depth = (shed_resume_depth
+                                  if shed_resume_depth is not None
+                                  else (max(0, shed_depth // 2)
+                                        if shed_depth is not None else 0))
+        self._shed_latched = False
         self.hb_interval_s = hb_interval_s
         self.hb_timeout_s = hb_timeout_s
         self.hb_misses = hb_misses
@@ -164,6 +185,14 @@ class Dispatcher:
                                  "sessions currently in flight via the pool")
         self._m_healthy = m.gauge("repro_dispatcher_healthy_workers_count",
                                   "workers currently passing heartbeats")
+        self._m_depth = m.gauge(
+            "repro_dispatcher_pool_queue_depth_count",
+            "pool-wide decode-stage queue depth (sum of the workers' "
+            "tick-drain backlog; drives the dynamic shed threshold)")
+        self._m_shedding = m.gauge(
+            "repro_dispatcher_shedding_count",
+            "1 while the dynamic shed latch is engaged (depth crossed "
+            "shed_depth and has not yet drained to shed_resume_depth)")
 
     # -- lifecycle -------------------------------------------------------------
 
@@ -174,6 +203,38 @@ class Dispatcher:
     @property
     def healthy_workers(self) -> int:
         return sum(1 for w in self._workers if w.healthy)
+
+    @property
+    def pool_queue_depth(self) -> int:
+        """Pool-wide decode-stage backlog.  In-process workers are read
+        live (``CloudServer.queue_depth``); subprocess workers report the
+        value the monitor last polled over FT_METRICS."""
+        total = 0
+        for w in self._workers:
+            if not w.healthy:
+                continue
+            if w.server is not None:
+                try:
+                    w.depth = w.server.queue_depth
+                except Exception:                   # noqa: BLE001
+                    pass                            # mid-restart
+            total += w.depth
+        return total
+
+    def _depth_shedding(self) -> bool:
+        """Dynamic admission: latch BUSY when the decode stage saturates,
+        release only once it drains below the resume threshold."""
+        if self.shed_depth is None:
+            return False
+        depth = self.pool_queue_depth
+        self._m_depth.set(depth)
+        if self._shed_latched:
+            if depth <= self.shed_resume_depth:
+                self._shed_latched = False
+        elif depth >= self.shed_depth:
+            self._shed_latched = True
+        self._m_shedding.set(1 if self._shed_latched else 0)
+        return self._shed_latched
 
     def _sync_gauges(self) -> None:
         self._m_active.set(self.active_sessions)
@@ -248,6 +309,7 @@ class Dispatcher:
             w.port = int(line.split()[1])
         w.healthy = True
         w.misses = 0
+        w.depth = 0
         self._sync_gauges()
         log.info("worker %d up on port %d", w.idx, w.port)
 
@@ -302,6 +364,8 @@ class Dispatcher:
                 else:
                     if await self._ping(w):
                         w.misses = 0
+                        if w.server is None and self.shed_depth is not None:
+                            await self._probe_depth(w)
                     else:
                         w.misses += 1
                         self._m_hb_miss.inc()
@@ -362,6 +426,31 @@ class Dispatcher:
                 ConnectionError):
             self._close_hb(w)
             return False
+
+    async def _probe_depth(self, w: _Worker) -> None:
+        """Poll a subprocess worker's decode-stage queue depth over the
+        control connection (in-band FT_METRICS snapshot; in-process
+        workers are read directly and never need this).  A failed probe
+        just keeps the previous sample -- health is the ping's job."""
+        try:
+            w.hb_writer.write(encode_frame(FT_METRICS, 0, 0, b""))
+            await w.hb_writer.drain()
+
+            async def snap():
+                while True:
+                    data = await w.hb_reader.read(1 << 16)
+                    if not data:
+                        raise ConnectionError("worker closed control conn")
+                    w.hb_frames.feed(data)
+                    for f in w.hb_frames:
+                        if f.ftype == FT_METRICS:
+                            return json.loads(f.payload.decode())
+
+            payload = await asyncio.wait_for(snap(), self.hb_timeout_s)
+            w.depth = int(payload.get("counters", {}).get("queue_depth", 0))
+        except (OSError, asyncio.TimeoutError, FramingError,
+                ConnectionError, ValueError):
+            pass
 
     # -- edge connections ------------------------------------------------------
 
@@ -483,6 +572,15 @@ class Dispatcher:
                     conn, sid, E_BUSY,
                     f"pool saturated ({self.active_sessions} >= "
                     f"max_queue={self.max_queue})", retryable=True)
+                return
+            if self._depth_shedding():
+                self._m_shed.inc()
+                await self._edge_error(
+                    conn, sid, E_BUSY,
+                    f"decode stage saturated (pool queue depth "
+                    f"{int(self._m_depth.value())} >= "
+                    f"shed_depth={self.shed_depth}; admitting again "
+                    f"at <= {self.shed_resume_depth})", retryable=True)
                 return
             w = self._pick_worker()
             if w is None:

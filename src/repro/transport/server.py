@@ -260,7 +260,7 @@ class CloudServer:
     def _sync_gauges(self) -> None:
         """Pull-style sources -> gauges (run per scrape / counters read)."""
         self._m_conns.set(self.open_connections)
-        self._m_queue.set(self._batcher.pending_sessions + len(self._ready))
+        self._m_queue.set(self.queue_depth)
         self._m_parked.set(sum(
             len(p["sessions"]) + len(p["ready"])
             for p in self._parked.values()))
@@ -359,6 +359,15 @@ class CloudServer:
         """Sessions with unfinished work: streaming, awaiting the tick
         drain, or parked for resume (the admission-control signal)."""
         return self._inflight_sessions
+
+    @property
+    def queue_depth(self) -> int:
+        """Decode-stage backlog right now: sessions parked in the batcher
+        plus drained-but-unfinished ones.  This is the tick-drain depth
+        exported as ``repro_server_queue_depth_count`` -- the saturation
+        signal a front-end (``transport.dispatcher``) polls to shed
+        dynamically."""
+        return self._batcher.pending_sessions + len(self._ready)
 
     async def drain(self, timeout_s: float = 10.0) -> bool:
         """Planned shutdown, phase 1: stop admitting new sessions (they

@@ -15,6 +15,7 @@ import asyncio
 import shutil
 import ssl
 import subprocess
+import threading
 import time
 
 import numpy as np
@@ -515,6 +516,94 @@ class TestDispatcher:
         err = _run(run())
         assert err.code == terr.E_BUSY
         assert err.retryable
+
+    def test_shed_latch_hysteresis(self):
+        """The dynamic latch engages at shed_depth and releases only at
+        shed_resume_depth -- pure state machine, no sockets."""
+        disp = _pool(workers=1, shed_depth=4, shed_resume_depth=1)
+        w = disp._workers[0]
+        w.healthy = True
+        w.depth = 3
+        assert not disp._depth_shedding()
+        w.depth = 4
+        assert disp._depth_shedding()
+        w.depth = 2          # below shed_depth but above resume: latched
+        assert disp._depth_shedding()
+        w.depth = 1
+        assert not disp._depth_shedding()
+        w.depth = 3          # climbing again, under threshold: admits
+        assert not disp._depth_shedding()
+
+    def test_shed_band_validated(self):
+        with pytest.raises(ValueError, match="hysteresis"):
+            _pool(workers=1, shed_depth=2, shed_resume_depth=2)
+
+    def test_dynamic_shed_tracks_decode_saturation(self, features):
+        """ISSUE-10: a pool whose decode stage is saturated (tick drain
+        blocked in the tail while finished sessions queue behind it)
+        sheds new sessions with retryable BUSY, then admits again once
+        the backlog drains -- BUSY tracks actual saturation, not just
+        the static in-flight bound."""
+        codec = _codec(features)
+        entered = threading.Event()
+        release = threading.Event()
+
+        def slow_tail(_t):
+            entered.set()
+            release.wait(timeout=20.0)
+            return []
+
+        async def run():
+            async with Dispatcher(
+                    workers=1, shed_depth=1, shed_resume_depth=0,
+                    worker_factory=lambda i: CloudServer(
+                        echo_features=True, tick=TICK,
+                        tail_fn=slow_tail),
+                    hb_interval_s=0.1, hb_timeout_s=0.5,
+                    hb_misses=2, restart_backoff_s=0.05) as disp:
+                async with EdgeClient("127.0.0.1", disp.port,
+                                      codec=codec) as client:
+                    # s1 drains into the blocked tail ...
+                    s1 = asyncio.ensure_future(
+                        client.submit(features, deadline_s=30.0))
+                    await asyncio.to_thread(entered.wait, 10.0)
+                    # ... s2 completes its stream and queues behind the
+                    # stuck drain, pushing the tick-drain depth to 1
+                    s2 = asyncio.ensure_future(
+                        client.submit(features * 0.5, deadline_s=30.0))
+                    for _ in range(400):
+                        if disp.pool_queue_depth >= 1:
+                            break
+                        await asyncio.sleep(0.005)
+                    assert disp.pool_queue_depth >= 1
+                    # saturated: a new session sheds with typed BUSY
+                    with pytest.raises(TransportError) as ei:
+                        await client.submit(features * 0.25)
+                    assert ei.value.code == terr.E_BUSY
+                    assert ei.value.retryable
+                    # unblock the tail: the backlog drains, the latch
+                    # releases, and the pool admits again
+                    release.set()
+                    r1, r2 = await asyncio.gather(s1, s2)
+                    for _ in range(400):
+                        if not disp._depth_shedding():
+                            break
+                        await asyncio.sleep(0.005)
+                    r4 = await client.submit(features * 0.125,
+                                             deadline_s=30.0)
+                return r1, r2, r4, disp.metrics.snapshot()
+
+        r1, r2, r4, snap = _run(run(), timeout=60.0)
+        for scale, res in ((1.0, r1), (0.5, r2), (0.125, r4)):
+            np.testing.assert_array_equal(
+                res.arrays[0],
+                codec.decode_stream(codec.encode_stream(features * scale)))
+        shed = snap["repro_dispatcher_shed_sessions_total"][
+            "series"][0]["value"]
+        assert shed >= 1
+        latched = snap["repro_dispatcher_shedding_count"][
+            "series"][0]["value"]
+        assert latched == 0
 
 
 @pytest.mark.skipif(shutil.which("openssl") is None,

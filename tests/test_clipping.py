@@ -110,3 +110,75 @@ class TestACIQ:
         rng = np.random.default_rng(0)
         lap = rng.laplace(loc=3.0, scale=1.7, size=500_000)
         assert laplace_b_from_samples(lap) == pytest.approx(1.7, rel=0.01)
+
+
+class TestDegenerateCalibration:
+    """Dead-channel / constant / empty tiles must never poison the clip
+    range: b = 0 would give a zero step size, and the NaN from an empty
+    estimate compares False against every guard."""
+
+    def test_laplace_b_floored_on_dead_tile(self):
+        b = laplace_b_from_samples(np.zeros(1024))
+        assert b > 0.0
+        c = aciq_cmax(b, 8)
+        assert np.isfinite(c) and c > 0.0
+
+    def test_laplace_b_floored_on_constant_tile(self):
+        b = laplace_b_from_samples(np.full(512, 3.25))
+        assert b > 0.0 and np.isfinite(aciq_cmax(b, 256))
+
+    def test_laplace_b_empty_raises(self):
+        with pytest.raises(ValueError, match="empty"):
+            laplace_b_from_samples(np.empty(0))
+
+    def test_aciq_cmax_rejects_nonfinite_scale(self):
+        with pytest.raises(ValueError):
+            aciq_cmax(float("nan"), 8)
+        with pytest.raises(ValueError):
+            aciq_cmax(-1.0, 8)
+
+    def test_empirical_cmax_dead_tile_nondegenerate(self):
+        c = clipping.empirical_optimal_cmax(np.zeros(256), 8)
+        assert np.isfinite(c) and c > 0.0
+
+    def test_empirical_calibrators_empty_raise(self):
+        with pytest.raises(ValueError, match="empty"):
+            clipping.empirical_optimal_cmax(np.empty(0), 8)
+        with pytest.raises(ValueError, match="empty"):
+            clipping.empirical_optimal_range(np.empty(0), 8)
+
+    @pytest.mark.parametrize("clip_mode", ["aciq", "empirical", "minmax"])
+    def test_per_channel_calibrate_with_dead_channel(self, clip_mode):
+        """A dead channel inside a per-channel plan still yields a finite,
+        ordered range table and an exact round trip for the live data."""
+        import dataclasses
+
+        from repro.core import CodecConfig, calibrate
+
+        rng = np.random.default_rng(0)
+        x = np.abs(rng.normal(size=(6, 32)).astype(np.float32))
+        x[2] = 0.0  # dead channel
+        cfg = CodecConfig(n_levels=8, clip_mode=clip_mode,
+                          granularity="channel", channel_axis=0)
+        codec = calibrate(cfg, x)
+        lo = np.asarray(codec.cmin, np.float64).ravel()
+        hi = np.asarray(codec.cmax, np.float64).ravel()
+        assert np.isfinite(lo).all() and np.isfinite(hi).all()
+        assert (hi > lo).all()
+        dec = np.asarray(codec.decode(codec.encode(x)))
+        assert np.isfinite(dec).all()
+        np.testing.assert_allclose(dec[2], 0.0, atol=1e-5)
+
+    def test_calibrate_nan_samples_fail_loudly(self):
+        from repro.core import CodecConfig, calibrate
+
+        bad = np.full(64, np.nan, dtype=np.float32)
+        with pytest.raises(ValueError, match="non-finite|NaN"):
+            calibrate(CodecConfig(n_levels=8, clip_mode="minmax"), bad)
+
+    def test_calibrate_empty_samples_fail_loudly(self):
+        from repro.core import CodecConfig, calibrate
+
+        with pytest.raises(ValueError, match="empty"):
+            calibrate(CodecConfig(n_levels=8, clip_mode="aciq"),
+                      np.empty((0,), np.float32))

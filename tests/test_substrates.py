@@ -132,6 +132,27 @@ class TestGradCompression:
         cg, _, _ = compress_grads(cfg, g, ef)
         np.testing.assert_array_equal(np.asarray(cg["w"]), np.asarray(g["w"]))
 
+    def test_bf16_residual_accounts_for_cast(self):
+        """EF invariant under low-precision grads: cg + new_e == gf.
+
+        The compressed grad is cast to g.dtype before the reduction, so
+        under bf16 the residual must be measured against the *cast*
+        value -- otherwise the per-step cast rounding (up to ~2^-8
+        relative) silently leaks out of the feedback loop.
+        """
+        cfg = GradCompressionConfig(n_levels=4)
+        rng = np.random.default_rng(7)
+        g = {"w": jnp.asarray(rng.normal(size=(256,)), jnp.bfloat16)}
+        ef = init_error_feedback(g)
+        # a couple of steps so the residual buffer is non-trivial
+        for _ in range(3):
+            gf = np.asarray(g["w"], np.float32) + np.asarray(ef["w"])
+            cg, ef, _ = compress_grads(cfg, g, ef)
+            assert cg["w"].dtype == jnp.bfloat16
+            recon = (np.asarray(cg["w"], np.float32)
+                     + np.asarray(ef["w"], np.float32))
+            np.testing.assert_allclose(recon, gf, rtol=0, atol=1e-6)
+
 
 class TestServing:
     def test_engine_generates(self, tiny_cfg):
